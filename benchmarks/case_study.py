@@ -1,0 +1,219 @@
+"""Case study (paper Sec. VII-B, Tables III/IV, Figs. 15/16): a taskset of
+real JAX workloads scheduled by the device executor under each approach.
+
+Jobs (reduced-config models — real jitted device programs):
+  1  infer_hi   smollm-135m-reduced decode chunks   (highest priority)
+  2  infer_mid  olmo-1b-reduced prefill+decode
+  3  host_only  numpy host work, no device segments
+  4  train_mid  olmo-1b-reduced train steps
+  5  infer_lo   musicgen-reduced decode chunks
+  6  train_be   minitron-reduced train steps        (best-effort)
+  7  infer_be   smollm-reduced decode chunks        (best-effort)
+
+Pipeline per approach: profile segment WCETs -> admission control (the
+paper's RTA with measured epsilon) -> run for `duration` seconds -> report
+max observed response time (MORT) vs analytic WCRT.  The single-core
+container maps all host segments onto one analysed CPU (n_cpus=1) —
+conservative and faithful to the hardware."""
+from __future__ import annotations
+
+import time
+from typing import Dict, List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get
+from repro.launch.serve import InferenceEngine
+from repro.models import transformer
+from repro.optim import adamw
+from repro.sched import AdmissionController, DeviceExecutor, JobProfile, RTJob
+
+
+def _host_work(ms: float) -> None:
+    t0 = time.perf_counter()
+    x = np.random.default_rng(0).random((64, 64))
+    while (time.perf_counter() - t0) * 1e3 < ms:
+        x = x @ x * 1e-3
+
+
+class Workloads:
+    """Compiled device programs shared by all scheduling modes."""
+
+    def __init__(self):
+        self.engines = {
+            "smollm": InferenceEngine(get("smollm-135m").reduced(),
+                                      max_len=64),
+            "olmo": InferenceEngine(get("olmo-1b").reduced(), max_len=64),
+            "musicgen": InferenceEngine(get("musicgen-medium").reduced(),
+                                        max_len=64),
+        }
+        self.train_cfg = get("olmo-1b").reduced()
+        params = transformer.init_params(self.train_cfg,
+                                         jax.random.PRNGKey(0))
+        opt = adamw.init_opt_state(params)
+        self.train_state = {"params": params, "opt": opt}
+        from repro.launch.steps import build_train_step
+        self._train = jax.jit(build_train_step(self.train_cfg))
+        self.train_batch = {
+            "inputs": jnp.zeros((2, 32), jnp.int32),
+            "labels": jnp.zeros((2, 32), jnp.int32)}
+        self.warmup()
+
+    def prefill(self, engine: str, batch=2, length=16):
+        eng = self.engines[engine]
+        cfg = eng.cfg
+        if cfg.input_mode == "embeddings":
+            toks = jnp.zeros((batch, length, cfg.d_model), jnp.float32)
+        else:
+            toks = jnp.zeros((batch, length), jnp.int32)
+        return eng.prefill_batch(toks)
+
+    def decode(self, engine: str, n: int):
+        return self.engines[engine].decode_chunk(n)
+
+    def train_step(self):
+        p, o, m = self._train(self.train_state["params"],
+                              self.train_state["opt"], self.train_batch)
+        self.train_state = {"params": p, "opt": o}
+        return m
+
+    def warmup(self):
+        for name in self.engines:
+            self.prefill(name)
+            self.decode(name, 2)
+        self.train_step()
+
+
+def make_jobs(w: Workloads, ex: DeviceExecutor) -> List[RTJob]:
+    def infer_body(engine, n_decode, host_ms):
+        def body(job, it):
+            _host_work(host_ms)
+            with ex.device_segment(job):
+                ex.run(job, w.prefill, engine)
+                ex.run(job, w.decode, engine, n_decode)
+            _host_work(host_ms / 2)
+        return body
+
+    def train_body(host_ms):
+        def body(job, it):
+            _host_work(host_ms)
+            with ex.device_segment(job):
+                ex.run(job, w.train_step)
+            _host_work(host_ms / 2)
+        return body
+
+    def host_body(ms):
+        def body(job, it):
+            _host_work(ms)
+        return body
+
+    return [
+        RTJob("infer_hi", infer_body("smollm", 4, 4), period_s=0.60,
+              priority=70, n_iterations=1000),
+        RTJob("infer_mid", infer_body("olmo", 4, 6), period_s=0.90,
+              priority=69, n_iterations=1000),
+        RTJob("host_only", host_body(30), period_s=1.20, priority=68,
+              n_iterations=1000),
+        RTJob("train_mid", train_body(6), period_s=1.50, priority=67,
+              n_iterations=1000),
+        RTJob("infer_lo", infer_body("musicgen", 6, 6), period_s=2.00,
+              priority=66, n_iterations=1000),
+        RTJob("train_be", train_body(4), period_s=1.00, priority=0,
+              best_effort=True, n_iterations=1000),
+        RTJob("infer_be", infer_body("smollm", 8, 4), period_s=0.80,
+              priority=0, best_effort=True, n_iterations=1000),
+    ]
+
+
+def profile_segments(w: Workloads, reps: int = 3) -> Dict[str, dict]:
+    """Measure worst-case host/device segment times (ms) over reps."""
+    out = {}
+
+    def wc(fn, *a):
+        ts = []
+        for _ in range(reps):
+            t0 = time.perf_counter()
+            jax.block_until_ready(fn(*a))
+            ts.append((time.perf_counter() - t0) * 1e3)
+        return max(ts)
+
+    out["smollm_seg"] = wc(lambda: (w.prefill("smollm"),
+                                    w.decode("smollm", 4)))
+    out["olmo_seg"] = wc(lambda: (w.prefill("olmo"), w.decode("olmo", 4)))
+    out["musicgen_seg"] = wc(lambda: (w.prefill("musicgen"),
+                                      w.decode("musicgen", 6)))
+    out["train_seg"] = wc(w.train_step)
+    return out
+
+
+def run_case_study(duration_s: float = 8.0, modes=None) -> List[dict]:
+    w = Workloads()
+    prof = profile_segments(w)
+    margin = 1.5  # single-core wall-clock jitter allowance
+    # epsilon = admission update + the residual of an in-flight device
+    # program (program-boundary preemption, DESIGN.md §2): the longest
+    # single program in the mix bounds it
+    eps_ms = max(prof.values()) * margin + 1.0
+
+    profiles = [
+        JobProfile("infer_hi", [4, 2], [(1.0, prof["smollm_seg"] * margin)],
+                   600, 70, cpu=0),
+        JobProfile("infer_mid", [6, 3], [(1.0, prof["olmo_seg"] * margin)],
+                   900, 69, cpu=0),
+        JobProfile("host_only", [30 * margin], [], 1200, 68, cpu=0),
+        JobProfile("train_mid", [6, 3], [(1.0, prof["train_seg"] * margin)],
+                   1500, 67, cpu=0),
+        JobProfile("infer_lo", [6, 3],
+                   [(1.0, prof["musicgen_seg"] * margin)], 2000, 66, cpu=0),
+        JobProfile("train_be", [4, 2], [(1.0, prof["train_seg"] * margin)],
+                   1000, 0, cpu=0, best_effort=True),
+        JobProfile("infer_be", [4, 2],
+                   [(1.0, prof["smollm_seg"] * 2 * margin)], 800, 0,
+                   cpu=0, best_effort=True),
+    ]
+
+    rows = []
+    modes = modes or [("unmanaged", "suspend"), ("poll", "busy"),
+                      ("notify", "busy"), ("notify", "suspend")]
+    for mode, wait in modes:
+        label = {"unmanaged": "unmanaged", "poll": "kthread_busy"}.get(
+            mode, f"ioctl_{wait}")
+        wcrt = {}
+        if mode != "unmanaged":
+            ac = AdmissionController(mode=mode, wait_mode=wait, n_cpus=1,
+                                     epsilon_ms=eps_ms)
+            for p in profiles:
+                res = ac.try_admit(p)
+                if res["wcrt"]:
+                    wcrt = {k: v for k, v in res["wcrt"].items()
+                            if v is not None}
+        ex = DeviceExecutor(mode=mode, wait_mode=wait)
+        jobs = make_jobs(w, ex)
+        for j in jobs:
+            j.start(ex, stop_after_s=duration_s)
+        for j in jobs:
+            j.join(duration_s + 30)
+            j.stop()
+        ex.shutdown()
+        eps_samples = [t * 1e6 for t in ex.update_times]
+        for j in jobs:
+            rows.append({
+                "mode": label, "task": j.name, "rt": j.is_rt,
+                "mort_ms": round(j.stats.mort * 1e3, 2),
+                "wcrt_ms": round(wcrt.get(j.name, float("nan")), 2)
+                if wcrt.get(j.name) is not None else float("nan"),
+                "jobs": j.stats.completions,
+                "misses": j.stats.deadline_misses,
+            })
+        rows.append({"mode": label, "task": "_epsilon_us",
+                     "mort_ms": round(float(np.max(eps_samples)), 1)
+                     if eps_samples else 0.0,
+                     "wcrt_ms": round(float(np.median(eps_samples)), 1)
+                     if eps_samples else 0.0,
+                     "jobs": len(eps_samples), "rt": False, "misses": 0})
+        print(f"  case_study[{label}]: " + " ".join(
+            f"{r['task']}={r['mort_ms']}ms" for r in rows
+            if r["mode"] == label and r["task"] != "_epsilon_us"))
+    return rows

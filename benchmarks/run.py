@@ -1,0 +1,134 @@
+"""Benchmark orchestrator — one section per paper table/figure.
+
+  PYTHONPATH=src python -m benchmarks.run [--quick] [--only X,Y]
+
+Prints ``name,us_per_call,derived`` CSV lines (contract of the original
+scaffold) and writes full results to benchmarks/results/*.json.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))))
+
+RESULTS = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                       "results")
+
+
+def _save(name: str, rows) -> None:
+    os.makedirs(RESULTS, exist_ok=True)
+    with open(os.path.join(RESULTS, f"{name}.json"), "w") as f:
+        json.dump(rows, f, indent=1)
+
+
+def _csv(name: str, t_us: float, derived: str) -> None:
+    print(f"{name},{t_us:.1f},{derived}")
+
+
+def bench_schedulability(n: int):
+    from benchmarks import schedulability
+    t0 = time.time()
+    rows = schedulability.run(n)
+    _save("schedulability", rows)
+    per = (time.time() - t0) * 1e6 / max(len(rows) * n * 5, 1)
+    # headline: peak advantage of our best approach over the best baseline
+    best_gap = max(
+        (max(r["ioctl_busy"], r["ioctl_suspend"])
+         - max(r["mpcp"], r["fmlp+"])) for r in rows)
+    _csv("schedulability_figs7_12", per,
+         f"max_gap_vs_baselines={best_gap:.2f}")
+    return rows
+
+
+def bench_prio_and_improved(n: int):
+    from benchmarks.prio_and_improved import (fig13_gpu_priority_gain,
+                                              fig14_improved_analysis_gain)
+    t0 = time.time()
+    rows13 = fig13_gpu_priority_gain(n)
+    rows14 = fig14_improved_analysis_gain(n)
+    _save("fig13_gpu_priority", rows13)
+    _save("fig14_improved", rows14)
+    per = (time.time() - t0) * 1e6 / max((len(rows13) + len(rows14)) * n, 1)
+    gain13 = max(r["ioctl_busy+gpu_prio"] - r["ioctl_busy"] for r in rows13)
+    gain14 = max(r["ioctl_busy+improved"] - r["ioctl_busy"] for r in rows14)
+    _csv("fig13_gpu_priority_gain", per, f"max_gain={gain13:.2f}")
+    _csv("fig14_improved_gain", per, f"max_gain={gain14:.2f}")
+
+
+def bench_case_study(duration: float):
+    from benchmarks.case_study import run_case_study
+    t0 = time.time()
+    rows = run_case_study(duration_s=duration)
+    _save("case_study", rows)
+    rt = [r for r in rows if r.get("rt")]
+    ok = all(r["mort_ms"] <= r["wcrt_ms"] * 1.0 + 1e-9 for r in rt
+             if r["wcrt_ms"] == r["wcrt_ms"] and r["mode"] != "unmanaged")
+    misses = sum(r["misses"] for r in rt)
+    _csv("case_study_table4", (time.time() - t0) * 1e6 / max(len(rows), 1),
+         f"mort_within_wcrt={ok};rt_deadline_misses={misses}")
+
+
+def bench_overhead():
+    from benchmarks import overhead
+    t0 = time.time()
+    rows = overhead.run()
+    _save("overhead", rows)
+    _csv("overhead_table5", (time.time() - t0) * 1e6,
+         f"ioctl_median_us={rows[0]['median_us']}")
+
+
+def bench_roofline():
+    from benchmarks import roofline
+    path = os.path.join(RESULTS, "dryrun.json")
+    if not os.path.exists(path):
+        print("roofline: no dryrun.json yet — run repro.launch.dryrun",
+              file=sys.stderr)
+        return
+    t0 = time.time()
+    rows = roofline.load(path)
+    _save("roofline", rows)
+    single = [r for r in rows if r["mesh"] == "pod16x16"]
+    if single:
+        med = sorted(r["roofline_fraction"] for r in single)[
+            len(single) // 2]
+        picks = roofline.pick_hillclimb_cells(rows)
+        _csv("roofline_table", (time.time() - t0) * 1e6 / len(rows),
+             f"cells={len(single)};median_fraction={med:.3f};"
+             f"worst={picks['worst_roofline']['arch']}|"
+             f"{picks['worst_roofline']['shape']}")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--only", default="")
+    ap.add_argument("--n", type=int, default=0,
+                    help="tasksets per sweep point (0 = auto)")
+    args = ap.parse_args()
+    n = args.n or (40 if args.quick else 200)
+    dur = 4.0 if args.quick else 8.0
+    only = set(args.only.split(",")) if args.only else None
+
+    def want(name):
+        return only is None or name in only
+
+    print("name,us_per_call,derived")
+    if want("schedulability"):
+        bench_schedulability(n)
+    if want("prio"):
+        bench_prio_and_improved(n)
+    if want("case_study"):
+        bench_case_study(dur)
+    if want("overhead"):
+        bench_overhead()
+    if want("roofline"):
+        bench_roofline()
+
+
+if __name__ == "__main__":
+    main()

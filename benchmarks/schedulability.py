@@ -1,0 +1,115 @@
+"""Schedulability experiments (paper Figs. 7-12).
+
+For each sweep point, N random tasksets (Table II parameters) are tested
+under every approach; the acceptance ratio is reported.  Our approaches
+follow the paper's evaluation pipeline (Sec. VII-A): improved analysis
+(IOCTL) / baseline analysis (kthread), first with default RM priorities,
+then retrying with Audsley GPU-segment priorities.  The corrected analysis
+variants (see repro.core.analysis errata) are used throughout — they are
+sound against the simulator; epsilon = 1 ms for our approaches, zero
+overhead for prior work (as in the paper)."""
+from __future__ import annotations
+
+import math
+from typing import Callable, Dict, List
+
+from repro.core import (GenParams, fmlp_schedulable, generate_taskset,
+                        ioctl_busy_improved_rta, ioctl_suspend_improved_rta,
+                        kthread_busy_rta, mpcp_schedulable, schedulable)
+from repro.core.audsley import assign_gpu_priorities
+
+
+def _ours(rta) -> Callable:
+    def test(ts) -> bool:
+        if schedulable(ts, rta):
+            return True
+        return assign_gpu_priorities(ts, rta) is not None
+    return test
+
+
+METHODS: Dict[str, Callable] = {
+    "kthread_busy": _ours(kthread_busy_rta),
+    "ioctl_busy": _ours(ioctl_busy_improved_rta),
+    "ioctl_suspend": _ours(ioctl_suspend_improved_rta),
+    "mpcp": mpcp_schedulable,
+    "fmlp+": fmlp_schedulable,
+}
+
+
+def acceptance(params: GenParams, n: int, seed0: int = 0
+               ) -> Dict[str, float]:
+    wins = {m: 0 for m in METHODS}
+    for i in range(n):
+        ts = generate_taskset(seed0 + i, params)
+        ts.kthread_cpu = ts.n_cpus  # dedicated scheduler core
+        for m, fn in METHODS.items():
+            if fn(ts):
+                wins[m] += 1
+    return {m: w / n for m, w in wins.items()}
+
+
+def sweep(name: str, param_list: List[tuple], n: int) -> List[dict]:
+    rows = []
+    for label, params in param_list:
+        row = {"sweep": name, "x": label,
+               **acceptance(params, n, seed0=hash(name) % 10_000)}
+        rows.append(row)
+        print(f"  {name} x={label}: " + " ".join(
+            f"{m}={row[m]:.2f}" for m in METHODS))
+    return rows
+
+
+# NOTE: our generator + corrected (sound) analyses sit ~0.1 utilization
+# harder than the paper's dynamic range; the non-utilization sweeps pin
+# util_per_cpu to (0.30, 0.40) to show the same acceptance dynamic range
+# as the paper's figures (documented in EXPERIMENTS.md).
+BAND = (0.30, 0.40)
+
+
+def fig7_n_tasks(n: int) -> List[dict]:
+    pts = [(k, GenParams(n_tasks_total=k, util_per_cpu=BAND))
+           for k in (8, 12, 16, 20, 24)]
+    return sweep("fig7_n_tasks", pts, n)
+
+
+def fig8_n_cpus(n: int) -> List[dict]:
+    pts = [(c, GenParams(n_cpus=c, util_per_cpu=BAND))
+           for c in (2, 4, 6, 8)]
+    return sweep("fig8_n_cpus", pts, n)
+
+
+def fig9_util(n: int) -> List[dict]:
+    pts = [(u, GenParams(util_per_cpu=(u - 0.05, u + 0.05)))
+           for u in (0.25, 0.3, 0.35, 0.4, 0.45, 0.5)]
+    return sweep("fig9_util", pts, n)
+
+
+def fig10_gpu_ratio(n: int) -> List[dict]:
+    pts = [(r, GenParams(gpu_task_ratio=(r - 0.1, r + 0.1),
+                         util_per_cpu=BAND))
+           for r in (0.2, 0.4, 0.6, 0.8)]
+    return sweep("fig10_gpu_ratio", pts, n)
+
+
+def fig11_g_to_c(n: int) -> List[dict]:
+    pts = [(g, GenParams(g_to_c_ratio=(g * 0.5, g * 1.5),
+                         util_per_cpu=BAND))
+           for g in (0.2, 0.5, 1.0, 2.0, 4.0)]
+    return sweep("fig11_g_to_c", pts, n)
+
+
+def fig12_best_effort(n: int) -> List[dict]:
+    pts = [(r, GenParams(best_effort_ratio=r, util_per_cpu=(0.4, 0.5)))
+           for r in (0.0, 0.2, 0.4, 0.6)]
+    return sweep("fig12_best_effort", pts, n)
+
+
+ALL = [fig7_n_tasks, fig8_n_cpus, fig9_util, fig10_gpu_ratio, fig11_g_to_c,
+       fig12_best_effort]
+
+
+def run(n: int = 200) -> List[dict]:
+    rows = []
+    for fn in ALL:
+        rows.extend(fn(n))
+    return rows

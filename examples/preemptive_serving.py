@@ -1,0 +1,99 @@
+"""The paper's contribution end-to-end: a latency-critical inference job
+preempts a best-effort training job on the shared device, with admission
+control guaranteeing the inference job's response-time bound.
+
+  PYTHONPATH=src python examples/preemptive_serving.py
+"""
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get
+from repro.launch.serve import InferenceEngine
+from repro.launch.steps import build_train_step
+from repro.models import transformer
+from repro.optim import adamw
+from repro.sched import AdmissionController, DeviceExecutor, JobProfile, RTJob
+
+
+def main() -> None:
+    # --- workloads -----------------------------------------------------
+    infer_cfg = get("smollm-135m").reduced()
+    train_cfg = get("olmo-1b").reduced()
+    engine = InferenceEngine(infer_cfg, max_len=64)
+    params = transformer.init_params(train_cfg, jax.random.PRNGKey(0))
+    state = {"params": params, "opt": adamw.init_opt_state(params)}
+    step_fn = jax.jit(build_train_step(train_cfg))
+    batch = {"inputs": jnp.zeros((2, 32), jnp.int32),
+             "labels": jnp.zeros((2, 32), jnp.int32)}
+
+    def warm():
+        prompt = jnp.zeros((2, 8), jnp.int32)
+        engine.prefill_batch(prompt)
+        engine.decode_chunk(2)
+        p, o, _ = step_fn(state["params"], state["opt"], batch)
+
+    warm()
+
+    # --- profile + admission control ------------------------------------
+    t0 = time.perf_counter()
+    engine.prefill_batch(jnp.zeros((2, 8), jnp.int32))
+    jax.block_until_ready(engine.decode_chunk(4))
+    infer_ms = (time.perf_counter() - t0) * 1e3
+    t0 = time.perf_counter()
+    jax.block_until_ready(step_fn(state["params"], state["opt"], batch))
+    train_ms = (time.perf_counter() - t0) * 1e3
+
+    # epsilon = admission-update cost + the residual of an in-flight device
+    # program: preemption takes effect at program boundaries, so the
+    # longest single program (the train step) bounds the wait — the TPU
+    # analogue of the paper's thread-block preemption delay (DESIGN.md §2)
+    eps_ms = train_ms * 1.2 + 1.0
+    ac = AdmissionController(mode="notify", wait_mode="suspend", n_cpus=1,
+                             epsilon_ms=eps_ms)
+    res = ac.try_admit(JobProfile(
+        "infer", [2, 1], [(1.0, infer_ms * 2.0)], period_ms=1500,
+        priority=50))
+    print(f"inference admitted={res['admitted']} "
+          f"WCRT={res['wcrt'].get('infer', 0):.1f}ms "
+          f"(segment {infer_ms:.1f}ms, epsilon {eps_ms:.0f}ms)")
+    ac.try_admit(JobProfile("train", [2], [(1.0, train_ms * 1.5)],
+                            period_ms=500, priority=0, best_effort=True))
+
+    # --- run under the preemptive executor -------------------------------
+    ex = DeviceExecutor(mode="notify", wait_mode="suspend")
+
+    def infer_body(job, it):
+        with ex.device_segment(job):
+            ex.run(job, engine.prefill_batch, jnp.zeros((2, 8), jnp.int32))
+            ex.run(job, engine.decode_chunk, 4)
+
+    def train_body(job, it):
+        with ex.device_segment(job):
+            p, o, _ = ex.run(job, step_fn, state["params"], state["opt"],
+                             batch)
+            state.update(params=p, opt=o)
+
+    infer = RTJob("infer", infer_body, period_s=1.5, priority=50,
+                  n_iterations=100)
+    train = RTJob("train", train_body, period_s=0.5, priority=0,
+                  best_effort=True, n_iterations=100)
+    train.start(ex, stop_after_s=6.0)
+    infer.start(ex, stop_after_s=6.0)
+    infer.join(30)
+    train.join(30)
+    ex.shutdown()
+
+    wcrt = res["wcrt"].get("infer", float("inf"))
+    print(f"inference: {infer.stats.completions} jobs, "
+          f"MORT {infer.stats.mort * 1e3:.1f}ms vs WCRT {wcrt:.1f}ms, "
+          f"misses {infer.stats.deadline_misses}")
+    print(f"training (best-effort): {train.stats.completions} steps "
+          f"completed alongside")
+    assert infer.stats.mort * 1e3 <= wcrt + 1e-6, "WCRT bound violated!"
+    print("preemptive_serving OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,5 @@
+from .registry import ArchEntry, get, names, register
+from .shapes import SHAPES, ShapeSpec, applicable
+
+__all__ = ["ArchEntry", "get", "names", "register", "SHAPES", "ShapeSpec",
+           "applicable"]

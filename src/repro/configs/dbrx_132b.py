@@ -1,0 +1,25 @@
+"""dbrx-132b [moe]: 40L d_model=6144 48H (GQA kv=8) d_ff=10752 vocab=100352,
+MoE 16e top-4 — fine-grained. [hf:databricks/dbrx-base; unverified]
+16 experts = 16-way model axis -> pure expert parallelism (1 expert/shard)."""
+from ..models.blocks import BlockSpec, ModelConfig
+from .registry import ArchEntry, register
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="dbrx-132b", n_layers=40, d_model=6144, n_heads=48,
+        n_kv_heads=8, d_ff=10752, vocab_size=100352,
+        pattern=(BlockSpec("attn", moe=True),),
+        moe_experts=16, moe_top_k=4, fsdp=True, sharding_profile="tp")
+
+
+def reduced() -> ModelConfig:
+    return ModelConfig(
+        name="dbrx-132b-reduced", n_layers=4, d_model=64, n_heads=4,
+        n_kv_heads=2, d_ff=96, vocab_size=128,
+        pattern=(BlockSpec("attn", moe=True),),
+        moe_experts=4, moe_top_k=4, remat=False)
+
+
+register(ArchEntry("dbrx-132b", "moe", config, reduced,
+                   notes="EP: 16 experts over the 16-way model axis"))

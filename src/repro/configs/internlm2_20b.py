@@ -1,0 +1,22 @@
+"""internlm2-20b [dense]: 48L d_model=6144 48H (GQA kv=8) d_ff=16384
+vocab=92544 — GQA. [arXiv:2403.17297; hf]"""
+from ..models.blocks import BlockSpec, ModelConfig
+from .registry import ArchEntry, register
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="internlm2-20b", n_layers=48, d_model=6144, n_heads=48,
+        n_kv_heads=8, d_ff=16384, vocab_size=92544,
+        pattern=(BlockSpec("attn"),), rope_theta=1_000_000.0,
+        fsdp=True, sharding_profile="tp")
+
+
+def reduced() -> ModelConfig:
+    return ModelConfig(
+        name="internlm2-20b-reduced", n_layers=4, d_model=96, n_heads=6,
+        n_kv_heads=2, d_ff=256, vocab_size=128,
+        pattern=(BlockSpec("attn"),), remat=False)
+
+
+register(ArchEntry("internlm2-20b", "dense", config, reduced))

@@ -1,0 +1,31 @@
+"""jamba-v0.1-52b [hybrid]: 32L d_model=4096 32H (GQA kv=8) d_ff=14336
+vocab=65536, MoE 16e top-2 — Mamba+attn 1:7 interleave, MoE every other
+layer. [arXiv:2403.19887; hf]  Period-8 block: attention at position 4,
+Mamba elsewhere; MoE on odd positions."""
+from ..models.blocks import BlockSpec, ModelConfig
+from .registry import ArchEntry, register
+
+PATTERN = tuple(
+    BlockSpec("attn" if i == 4 else "mamba", moe=(i % 2 == 1))
+    for i in range(8))
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="jamba-v0.1-52b", n_layers=32, d_model=4096, n_heads=32,
+        n_kv_heads=8, d_ff=14336, vocab_size=65536, pattern=PATTERN,
+        moe_experts=16, moe_top_k=2, mamba_d_state=16, mamba_expand=2,
+        fsdp=True, sharding_profile="tp")
+
+
+def reduced() -> ModelConfig:
+    return ModelConfig(
+        name="jamba-v0.1-52b-reduced", n_layers=8, d_model=64, n_heads=4,
+        n_kv_heads=2, d_ff=128, vocab_size=128, pattern=PATTERN,
+        moe_experts=4, moe_top_k=2, mamba_d_state=8, remat=False)
+
+
+register(ArchEntry("jamba-v0.1-52b", "hybrid", config, reduced,
+                   sub_quadratic=True,
+                   notes="Mamba+attn 1:7, MoE 16e top-2; 512k KV of the 4 "
+                         "attn layers shards over the mesh"))

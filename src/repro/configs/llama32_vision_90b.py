@@ -1,0 +1,31 @@
+"""llama-3.2-vision-90b [vlm]: 100L d_model=8192 64H (GQA kv=8) d_ff=28672
+vocab=128256 — cross-attn image layers every 5th layer (20 cross + 80 self).
+[hf:meta-llama/Llama-3.2-11B-Vision; unverified]  The vision frontend is a
+STUB: input_specs supplies precomputed patch embeddings for the cross-attn
+source."""
+from ..models.blocks import BlockSpec, ModelConfig
+from .registry import ArchEntry, register
+
+PATTERN = (BlockSpec("attn"), BlockSpec("attn"), BlockSpec("attn"),
+           BlockSpec("attn"), BlockSpec("cross"))
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="llama-3.2-vision-90b", n_layers=100, d_model=8192, n_heads=64,
+        n_kv_heads=8, d_ff=28672, vocab_size=128256, pattern=PATTERN,
+        cross_source_len=1601,  # ViT-H/14 @ 560px patch tokens (stubbed)
+        rope_theta=500_000.0, fsdp=True, grad_accum=2,
+        sharding_profile="tp")
+
+
+def reduced() -> ModelConfig:
+    return ModelConfig(
+        name="llama-3.2-vision-90b-reduced", n_layers=10, d_model=64,
+        n_heads=4, n_kv_heads=2, d_ff=160, vocab_size=128, pattern=PATTERN,
+        cross_source_len=8, remat=False, sharding_profile="tp")
+
+
+register(ArchEntry("llama-3.2-vision-90b", "vlm", config, reduced,
+                   sub_quadratic=False,
+                   notes="cross-attn image layers; frontend stubbed"))

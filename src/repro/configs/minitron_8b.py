@@ -1,0 +1,24 @@
+"""minitron-8b [dense]: 32L d_model=4096 32H (GQA kv=8) d_ff=16384
+vocab=256000 — pruned nemotron. [arXiv:2407.14679; hf]  The 256k vocabulary
+makes the (sharded) embedding/unembedding the dominant memory term."""
+from ..models.blocks import BlockSpec, ModelConfig
+from .registry import ArchEntry, register
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="minitron-8b", n_layers=32, d_model=4096, n_heads=32,
+        n_kv_heads=8, d_ff=16384, vocab_size=256000,
+        pattern=(BlockSpec("attn"),), mlp_variant="relu2",
+        sharding_profile="tp")
+
+
+def reduced() -> ModelConfig:
+    return ModelConfig(
+        name="minitron-8b-reduced", n_layers=4, d_model=64, n_heads=4,
+        n_kv_heads=2, d_ff=256, vocab_size=512,
+        pattern=(BlockSpec("attn"),), mlp_variant="relu2", remat=False)
+
+
+register(ArchEntry("minitron-8b", "dense", config, reduced,
+                   notes="256k vocab stresses embedding sharding"))

@@ -1,0 +1,29 @@
+"""mixtral-8x22b [moe]: 56L d_model=6144 48H (GQA kv=8) d_ff=16384
+vocab=32768, MoE 8e top-2, SWA. [arXiv:2401.04088; hf]
+8 experts don't divide the 16-way model axis -> TP-within-expert; the
+4096-token sliding window bounds the decode cache, so long_500k runs."""
+from ..models.blocks import BlockSpec, ModelConfig
+from .registry import ArchEntry, register
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="mixtral-8x22b", n_layers=56, d_model=6144, n_heads=48,
+        n_kv_heads=8, d_ff=16384, vocab_size=32768,
+        pattern=(BlockSpec("attn", moe=True),),
+        moe_experts=8, moe_top_k=2, window=4096, fsdp=True,
+        sharding_profile="tp")
+
+
+def reduced() -> ModelConfig:
+    return ModelConfig(
+        name="mixtral-8x22b-reduced", n_layers=4, d_model=64, n_heads=4,
+        n_kv_heads=2, d_ff=128, vocab_size=128,
+        pattern=(BlockSpec("attn", moe=True),),
+        moe_experts=4, moe_top_k=2, window=8, remat=False)
+
+
+register(ArchEntry("mixtral-8x22b", "moe", config, reduced,
+                   sub_quadratic=True,
+                   notes="SWA-4096 ring cache -> long_500k applicable; "
+                         "TP-within-expert (8e vs 16-way axis)"))

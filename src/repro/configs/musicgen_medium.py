@@ -1,0 +1,27 @@
+"""musicgen-medium [audio]: 48L d_model=1536 24H (GQA kv=24) d_ff=6144
+vocab=2048 — decoder-only over EnCodec tokens. [arXiv:2306.05284; hf]
+The EnCodec frontend is a STUB: input_specs supplies precomputed frame
+embeddings (B, S, d_model); logits project onto the 2048-entry codebook.
+24 heads divide 8 but not 16 -> hybrid profile."""
+from ..models.blocks import BlockSpec, ModelConfig
+from .registry import ArchEntry, register
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="musicgen-medium", n_layers=48, d_model=1536, n_heads=24,
+        n_kv_heads=24, d_ff=6144, vocab_size=2048,
+        pattern=(BlockSpec("attn"),), input_mode="embeddings",
+        mlp_variant="gelu", sharding_profile="hybrid")
+
+
+def reduced() -> ModelConfig:
+    return ModelConfig(
+        name="musicgen-medium-reduced", n_layers=4, d_model=96, n_heads=6,
+        n_kv_heads=6, d_ff=192, vocab_size=128,
+        pattern=(BlockSpec("attn"),), input_mode="embeddings",
+        mlp_variant="gelu", remat=False, sharding_profile="hybrid")
+
+
+register(ArchEntry("musicgen-medium", "audio", config, reduced,
+                   notes="EnCodec frontend stubbed; embeddings input"))

@@ -1,0 +1,23 @@
+"""olmo-1b [dense]: 16L d_model=2048 16H (GQA kv=16) d_ff=8192 vocab=50304
+— non-parametric LayerNorm. [arXiv:2402.00838; hf]"""
+from ..models.blocks import BlockSpec, ModelConfig
+from .registry import ArchEntry, register
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="olmo-1b", n_layers=16, d_model=2048, n_heads=16,
+        n_kv_heads=16, d_ff=8192, vocab_size=50304,
+        pattern=(BlockSpec("attn"),), norm="nonparam",
+        sharding_profile="tp")
+
+
+def reduced() -> ModelConfig:
+    return ModelConfig(
+        name="olmo-1b-reduced", n_layers=4, d_model=64, n_heads=4,
+        n_kv_heads=4, d_ff=256, vocab_size=128,
+        pattern=(BlockSpec("attn"),), norm="nonparam", remat=False)
+
+
+register(ArchEntry("olmo-1b", "dense", config, reduced,
+                   notes="non-parametric LN"))

@@ -1,0 +1,48 @@
+"""--arch registry: one entry per assigned architecture.
+
+Each ``ArchEntry`` carries the FULL published config (exercised only via the
+dry-run: ShapeDtypeStruct, no allocation), a REDUCED config of the same
+family for CPU smoke tests, and metadata used by the roofline analysis
+(active-parameter count for MoE MODEL_FLOPS, sub-quadratic applicability).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict
+
+from ..models.blocks import ModelConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class ArchEntry:
+    name: str
+    family: str                    # dense | moe | hybrid | ssm | vlm | audio
+    config: Callable[[], ModelConfig]
+    reduced: Callable[[], ModelConfig]
+    sub_quadratic: bool = False    # long_500k applicability
+    notes: str = ""
+
+
+_REGISTRY: Dict[str, ArchEntry] = {}
+
+
+def register(entry: ArchEntry) -> ArchEntry:
+    _REGISTRY[entry.name] = entry
+    return entry
+
+
+def get(name: str) -> ArchEntry:
+    if name not in _REGISTRY:
+        _load_all()
+    return _REGISTRY[name]
+
+
+def names() -> list[str]:
+    _load_all()
+    return sorted(_REGISTRY)
+
+
+def _load_all() -> None:
+    from . import (dbrx_132b, internlm2_20b, jamba_v01_52b,  # noqa: F401
+                   llama32_vision_90b, minitron_8b, mixtral_8x22b,
+                   musicgen_medium, olmo_1b, rwkv6_1b6, smollm_135m)

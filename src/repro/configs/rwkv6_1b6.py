@@ -1,0 +1,25 @@
+"""rwkv6-1.6b [ssm]: 24L d_model=2048 (attn-free) d_ff=7168 vocab=65536 —
+Finch, data-dependent decay. [arXiv:2404.05892; unverified]
+O(1) decode state (per-head D x D WKV matrix) -> long_500k applicable."""
+from ..models.blocks import BlockSpec, ModelConfig
+from .registry import ArchEntry, register
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="rwkv6-1.6b", n_layers=24, d_model=2048, n_heads=32,
+        n_kv_heads=32, d_ff=7168, vocab_size=65536,
+        pattern=(BlockSpec("rwkv"),), rwkv_head_dim=64,
+        sharding_profile="tp")
+
+
+def reduced() -> ModelConfig:
+    return ModelConfig(
+        name="rwkv6-1.6b-reduced", n_layers=4, d_model=64, n_heads=4,
+        n_kv_heads=4, d_ff=128, vocab_size=128,
+        pattern=(BlockSpec("rwkv"),), rwkv_head_dim=16, remat=False)
+
+
+register(ArchEntry("rwkv6-1.6b", "ssm", config, reduced,
+                   sub_quadratic=True,
+                   notes="attn-free; wkv state (H,64,64) per layer"))

@@ -1,0 +1,33 @@
+"""Assigned input shapes (identical for every LM-family architecture).
+
+  train_4k    : seq 4096,   global batch 256   -> train_step
+  prefill_32k : seq 32768,  global batch 32    -> serve prefill
+  decode_32k  : one token, KV cache 32768, global batch 128 -> serve decode
+  long_500k   : one token, context 524288, batch 1 (sub-quadratic archs only)
+"""
+import dataclasses
+from typing import Optional
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    kind: str          # "train" | "prefill" | "decode"
+    seq_len: int
+    global_batch: int
+    sub_quadratic_only: bool = False
+
+
+SHAPES = {
+    "train_4k": ShapeSpec("train_4k", "train", 4096, 256),
+    "prefill_32k": ShapeSpec("prefill_32k", "prefill", 32768, 32),
+    "decode_32k": ShapeSpec("decode_32k", "decode", 32768, 128),
+    "long_500k": ShapeSpec("long_500k", "decode", 524288, 1,
+                           sub_quadratic_only=True),
+}
+
+
+def applicable(arch_sub_quadratic: bool, shape: ShapeSpec) -> bool:
+    """long_500k needs sub-quadratic attention (SSM/hybrid/SWA); dense
+    full-attention archs skip it (recorded in DESIGN.md)."""
+    return arch_sub_quadratic or not shape.sub_quadratic_only

@@ -1,0 +1,96 @@
+"""GPU segment priority assignment (Sec. V-C) via Audsley's OPA.
+
+If the schedulability test fails with default priorities (GPU priority ==
+CPU priority), we search for a GPU-segment priority assignment, iterating
+priority levels from lowest to highest.  Constraints from the paper:
+
+  * Only the GPU segments get new priorities; CPU scheduling is untouched.
+  * For tasks on the same CPU core the relative GPU-priority order must
+    equal the relative CPU-priority order (deadlock prevention) -- so when
+    assigning the lowest remaining GPU priority level, only the
+    lowest-CPU-priority unassigned GPU-using task of each core is eligible.
+  * During assignment, jitters use D_h instead of R_h (Sec. VI-B), which
+    makes each per-task test depend only on the *set* of higher-GPU-priority
+    tasks -- the property OPA requires.
+
+The GPU priority *values* are the sorted CPU-priority values of the GPU-using
+real-time tasks, so they remain comparable with the (unchanged) gpu_priority
+of CPU-only and best-effort tasks.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Callable, Dict, Optional
+
+from .task_model import Task, Taskset
+
+
+def _test_task(ts: Taskset, name: str, rta: Callable, **kw) -> bool:
+    R = rta(ts, use_gpu_prio=True, **kw)
+    t = next(t for t in ts.tasks if t.name == name)
+    r = R[name]
+    return r is not None and not math.isinf(r) and r <= t.deadline + 1e-9
+
+
+def _full_test(ts: Taskset, rta: Callable, **kw) -> bool:
+    R = rta(ts, use_gpu_prio=True, **kw)
+    return all(R[t.name] is not None and not math.isinf(R[t.name])
+               and R[t.name] <= t.deadline + 1e-9 for t in ts.rt_tasks)
+
+
+def assign_gpu_priorities(ts: Taskset, rta: Callable,
+                          ) -> Optional[Taskset]:
+    """Audsley assignment of GPU-segment priorities.
+
+    Returns a new Taskset with gpu_priority fields set if one is found under
+    which every real-time task passes ``rta`` (with use_gpu_prio=True), else
+    None.
+    """
+    gpu_tasks = sorted([t for t in ts.rt_tasks if t.uses_gpu],
+                       key=lambda t: t.priority)
+    if not gpu_tasks:
+        return None
+    levels = sorted(t.priority for t in gpu_tasks)  # reuse CPU prio values
+
+    # Work on copies so the input taskset is untouched.
+    pool = {t.name: dataclasses.replace(t) for t in ts.tasks}
+    work = Taskset(tasks=list(pool.values()), n_cpus=ts.n_cpus,
+                   epsilon=ts.epsilon, kthread_cpu=ts.kthread_cpu)
+    unassigned = [pool[t.name] for t in gpu_tasks]
+    # Unassigned tasks provisionally sit above every level (OPA invariant).
+    top = max(levels) + 1
+    for t in unassigned:
+        t.gpu_priority = top + t.priority  # unique, above all levels
+
+    for level in levels:  # lowest first
+        # Eligible: lowest-CPU-priority unassigned GPU task per core.
+        lowest_per_core: Dict[int, Task] = {}
+        for t in sorted(unassigned, key=lambda t: t.priority):
+            lowest_per_core.setdefault(t.cpu, t)
+        placed = None
+        for cand in sorted(lowest_per_core.values(), key=lambda t: t.priority):
+            old = cand.gpu_priority
+            cand.gpu_priority = level
+            if _test_task(work, cand.name, rta):
+                placed = cand
+                break
+            cand.gpu_priority = old
+        if placed is None:
+            return None
+        unassigned.remove(placed)
+
+    # CPU-only tasks' schedulability can also shift with GPU priorities
+    # (busy-wait chains); verify the whole set before accepting.
+    if _full_test(work, rta):
+        return work
+    return None
+
+
+def schedulable_with_assignment(ts: Taskset, rta: Callable) -> bool:
+    """The evaluation pipeline of Sec. VII-A: test with default (RM)
+    priorities first; on failure, retry with Audsley GPU priorities."""
+    from .analysis import schedulable
+    if schedulable(ts, rta):
+        return True
+    return assign_gpu_priorities(ts, rta) is not None

@@ -1,0 +1,391 @@
+"""Discrete-event simulator for CPU+GPU task scheduling (Secs. II, V, VII).
+
+Simulates a partitioned fixed-priority multi-core + one GPU platform running
+a Taskset under one of the arbitration policies:
+
+  * ``UnmanagedPolicy``    — default driver, time-sliced round-robin (Sec. II)
+  * ``SyncPolicy``         — MPCP/FMLP+-style lock-based access (Sec. III)
+  * ``KernelThreadPolicy`` — Algorithm 1 (busy-waiting only)
+  * ``IoctlPolicy``        — Algorithm 2 (busy-waiting or self-suspension)
+
+Execution semantics:
+  * Jobs are alternating pieces: cpu -> [upd] gm ge [upd] -> cpu ...
+    (``upd`` = epsilon-long runlist update, IOCTL policy only).
+  * ``cpu``/``gm``/``upd`` pieces need the job's core; ``ge`` needs the GPU.
+  * Busy-wait mode: the job occupies its core (at its priority) while its
+    GPU work is pending/running; self-suspension releases the core.
+  * ``upd`` pieces are non-preemptive kernel sections under a global
+    rt_mutex and pause the GPU while in flight.
+  * A task is a process: jobs of one task execute in order; a released job
+    is dormant until its predecessor completes (its response time still
+    counts from release).
+
+The simulator is the ground truth used to validate that analytic WCRTs
+bound the maximum observed response times (MORT <= WCRT, Table IV).
+"""
+from __future__ import annotations
+
+import itertools
+import math
+import random
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+from .ioctl import IoctlPolicy
+from .kthread import KernelThreadPolicy
+from .runlist import BasePolicy, SyncPolicy, UnmanagedPolicy
+from .task_model import Task, Taskset
+
+_TIME_EPS = 1e-9
+
+
+@dataclass
+class Piece:
+    kind: str          # cpu | gm | ge | upd
+    duration: float    # actual execution requirement (sampled)
+    remaining: float = None
+    seg: int = -1      # gpu segment index
+    which: str = ""    # upd: "begin" | "end"
+
+    def __post_init__(self):
+        if self.remaining is None:
+            self.remaining = self.duration
+
+
+class Job:
+    _uid = itertools.count()
+
+    def __init__(self, task: Task, release: float, pieces: List[Piece]):
+        self.uid = next(Job._uid)
+        self.task = task
+        self.release = release
+        self.abs_deadline = release + task.deadline
+        self.pieces = pieces
+        self.idx = 0
+        self.active = False       # predecessor finished; competing for cores
+        self.completion: Optional[float] = None
+        # policy flags
+        self.lock_wait = False    # waiting on a lock (sync / rt_mutex)
+        self.gpu_pending = False  # in task_pending (ioctl)
+        self.upd_started = False  # non-preemptive upd piece in flight
+
+    # ------------------------------------------------------------------
+    @property
+    def done(self) -> bool:
+        return self.idx >= len(self.pieces)
+
+    def current_piece(self) -> Optional[Piece]:
+        return None if self.done else self.pieces[self.idx]
+
+    def current_kind(self) -> str:
+        p = self.current_piece()
+        return p.kind if p else "done"
+
+    def wants_gpu(self) -> bool:
+        return self.active and not self.done and self.current_kind() == "ge"
+
+    def cpu_demand(self, mode: str, policy: BasePolicy) -> bool:
+        """Does this job occupy (or want) its core right now?"""
+        if not self.active or self.done:
+            return False
+        if policy.cpu_blocked(self):
+            return False
+        k = self.current_kind()
+        if k in ("cpu", "gm"):
+            return not self.lock_wait or mode == "busy"
+        if k == "upd":
+            return True  # ready to enter (or spinning on) the IOCTL
+        if k == "ge":
+            return mode == "busy"
+        if k == "upde":
+            return mode == "busy"  # busy-wait rejoins after driver release
+        return False
+
+    def cpu_progresses(self) -> bool:
+        """Whether winning the core advances the current piece."""
+        k = self.current_kind()
+        if k in ("cpu", "gm"):
+            return not self.lock_wait
+        if k == "upd":
+            return self.upd_started  # inside the kernel section
+        return False  # ge/busy-wait/upde: occupancy only
+
+
+@dataclass
+class SimResult:
+    response_times: Dict[str, List[float]]
+    mort: Dict[str, float]
+    deadline_misses: Dict[str, int]
+    n_jobs: Dict[str, int]
+    trace: List[tuple]
+
+    def max_response(self, name: str) -> float:
+        rts = self.response_times.get(name, [])
+        return max(rts) if rts else 0.0
+
+
+def build_pieces(task: Task, with_ioctl: bool, epsilon: float,
+                 frac: float = 1.0) -> List[Piece]:
+    """Alternate CPU and GPU segments; sample actual durations at
+    best + frac * (wcet - best)."""
+    def dur(w, b):
+        return b + frac * (w - b)
+
+    pieces: List[Piece] = []
+    nc, ng = task.eta_c, task.eta_g
+    for j in range(max(nc, ng)):
+        if j < nc:
+            pieces.append(Piece("cpu", dur(task.cpu_segments[j],
+                                           task.cpu_segments_best[j])))
+        if j < ng:
+            g = task.gpu_segments[j]
+            # IOCTL: the begin() update admits the TSG when *pure* GPU work
+            # starts: G^m (async launch/driver work) is CPU-side and
+            # co-schedules with other tasks' GPU execution, matching Lemma 3
+            # where remote interference is G_h^{e*} (not G_h^m + G_h^{e*}).
+            # The end() update runs in driver completion context ("upde"):
+            # it needs no CPU core, so the runlist is released promptly
+            # after the kernel finishes (the promptness assumption behind
+            # the G^{e*} terms) without blocking CPU-only tasks.
+            pieces.append(Piece("gm", dur(g.misc, g.misc_best), seg=j))
+            if with_ioctl:
+                pieces.append(Piece("upd", epsilon, seg=j, which="begin"))
+            pieces.append(Piece("ge", dur(g.exec, g.exec_best), seg=j))
+            if with_ioctl:
+                pieces.append(Piece("upde", epsilon, seg=j, which="end"))
+    return pieces
+
+
+class Simulator:
+    def __init__(self, ts: Taskset, policy: BasePolicy, mode: str = "busy",
+                 horizon: float = 3000.0, exec_frac: float = 1.0,
+                 offsets: Optional[Dict[str, float]] = None,
+                 seed: int = 0, trace: bool = False):
+        if isinstance(policy, KernelThreadPolicy) and mode != "busy":
+            raise ValueError("kernel-thread approach requires busy-waiting "
+                             "(self-suspension breaks state detection, Sec. V-A)")
+        self.ts = ts
+        self.policy = policy
+        self.mode = mode
+        self.horizon = horizon
+        self.exec_frac = exec_frac
+        self.offsets = offsets or {}
+        self.rng = random.Random(seed)
+        self.keep_trace = trace
+        policy.attach(self)
+
+        self.t = 0.0
+        self.jobs: List[Job] = []          # in-flight (released, not done)
+        self.queues: Dict[str, List[Job]] = {t.name: [] for t in ts.tasks}
+        self.next_release: Dict[str, float] = {
+            t.name: self.offsets.get(t.name, 0.0) for t in ts.tasks}
+        self.result = SimResult({t.name: [] for t in ts.tasks},
+                                {}, {t.name: 0 for t in ts.tasks},
+                                {t.name: 0 for t in ts.tasks}, [])
+
+    # ------------------------------------------------------------------
+    def active_jobs(self) -> List[Job]:
+        return [j for j in self.jobs if j.active and not j.done]
+
+    def _trace(self, *ev) -> None:
+        if self.keep_trace:
+            self.result.trace.append((round(self.t, 6),) + ev)
+
+    # ------------------------------------------------------------------
+    def _release(self, task: Task) -> None:
+        pieces = build_pieces(task, self.policy.needs_ioctl_pieces,
+                              self.ts.epsilon, self.exec_frac)
+        job = Job(task, self.t, pieces)
+        self.jobs.append(job)
+        self.queues[task.name].append(job)
+        self.result.n_jobs[task.name] += 1
+        self._trace("release", task.name)
+        if self.queues[task.name][0] is job:
+            self._activate(job)
+
+    def _activate(self, job: Job) -> None:
+        job.active = True
+        self._trace("activate", job.task.name)
+        self.policy.on_job_release(job)
+        self._enter_piece(job)
+
+    def _enter_piece(self, job: Job) -> None:
+        """Hooks on entering the current piece (may be zero-length)."""
+        p = job.current_piece()
+        if p is None:
+            self._complete_job(job)
+            return
+        if p.kind == "gm" and not self.policy.needs_ioctl_pieces:
+            # segment boundary for lock-based / kthread policies
+            self.policy.on_segment_begin(job)
+        if p.kind not in ("upd", "upde") and p.remaining <= _TIME_EPS:
+            self._complete_piece(job)
+
+    def _complete_piece(self, job: Job) -> None:
+        p = job.current_piece()
+        self._trace("piece_done", job.task.name, p.kind, p.seg)
+        job.idx += 1
+        if p.kind in ("upd", "upde"):
+            job.upd_started = False
+            self.policy.on_update_done(job, p.which)
+        elif p.kind == "ge":
+            self.policy.on_ge_complete(job)
+        self._enter_piece(job)
+
+
+    def _complete_job(self, job: Job) -> None:
+        job.completion = self.t
+        rt = self.t - job.release
+        res = self.result
+        res.response_times[job.task.name].append(rt)
+        if self.t > job.abs_deadline + _TIME_EPS and job.task.is_rt:
+            res.deadline_misses[job.task.name] += 1
+        self._trace("complete", job.task.name, round(rt, 6))
+        self.jobs.remove(job)
+        q = self.queues[job.task.name]
+        q.pop(0)
+        self.policy.on_job_complete(job)
+        if q:  # successor job was waiting for the process to free up
+            self._activate(q[0])
+
+    # ------------------------------------------------------------------
+    def _core_winners(self) -> Dict[int, Optional[Job]]:
+        """Highest-priority demanding job per core.  A started update piece
+        is a non-preemptive kernel section and keeps its core outright."""
+        winners: Dict[int, Optional[Job]] = {c: None for c in range(self.ts.n_cpus)}
+        for j in self.active_jobs():
+            if j.current_kind() == "upd" and j.upd_started:
+                winners[j.task.cpu] = j
+        for c in range(self.ts.n_cpus):
+            if winners[c] is not None:
+                continue
+            cands = [j for j in self.active_jobs()
+                     if j.task.cpu == c and j.cpu_demand(self.mode, self.policy)]
+            if cands:
+                winners[c] = max(cands,
+                                 key=lambda j: self.policy.effective_priority(j))
+        # the kernel thread's update preempts everything on its core
+        if isinstance(self.policy, KernelThreadPolicy) \
+                and self.policy.kthread_cpu_busy() \
+                and self.ts.kthread_cpu < self.ts.n_cpus:
+            winners[self.ts.kthread_cpu] = None  # core consumed by kthread
+        return winners
+
+    def _allocate(self) -> Dict[int, Optional[Job]]:
+        """Compute core winners, letting due runlist updates acquire the
+        driver mutex: completion-side (driver-context) updates first, then
+        winners standing at a begin() boundary — cascading through
+        zero-cost (pending-only) updates."""
+        for _ in range(16 * (len(self.jobs) + 2)):
+            winners = self._core_winners()
+            entered = False
+            # driver-context end updates need no core and go first
+            ends = sorted([j for j in self.active_jobs()
+                           if j.current_kind() == "upde" and not j.upd_started],
+                          key=lambda j: -j.task.priority)
+            begins = sorted(
+                [j for j in winners.values() if j is not None
+                 and j.current_kind() == "upd" and not j.upd_started],
+                key=lambda j: -self.policy.effective_priority(j))
+            for j in ends + begins:
+                if self.policy.try_acquire(j):
+                    j.upd_started = True
+                    piece = j.current_piece()
+                    self.policy.begin_update(j, piece)
+                    entered = True
+                    if piece.remaining <= _TIME_EPS:
+                        self._complete_piece(j)
+                    break  # re-derive state after a change
+            if not entered:
+                return winners
+        raise RuntimeError("allocation did not settle")
+
+    def run(self) -> SimResult:
+        guard = 0
+        max_events = int(5e6)
+        while self.t < self.horizon - _TIME_EPS:
+            guard += 1
+            if guard > max_events:
+                raise RuntimeError("simulator event budget exceeded")
+
+            # 1. releases due now
+            for task in self.ts.tasks:
+                while self.next_release[task.name] <= self.t + _TIME_EPS:
+                    self.next_release[task.name] += task.period
+                    self._release(task)
+
+            # 2. allocation (lets due IOCTL updates enter the kernel section)
+            winners = self._allocate()
+            self.policy.notify_winners(winners)
+            if isinstance(self.policy, KernelThreadPolicy):
+                winners = self._core_winners()  # a rewrite may block a core
+            owner = self.policy.gpu_owner()
+
+            # driver-context end updates progress in wall time once started
+            driver_upds = [j for j in self.active_jobs()
+                           if j.current_kind() == "upde" and j.upd_started]
+
+            # 3. next event horizon
+            dt = self.horizon - self.t
+            for task in self.ts.tasks:
+                dt = min(dt, self.next_release[task.name] - self.t)
+            for c, j in winners.items():
+                if j is not None and j.cpu_progresses():
+                    dt = min(dt, j.current_piece().remaining)
+            if owner is not None and owner.wants_gpu():
+                dt = min(dt, owner.current_piece().remaining)
+            for j in driver_upds:
+                dt = min(dt, j.current_piece().remaining)
+            dt = min(dt, self.policy.next_gpu_event())
+            if dt <= _TIME_EPS:
+                dt = _TIME_EPS  # numerical floor; completions fire below
+
+            # 4. advance
+            for c, j in winners.items():
+                if j is not None and j.cpu_progresses():
+                    j.current_piece().remaining -= dt
+            if owner is not None and owner.wants_gpu():
+                owner.current_piece().remaining -= dt
+            for j in driver_upds:
+                j.current_piece().remaining -= dt
+            self.policy.gpu_rr_advance(dt)
+            self.t += dt
+
+            # 5. fire completions (cascades handled inside)
+            for j in list(self.jobs):
+                p = j.current_piece()
+                if p is None or not j.active:
+                    continue
+                if p.remaining <= _TIME_EPS:
+                    progressed = (p.kind == "ge" or
+                                  (p.kind == "upde" and j.upd_started) or
+                                  j.cpu_progresses())
+                    if progressed:
+                        self._complete_piece(j)
+
+        for name, rts in self.result.response_times.items():
+            self.result.mort[name] = max(rts) if rts else 0.0
+        return self.result
+
+
+# --------------------------------------------------------------------------
+# convenience front-ends
+# --------------------------------------------------------------------------
+
+def simulate(ts: Taskset, approach: str, mode: str = "busy",
+             horizon: float = 3000.0, **kw) -> SimResult:
+    """approach in {unmanaged, sync_priority, sync_fifo, kthread, ioctl}."""
+    if approach == "unmanaged":
+        policy: BasePolicy = UnmanagedPolicy()
+    elif approach == "sync_priority":
+        policy = SyncPolicy(order="priority")
+    elif approach == "sync_fifo":
+        policy = SyncPolicy(order="fifo")
+    elif approach == "kthread":
+        policy = KernelThreadPolicy(poll_interval=kw.pop("poll_interval", 0.0))
+        mode = "busy"
+    elif approach == "ioctl":
+        policy = IoctlPolicy()
+    else:
+        raise ValueError(approach)
+    return Simulator(ts, policy, mode=mode, horizon=horizon, **kw).run()

@@ -1,0 +1,134 @@
+"""Random taskset generation (Sec. VII-A, Table II).
+
+Parameters (defaults reproduce Table II):
+  * n_cpus = 4
+  * tasks per CPU ~ U[3, 6]
+  * ratio of GPU-using tasks ~ U[40, 60]%
+  * utilization per CPU ~ U[0.4, 0.6], split per-task with UUniFast
+  * task period ~ U[30, 500] ms, deadline = period (constrained)
+  * GPU segments per GPU-using task ~ U{1..3}
+  * G_i/C_i ratio ~ U[0.2, 2]
+  * G^m/G ratio ~ U[0.1, 0.3]
+  * epsilon = 1 ms
+Priorities are assigned Rate-Monotonic (shorter period -> higher priority),
+unique via index tie-breaking (footnote 4).
+"""
+from __future__ import annotations
+
+import dataclasses
+import random
+from typing import Optional
+
+from .task_model import GpuSegment, Task, Taskset
+
+
+@dataclasses.dataclass
+class GenParams:
+    n_cpus: int = 4
+    tasks_per_cpu: tuple[int, int] = (3, 6)
+    gpu_task_ratio: tuple[float, float] = (0.4, 0.6)
+    util_per_cpu: tuple[float, float] = (0.4, 0.6)
+    period_ms: tuple[float, float] = (30.0, 500.0)
+    gpu_segments: tuple[int, int] = (1, 3)
+    g_to_c_ratio: tuple[float, float] = (0.2, 2.0)
+    gm_to_g_ratio: tuple[float, float] = (0.1, 0.3)
+    epsilon: float = 1.0
+    best_effort_ratio: float = 0.0   # Fig. 12 sweep
+    bcet_ratio: float = 1.0          # best-case = ratio * WCET
+    n_tasks_total: Optional[int] = None  # Fig. 7 sweep (overrides per-cpu)
+
+
+def uunifast(rng: random.Random, n: int, total_util: float) -> list[float]:
+    """UUniFast [Bini & Buttazzo 2005]."""
+    utils = []
+    sum_u = total_util
+    for i in range(1, n):
+        next_sum = sum_u * rng.random() ** (1.0 / (n - i))
+        utils.append(sum_u - next_sum)
+        sum_u = next_sum
+    utils.append(sum_u)
+    return utils
+
+
+def _split(rng: random.Random, total: float, n: int) -> list[float]:
+    """Split `total` into n random positive parts (uniform simplex)."""
+    if n == 1:
+        return [total]
+    cuts = sorted(rng.random() for _ in range(n - 1))
+    bounds = [0.0] + cuts + [1.0]
+    return [(bounds[k + 1] - bounds[k]) * total for k in range(n)]
+
+
+def generate_taskset(seed: int, p: GenParams = GenParams()) -> Taskset:
+    rng = random.Random(seed)
+    # -- how many tasks on each CPU ------------------------------------------
+    if p.n_tasks_total is not None:
+        counts = [0] * p.n_cpus
+        for i in range(p.n_tasks_total):
+            counts[i % p.n_cpus] += 1
+    else:
+        counts = [rng.randint(*p.tasks_per_cpu) for _ in range(p.n_cpus)]
+
+    specs = []  # (cpu, util)
+    for cpu, cnt in enumerate(counts):
+        if cnt == 0:
+            continue
+        u_cpu = rng.uniform(*p.util_per_cpu)
+        for u in uunifast(rng, cnt, u_cpu):
+            specs.append((cpu, u))
+
+    n = len(specs)
+    n_gpu = round(rng.uniform(*p.gpu_task_ratio) * n)
+    gpu_idx = set(rng.sample(range(n), min(n_gpu, n)))
+    n_be = round(p.best_effort_ratio * n)
+    be_idx = set(rng.sample(range(n), min(n_be, n)))
+
+    tasks = []
+    for i, (cpu, util) in enumerate(specs):
+        period = rng.uniform(*p.period_ms)
+        budget = max(util * period, 1e-3)
+        uses_gpu = i in gpu_idx
+        if uses_gpu:
+            g_ratio = rng.uniform(*p.g_to_c_ratio)
+            C_total = budget / (1.0 + g_ratio)
+            G_total = budget - C_total
+            n_g = rng.randint(*p.gpu_segments)
+            n_c = n_g + 1
+            g_parts = _split(rng, G_total, n_g)
+            gsegs = []
+            for g in g_parts:
+                m_frac = rng.uniform(*p.gm_to_g_ratio)
+                gsegs.append(GpuSegment(
+                    misc=g * m_frac, exec=g * (1.0 - m_frac),
+                    misc_best=g * m_frac * p.bcet_ratio,
+                    exec_best=g * (1.0 - m_frac) * p.bcet_ratio))
+        else:
+            C_total = budget
+            n_c = 1
+            gsegs = []
+        c_parts = _split(rng, C_total, n_c)
+        tasks.append(Task(
+            name=f"tau{i}",
+            cpu_segments=c_parts,
+            cpu_segments_best=[c * p.bcet_ratio for c in c_parts],
+            gpu_segments=gsegs,
+            period=period, deadline=period, cpu=cpu,
+            priority=0,  # assigned below (RM)
+            best_effort=(i in be_idx),
+        ))
+
+    # -- Rate Monotonic priorities, unique -----------------------------------
+    order = sorted(range(n), key=lambda k: (tasks[k].period, k))
+    for rank, k in enumerate(order):
+        pr = (n - rank) * 10  # larger = higher priority
+        t = tasks[k]
+        # rebuild task to re-run __post_init__ with the final priority
+        # (best-effort tasks are shifted below all RT priorities there)
+        tasks[k] = Task(
+            name=t.name, cpu_segments=t.cpu_segments,
+            cpu_segments_best=t.cpu_segments_best,
+            gpu_segments=t.gpu_segments, period=t.period,
+            deadline=t.deadline, cpu=t.cpu, priority=pr,
+            best_effort=t.best_effort)
+
+    return Taskset(tasks=tasks, n_cpus=p.n_cpus, epsilon=p.epsilon)

@@ -1,0 +1,110 @@
+"""Flash-decode kernel (Pallas, TPU target): single-token attention over a
+(possibly very long) KV cache.
+
+Grid = (batch, kv_blocks): each step loads one KV block into VMEM, computes
+partial (max, sum, acc) for *all* heads of that batch element (the
+online-softmax merge), and flushes q's output at the last block.  GQA is
+exploited natively: the score matmul is (G q-heads x D) @ (D x bk) per KV
+head — q heads grouped by their kv head, so the cache is read once.
+
+Invalid tail entries (cache_len <= idx) and sliding windows are masked via
+the per-batch length vector (SMEM-style scalar input).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(len_ref, q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+            scale: float, window: Optional[int], block_k: int, n_kv: int,
+            n_heads: int, n_kv_heads: int):
+    ki = pl.program_id(1)
+    g = n_heads // n_kv_heads
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0].astype(jnp.float32)              # (H, D)
+    k = k_ref[0].astype(jnp.float32)              # (bk, Hkv, D)
+    v = v_ref[0].astype(jnp.float32)
+    cache_len = len_ref[0]
+
+    cols = ki * block_k + jax.lax.iota(jnp.int32, block_k)
+    valid = cols < cache_len
+    if window is not None:
+        valid &= cols >= cache_len - window
+
+    # scores per kv head group: (Hkv, G, D) x (Hkv, bk, D) -> (Hkv, G, bk)
+    qg = q.reshape(n_kv_heads, g, -1)
+    kg = jnp.transpose(k, (1, 0, 2))              # (Hkv, bk, D)
+    s = jax.lax.dot_general(
+        qg, kg, (((2,), (2,)), ((0,), (0,))),
+        preferred_element_type=jnp.float32) * scale     # (Hkv, G, bk)
+    s = jnp.where(valid[None, None, :], s, NEG_INF)
+    s = s.reshape(n_heads, block_k)
+
+    m_prev = m_scr[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+    p = jnp.exp(s - m_new[:, None])               # (H, bk)
+    corr = jnp.exp(m_prev - m_new)
+    l_scr[...] = l_scr[...] * corr + jnp.sum(p, axis=1)
+    vg = jnp.transpose(v, (1, 0, 2))              # (Hkv, bk, D)
+    pv = jax.lax.dot_general(
+        p.reshape(n_kv_heads, g, block_k), vg,
+        (((2,), (1,)), ((0,), (0,))),
+        preferred_element_type=jnp.float32)       # (Hkv, G, D)
+    acc_scr[...] = acc_scr[...] * corr[:, None] \
+        + pv.reshape(n_heads, -1)
+    m_scr[...] = m_new
+
+    @pl.when(ki == n_kv - 1)
+    def _flush():
+        l = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0] = (acc_scr[...] / l[:, None]).astype(o_ref.dtype)
+
+
+def flash_decode(q, k_cache, v_cache, cache_len, *,
+                 window: Optional[int] = None, block_k: int = 512,
+                 interpret: bool = False):
+    """q: (B, H, D); caches: (B, Smax, Hkv, D); cache_len: (B,) or scalar.
+    Returns (B, H, D)."""
+    b, h, d = q.shape
+    smax, hkv = k_cache.shape[1], k_cache.shape[2]
+    block_k = min(block_k, smax)
+    assert smax % block_k == 0, (smax, block_k)
+    n_kv = smax // block_k
+    lens = jnp.broadcast_to(jnp.asarray(cache_len, jnp.int32), (b,))
+    kernel = functools.partial(
+        _kernel, scale=d ** -0.5, window=window, block_k=block_k,
+        n_kv=n_kv, n_heads=h, n_kv_heads=hkv)
+    return pl.pallas_call(
+        kernel,
+        grid=(b, n_kv),
+        in_specs=[
+            pl.BlockSpec((1,), lambda b_, k_: (b_,)),
+            pl.BlockSpec((1, h, d), lambda b_, k_: (b_, 0, 0)),
+            pl.BlockSpec((1, block_k, hkv, d), lambda b_, k_:
+                         (b_, k_, 0, 0)),
+            pl.BlockSpec((1, block_k, hkv, d), lambda b_, k_:
+                         (b_, k_, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, h, d), lambda b_, k_: (b_, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, h, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((h,), jnp.float32),
+            pltpu.VMEM((h,), jnp.float32),
+            pltpu.VMEM((h, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(lens, q, k_cache, v_cache)

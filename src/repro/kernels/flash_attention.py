@@ -1,0 +1,165 @@
+"""Flash attention forward kernel (Pallas, TPU target).
+
+TPU-native adaptation of the flash algorithm (DESIGN.md §2): the grid is
+(batch, heads, q_blocks, kv_blocks) with the kv dimension innermost — TPU
+executes the grid sequentially, so the VMEM scratch accumulators (running
+max / sum / output) persist across the kv blocks of one q block and the
+output tile is flushed exactly once, at the last kv block.  Block shapes
+are MXU-aligned (q/kv blocks multiples of 128 when the sequence allows,
+head_dim 64/128 as published).
+
+Causal + sliding-window masking is applied inside the kernel; fully-masked
+kv blocks still iterate (masked to -inf) — Pallas TPU requires a static
+grid; the §Perf log measures the win from skipping them via block-triangle
+grids on the hillclimbed cells.
+
+Backward uses the XLA reference path via jax.custom_vjp (recompute-based,
+matching the chunked reference); a Pallas backward kernel is a recorded
+future optimization.
+
+Validated against ref.attention_dense in interpret mode (tests/test_kernels).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from . import ref
+
+NEG_INF = -1e30
+
+
+def _fwd_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+                scale: float, causal: bool, window: Optional[int],
+                q_offset: int, block_q: int, block_k: int, n_kv: int):
+    qi = pl.program_id(2)
+    ki = pl.program_id(3)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0, 0].astype(jnp.float32)           # (bq, d)
+    k = k_ref[0, 0].astype(jnp.float32)           # (bk, d)
+    v = v_ref[0, 0].astype(jnp.float32)
+    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+
+    rows = qi * block_q + jax.lax.broadcasted_iota(
+        jnp.int32, (block_q, block_k), 0) + q_offset
+    cols = ki * block_k + jax.lax.broadcasted_iota(
+        jnp.int32, (block_q, block_k), 1)
+    mask = jnp.ones((block_q, block_k), jnp.bool_)
+    if causal:
+        mask &= cols <= rows
+    if window is not None:
+        mask &= cols > rows - window
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_scr[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+    p = jnp.exp(s - m_new[:, None])
+    corr = jnp.exp(m_prev - m_new)
+    l_scr[...] = l_scr[...] * corr + jnp.sum(p, axis=1)
+    acc_scr[...] = acc_scr[...] * corr[:, None] + jnp.dot(
+        p.astype(v.dtype), v, preferred_element_type=jnp.float32)
+    m_scr[...] = m_new
+
+    @pl.when(ki == n_kv - 1)
+    def _flush():
+        l = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0, 0] = (acc_scr[...] / l[:, None]).astype(o_ref.dtype)
+
+
+def _fwd(q, k, v, *, causal, window, q_offset, block_q, block_k,
+         interpret):
+    b, h, sq, d = q.shape
+    sk = k.shape[2]
+    block_q = min(block_q, sq)
+    block_k = min(block_k, sk)
+    assert sq % block_q == 0 and sk % block_k == 0, (sq, sk)
+    n_q, n_kv = sq // block_q, sk // block_k
+    grid = (b, h, n_q, n_kv)
+    kernel = functools.partial(
+        _fwd_kernel, scale=d ** -0.5, causal=causal, window=window,
+        q_offset=q_offset, block_q=block_q, block_k=block_k, n_kv=n_kv)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, d), lambda b_, h_, q_, k_:
+                         (b_, h_, q_, 0)),
+            pl.BlockSpec((1, 1, block_k, d), lambda b_, h_, q_, k_:
+                         (b_, h_, k_, 0)),
+            pl.BlockSpec((1, 1, block_k, d), lambda b_, h_, q_, k_:
+                         (b_, h_, k_, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, block_q, d), lambda b_, h_, q_, k_:
+                               (b_, h_, q_, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, h, sq, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q,), jnp.float32),   # running max
+            pltpu.VMEM((block_q,), jnp.float32),   # running sum
+            pltpu.VMEM((block_q, d), jnp.float32),  # output accumulator
+        ],
+        interpret=interpret,
+    )(q, k, v)
+
+
+@functools.partial(jax.custom_vjp,
+                   nondiff_argnums=(3, 4, 5, 6, 7, 8))
+def _flash(q, k, v, causal, window, q_offset, block_q, block_k, interpret):
+    return _fwd(q, k, v, causal=causal, window=window, q_offset=q_offset,
+                block_q=block_q, block_k=block_k, interpret=interpret)
+
+
+def _flash_fwd(q, k, v, causal, window, q_offset, block_q, block_k,
+               interpret):
+    out = _flash(q, k, v, causal, window, q_offset, block_q, block_k,
+                 interpret)
+    return out, (q, k, v)
+
+
+def _flash_bwd(causal, window, q_offset, block_q, block_k, interpret,
+               res, g):
+    q, k, v = res
+    # recompute-based backward through the (chunked) reference — the
+    # gradients of flash attention equal those of exact attention
+
+    def f(q_, k_, v_):
+        qt = jnp.moveaxis(q_, 1, 2)
+        kt = jnp.moveaxis(k_, 1, 2)
+        vt = jnp.moveaxis(v_, 1, 2)
+        o = ref.attention(qt, kt, vt, causal=causal, window=window,
+                          q_offset=q_offset)
+        return jnp.moveaxis(o, 1, 2)
+
+    _, vjp = jax.vjp(f, q, k, v)
+    return vjp(g)
+
+
+_flash.defvjp(_flash_fwd, _flash_bwd)
+
+
+def flash_attention(q, k, v, *, causal: bool = True,
+                    window: Optional[int] = None, q_offset: int = 0,
+                    block_q: int = 128, block_k: int = 128,
+                    interpret: bool = False):
+    """Public wrapper matching ref.attention's (B, S, H, D) convention.
+    GQA is handled by repeating KV heads (the kernel sees full heads)."""
+    b, sq, h, d = q.shape
+    hkv = k.shape[2]
+    k = ref.repeat_kv(k, h // hkv)
+    v = ref.repeat_kv(v, h // hkv)
+    qt = jnp.moveaxis(q, 1, 2)   # (B, H, S, D)
+    kt = jnp.moveaxis(k, 1, 2)
+    vt = jnp.moveaxis(v, 1, 2)
+    o = _flash(qt, kt, vt, causal, window, q_offset, block_q, block_k,
+               interpret)
+    return jnp.moveaxis(o, 1, 2)

@@ -1,0 +1,95 @@
+"""Mamba (S6) selective-scan kernel (Pallas, TPU target).
+
+State h: (Di, N) with Di up to 8192, N=16.  Grid = (batch, d_inner blocks,
+time_chunks) with time innermost; each block keeps its (bd, N) state slice
+in VMEM across the sequence.  The elementwise recurrence
+    h_t = exp(dt_t * A) * h_{t-1} + (dt_t * x_t) * B_t
+    y_t = (h_t @ C_t) + D * x_t
+is VPU work over (bd, N) tiles; the kernel fuses the discretization,
+recurrence and C-contraction so x/dt/B/C stream through VMEM once.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, d_ref, h0_ref,
+            y_ref, hf_ref, h_scr, *, chunk: int, n_chunks: int):
+    ci = pl.program_id(2)
+
+    @pl.when(ci == 0)
+    def _init():
+        h_scr[...] = h0_ref[0].astype(jnp.float32)
+
+    x = x_ref[0].astype(jnp.float32)      # (chunk, bd)
+    dt = dt_ref[0].astype(jnp.float32)    # (chunk, bd)
+    A = a_ref[...].astype(jnp.float32)    # (bd, N)
+    B = b_ref[0].astype(jnp.float32)      # (chunk, N)
+    C = c_ref[0].astype(jnp.float32)      # (chunk, N)
+    D = d_ref[...].astype(jnp.float32)    # (bd,)
+
+    def step(t, carry):
+        h, ys = carry
+        dA = jnp.exp(dt[t][:, None] * A)              # (bd, N)
+        h = dA * h + (dt[t] * x[t])[:, None] * B[t][None, :]
+        y = jnp.sum(h * C[t][None, :], axis=1) + D * x[t]
+        ys = ys.at[t].set(y)
+        return h, ys
+
+    ys0 = jnp.zeros((chunk, x.shape[1]), jnp.float32)
+    h, ys = jax.lax.fori_loop(0, chunk, step, (h_scr[...], ys0))
+    h_scr[...] = h
+    y_ref[0] = ys.astype(y_ref.dtype)
+
+    @pl.when(ci == n_chunks - 1)
+    def _flush():
+        hf_ref[0] = h_scr[...]
+
+
+def mamba_scan_pallas(x, dt, A, B, C, D, h0: Optional[jax.Array] = None,
+                      chunk: int = 32, block_d: int = 512,
+                      interpret: bool = False):
+    """x, dt: (Bt, S, Di); A: (Di, N); B, C: (Bt, S, N); D: (Di,).
+    Returns (y (Bt,S,Di), h_final (Bt,Di,N) fp32)."""
+    bt, s, di = x.shape
+    n = A.shape[1]
+    chunk = min(chunk, s)
+    block_d = min(block_d, di)
+    assert s % chunk == 0 and di % block_d == 0
+    n_chunks, n_blocks = s // chunk, di // block_d
+    if h0 is None:
+        h0 = jnp.zeros((bt, di, n), jnp.float32)
+    kernel = functools.partial(_kernel, chunk=chunk, n_chunks=n_chunks)
+    y, h_final = pl.pallas_call(
+        kernel,
+        grid=(bt, n_blocks, n_chunks),
+        in_specs=[
+            pl.BlockSpec((1, chunk, block_d), lambda b_, d_, c_:
+                         (b_, c_, d_)),
+            pl.BlockSpec((1, chunk, block_d), lambda b_, d_, c_:
+                         (b_, c_, d_)),
+            pl.BlockSpec((block_d, n), lambda b_, d_, c_: (d_, 0)),
+            pl.BlockSpec((1, chunk, n), lambda b_, d_, c_: (b_, c_, 0)),
+            pl.BlockSpec((1, chunk, n), lambda b_, d_, c_: (b_, c_, 0)),
+            pl.BlockSpec((block_d,), lambda b_, d_, c_: (d_,)),
+            pl.BlockSpec((1, block_d, n), lambda b_, d_, c_: (b_, d_, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, chunk, block_d), lambda b_, d_, c_:
+                         (b_, c_, d_)),
+            pl.BlockSpec((1, block_d, n), lambda b_, d_, c_: (b_, d_, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((bt, s, di), x.dtype),
+            jax.ShapeDtypeStruct((bt, di, n), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((block_d, n), jnp.float32)],
+        interpret=interpret,
+    )(x, dt, A, B, C, D, h0)
+    return y, h_final

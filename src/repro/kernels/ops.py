@@ -1,0 +1,89 @@
+"""Public jit-ready wrappers for the kernel layer.
+
+Every perf-critical op in the model stack goes through this module, which
+dispatches between the Pallas TPU kernels (``use_pallas=True``, the target
+runtime) and the pure-jnp references in ``ref.py`` (CPU dry-run, smoke
+tests, and the oracle for kernel validation).
+
+The global default is platform-derived: Pallas on TPU, reference elsewhere.
+``set_use_pallas`` overrides it (tests use interpret-mode Pallas on CPU).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+
+from . import ref
+
+_USE_PALLAS: Optional[bool] = None  # None -> auto (TPU only)
+_INTERPRET = False                  # run Pallas kernels in interpret mode
+
+
+def set_use_pallas(value: Optional[bool], interpret: bool = False) -> None:
+    global _USE_PALLAS, _INTERPRET
+    _USE_PALLAS = value
+    _INTERPRET = interpret
+
+
+def use_pallas() -> bool:
+    if _USE_PALLAS is not None:
+        return _USE_PALLAS
+    return jax.default_backend() == "tpu"
+
+
+def interpret_mode() -> bool:
+    return _INTERPRET
+
+
+# --------------------------------------------------------------------------
+# attention
+# --------------------------------------------------------------------------
+
+def attention(q, k, v, *, causal: bool = True, window: Optional[int] = None,
+              q_offset: int = 0, chunk: int = 2048):
+    """Multi-head (GQA) attention: q (B,Sq,H,D), k/v (B,Sk,Hkv,D)."""
+    if use_pallas():
+        from .flash_attention import flash_attention
+        return flash_attention(q, k, v, causal=causal, window=window,
+                               q_offset=q_offset, interpret=_INTERPRET)
+    return ref.attention(q, k, v, causal=causal, window=window,
+                         q_offset=q_offset, chunk=chunk)
+
+
+def decode_attention(q, k_cache, v_cache, cache_len, *,
+                     window: Optional[int] = None):
+    """Single-token attention over a KV cache: q (B,H,D)."""
+    if use_pallas():
+        from .decode_attention import flash_decode
+        return flash_decode(q, k_cache, v_cache, cache_len, window=window,
+                            interpret=_INTERPRET)
+    return ref.decode_attention(q, k_cache, v_cache, cache_len,
+                                window=window)
+
+
+# --------------------------------------------------------------------------
+# recurrences
+# --------------------------------------------------------------------------
+
+def mamba_scan(x, dt, A, B, C, D, h0=None):
+    if use_pallas():
+        from .mamba_scan import mamba_scan_pallas
+        return mamba_scan_pallas(x, dt, A, B, C, D, h0=h0,
+                                 interpret=_INTERPRET)
+    return ref.mamba_scan(x, dt, A, B, C, D, h0=h0)
+
+
+def rwkv6_scan(r, k, v, w, u, s0=None):
+    if use_pallas():
+        from .rwkv6 import rwkv6_scan_pallas
+        return rwkv6_scan_pallas(r, k, v, w, u, s0=s0, interpret=_INTERPRET)
+    return ref.rwkv6_scan(r, k, v, w, u, s0=s0)
+
+
+def mamba_decode_step(x, dt, A, B, C, D, h):
+    return ref.mamba_decode_step(x, dt, A, B, C, D, h)
+
+
+def rwkv6_decode_step(r, k, v, w, u, state):
+    return ref.rwkv6_decode_step(r, k, v, w, u, state)

@@ -1,0 +1,235 @@
+"""Pure-jnp reference oracles for every kernel in this package.
+
+These are the ground truth the Pallas kernels are validated against
+(interpret=True on CPU), and the path used by the dry-run (CPU backend,
+cost_analysis sees real FLOPs) and by smoke tests.
+
+Shapes follow the q/k/v convention (batch, seq, heads, head_dim); GQA is
+expressed by n_kv_heads <= n_heads with n_heads % n_kv_heads == 0.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def repeat_kv(k: jax.Array, n_rep: int) -> jax.Array:
+    """(B, S, Hkv, D) -> (B, S, Hkv*n_rep, D)"""
+    if n_rep == 1:
+        return k
+    b, s, h, d = k.shape
+    return jnp.broadcast_to(k[:, :, :, None, :], (b, s, h, n_rep, d)) \
+              .reshape(b, s, h * n_rep, d)
+
+
+def attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+              causal: bool = True, window: Optional[int] = None,
+              q_offset: int = 0, chunk: int = 2048) -> jax.Array:
+    """Multi-head attention; dispatches to the dense oracle for short keys
+    and to the flash-pattern chunked implementation (online softmax over
+    KV blocks, memory O(Sq x chunk)) for long ones — mirroring the Pallas
+    kernel's memory behaviour so dry-run memory_analysis is meaningful."""
+    sk = k.shape[1]
+    if sk > chunk and sk % chunk == 0:
+        return attention_chunked(q, k, v, causal=causal, window=window,
+                                 q_offset=q_offset, chunk=chunk)
+    return attention_dense(q, k, v, causal=causal, window=window,
+                           q_offset=q_offset)
+
+
+def attention_dense(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, window: Optional[int] = None,
+                    q_offset: int = 0) -> jax.Array:
+    """Dense reference (the oracle for kernel validation).
+
+    q: (B, Sq, H, D); k, v: (B, Sk, Hkv, D).  Softmax in fp32.
+    ``window``: sliding-window attention — key j is visible from query i iff
+    i - window < j <= i (with i indexed at q_offset for decode).
+    """
+    b, sq, h, d = q.shape
+    hkv = k.shape[2]
+    k = repeat_kv(k, h // hkv)
+    v = repeat_kv(v, h // hkv)
+    scale = d ** -0.5
+    logits = jnp.einsum("bqhd,bkhd->bhqk", q, k,
+                        preferred_element_type=jnp.float32) * scale
+    sk = k.shape[1]
+    qi = jnp.arange(sq)[:, None] + q_offset
+    kj = jnp.arange(sk)[None, :]
+    mask = jnp.ones((sq, sk), dtype=bool)
+    if causal:
+        mask &= kj <= qi
+    if window is not None:
+        mask &= kj > qi - window
+    logits = jnp.where(mask[None, None], logits, NEG_INF)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", probs.astype(v.dtype), v)
+    return out.astype(q.dtype)
+
+
+def attention_chunked(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                      causal: bool = True, window: Optional[int] = None,
+                      q_offset: int = 0, chunk: int = 2048) -> jax.Array:
+    """Flash-pattern attention: lax.scan over KV chunks with running
+    (max, sum, acc) — numerically identical to the dense path.
+
+    NOTE for the roofline: XLA's cost_analysis counts the chunk scan body
+    once; benchmarks/roofline.py adds the analytic (n_chunks-1) correction
+    for attention FLOPs (closed form, documented in EXPERIMENTS.md)."""
+    b, sq, h, d = q.shape
+    sk, hkv = k.shape[1], k.shape[2]
+    n_rep = h // hkv
+    k = repeat_kv(k, n_rep)
+    v = repeat_kv(v, n_rep)
+    scale = d ** -0.5
+    n_chunks = sk // chunk
+    kc = jnp.moveaxis(k.reshape(b, n_chunks, chunk, h, d), 1, 0)
+    vc = jnp.moveaxis(v.reshape(b, n_chunks, chunk, h, d), 1, 0)
+    qi = jnp.arange(sq)[:, None] + q_offset
+
+    def body(carry, xs):
+        m, l, acc = carry
+        idx, kci, vci = xs
+        s = jnp.einsum("bqhd,bkhd->bhqk", q, kci,
+                       preferred_element_type=jnp.float32) * scale
+        kj = idx * chunk + jnp.arange(chunk)[None, :]
+        mask = jnp.ones((sq, chunk), dtype=bool)
+        if causal:
+            mask &= kj <= qi
+        if window is not None:
+            mask &= kj > qi - window
+        s = jnp.where(mask[None, None], s, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l = l * corr + jnp.sum(p, axis=-1)
+        acc = acc * corr[..., None] + jnp.einsum(
+            "bhqk,bkhd->bhqd", p.astype(vci.dtype), vci,
+            preferred_element_type=jnp.float32)
+        return (m_new, l, acc), None
+
+    m0 = jnp.full((b, h, sq), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((b, h, sq), jnp.float32)
+    a0 = jnp.zeros((b, h, sq, d), jnp.float32)
+    # remat the chunk body: the backward recomputes scores from (q, k)
+    # instead of stacking per-chunk probabilities (flash-backward memory)
+    body = jax.checkpoint(body,
+                          policy=jax.checkpoint_policies.nothing_saveable)
+    (m, l, acc), _ = jax.lax.scan(
+        body, (m0, l0, a0), (jnp.arange(n_chunks), kc, vc))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return jnp.moveaxis(out, 1, 2).astype(q.dtype)
+
+
+def decode_attention(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
+                     cache_len: jax.Array | int, *,
+                     window: Optional[int] = None) -> jax.Array:
+    """Single-step attention over a KV cache.
+
+    q: (B, H, D) new-token queries; caches: (B, Smax, Hkv, D);
+    cache_len: number of valid entries (the new token is already written).
+    """
+    b, h, d = q.shape
+    hkv = k_cache.shape[2]
+    g = h // hkv
+    # grouped-query formulation: q heads grouped by their KV head, so the
+    # cache is contracted directly — no materialized KV repeat (3x less
+    # cache-side read traffic for GQA decode, see EXPERIMENTS.md §Perf)
+    qg = q.reshape(b, hkv, g, d)
+    scale = d ** -0.5
+    from ..parallel.hints import shard_hint
+    logits = shard_hint(
+        jnp.einsum("bhgd,bshd->bhgs", qg, k_cache,
+                   preferred_element_type=jnp.float32),
+        "decode_scores") * scale
+    smax = k_cache.shape[1]
+    kj = jnp.arange(smax)[None, :]
+    valid = kj < jnp.asarray(cache_len).reshape(-1, 1)
+    if window is not None:
+        valid &= kj >= jnp.asarray(cache_len).reshape(-1, 1) - window
+    logits = jnp.where(valid[:, None, None, :], logits, NEG_INF)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhgs,bshd->bhgd", probs.astype(v_cache.dtype),
+                     v_cache)
+    return out.reshape(b, h, d).astype(q.dtype)
+
+
+def mamba_scan(x: jax.Array, dt: jax.Array, A: jax.Array, B: jax.Array,
+               C: jax.Array, D: jax.Array,
+               h0: Optional[jax.Array] = None):
+    """Selective state-space (S6) scan.
+
+    x, dt: (Bt, S, Di); A: (Di, N); B, C: (Bt, S, N); D: (Di,)
+    Returns (y (Bt,S,Di), h_final (Bt,Di,N)).
+    Discretization: h_t = exp(dt_t * A) h_{t-1} + dt_t * B_t * x_t.
+    """
+    bt, s, di = x.shape
+    n = A.shape[1]
+    dA = jnp.exp(dt[..., None] * A[None, None])            # (Bt,S,Di,N)
+    dBx = (dt * x)[..., None] * B[:, :, None, :]           # (Bt,S,Di,N)
+    if h0 is None:
+        h0 = jnp.zeros((bt, di, n), dtype=jnp.float32)
+
+    def step(h, inp):
+        da, dbx, c = inp
+        h = da * h + dbx
+        y = jnp.einsum("bdn,bn->bd", h, c)
+        return h, y
+
+    xs = (jnp.moveaxis(dA, 1, 0).astype(jnp.float32),
+          jnp.moveaxis(dBx, 1, 0).astype(jnp.float32),
+          jnp.moveaxis(C, 1, 0).astype(jnp.float32))
+    h_final, ys = jax.lax.scan(step, h0, xs)
+    y = jnp.moveaxis(ys, 0, 1) + x.astype(jnp.float32) * D[None, None]
+    return y.astype(x.dtype), h_final
+
+
+def rwkv6_scan(r: jax.Array, k: jax.Array, v: jax.Array, w: jax.Array,
+               u: jax.Array, s0: Optional[jax.Array] = None):
+    """RWKV6 (Finch) WKV recurrence with data-dependent per-channel decay.
+
+    r, k, w: (B, S, H, D); v: (B, S, H, D); u: (H, D)
+    state S: (B, H, D, D) with S_t = diag(w_t) S_{t-1} + k_t^T v_t
+    out_t  = r_t @ (S_{t-1} + diag(u) k_t^T v_t)
+    Returns (out (B,S,H,D), final state).
+    """
+    b, s, h, d = r.shape
+    if s0 is None:
+        s0 = jnp.zeros((b, h, d, d), dtype=jnp.float32)
+
+    def step(S, inp):
+        rt, kt, vt, wt = inp
+        kv = kt[..., :, None] * vt[..., None, :]          # (B,H,D,D)
+        out = jnp.einsum("bhd,bhde->bhe", rt,
+                         S + u[None, :, :, None] * kv)
+        S = wt[..., None] * S + kv
+        return S, out
+
+    xs = tuple(jnp.moveaxis(t, 1, 0).astype(jnp.float32)
+               for t in (r, k, v, w))
+    s_final, outs = jax.lax.scan(step, s0, xs)
+    return jnp.moveaxis(outs, 0, 1).astype(r.dtype), s_final
+
+
+def rwkv6_decode_step(r, k, v, w, u, state):
+    """One-token RWKV6 update.  r,k,v,w: (B,H,D); state: (B,H,D,D)."""
+    kv = k[..., :, None] * v[..., None, :]
+    out = jnp.einsum("bhd,bhde->bhe", r.astype(jnp.float32),
+                     state + u[None, :, :, None] * kv.astype(jnp.float32))
+    new_state = w[..., None].astype(jnp.float32) * state \
+        + kv.astype(jnp.float32)
+    return out.astype(r.dtype), new_state
+
+
+def mamba_decode_step(x, dt, A, B, C, D, h):
+    """One-token S6 update.  x, dt: (Bt, Di); B, C: (Bt, N); h: (Bt,Di,N)."""
+    dA = jnp.exp(dt[..., None] * A[None])                  # (Bt,Di,N)
+    dBx = (dt * x)[..., None] * B[:, None, :]
+    h = dA.astype(jnp.float32) * h + dBx.astype(jnp.float32)
+    y = jnp.einsum("bdn,bn->bd", h, C.astype(jnp.float32))
+    y = y + x.astype(jnp.float32) * D[None]
+    return y.astype(x.dtype), h

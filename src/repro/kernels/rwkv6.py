@@ -1,0 +1,90 @@
+"""RWKV6 (Finch) WKV recurrence kernel (Pallas, TPU target).
+
+The recurrence S_t = diag(w_t) S_{t-1} + k_t v_t^T is memory-bound on the
+(D x D) per-head state; the kernel keeps the state resident in VMEM across
+the whole sequence (grid = (batch, heads, time_chunks), time innermost)
+instead of round-tripping it to HBM every token — the chunked-recurrence
+adaptation of RWKV's CUDA kernel to the TPU memory hierarchy.
+
+Within a chunk the timestep loop is a fori_loop over VMEM-resident r/k/v/w
+tiles (chunk x D); the final state is a second kernel output flushed at the
+last chunk (so prefill gets the decode state for free).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(r_ref, k_ref, v_ref, w_ref, u_ref, s0_ref, o_ref, sf_ref,
+            s_scr, *, chunk: int, n_chunks: int):
+    ci = pl.program_id(2)
+
+    @pl.when(ci == 0)
+    def _init():
+        s_scr[...] = s0_ref[0, 0].astype(jnp.float32)
+
+    r = r_ref[0, :, 0].astype(jnp.float32)        # (chunk, D)
+    k = k_ref[0, :, 0].astype(jnp.float32)
+    v = v_ref[0, :, 0].astype(jnp.float32)
+    w = w_ref[0, :, 0].astype(jnp.float32)
+    u = u_ref[0].astype(jnp.float32)              # (D,)
+
+    def step(t, carry):
+        s, out = carry
+        kv = k[t][:, None] * v[t][None, :]        # (D, D)
+        o_t = jnp.sum((s + u[:, None] * kv) * r[t][:, None], axis=0)
+        s = w[t][:, None] * s + kv
+        out = out.at[t].set(o_t)
+        return s, out
+
+    out0 = jnp.zeros((chunk, r.shape[1]), jnp.float32)
+    s, out = jax.lax.fori_loop(0, chunk, step, (s_scr[...], out0))
+    s_scr[...] = s
+    o_ref[0, :, 0] = out.astype(o_ref.dtype)
+
+    @pl.when(ci == n_chunks - 1)
+    def _flush():
+        sf_ref[0, 0] = s_scr[...]
+
+
+def rwkv6_scan_pallas(r, k, v, w, u, s0: Optional[jax.Array] = None,
+                      chunk: int = 32, interpret: bool = False):
+    """r,k,v,w: (B, S, H, D); u: (H, D); s0: (B, H, D, D) fp32 or None.
+    Returns (out (B,S,H,D), final state (B,H,D,D) fp32)."""
+    b, s, h, d = r.shape
+    chunk = min(chunk, s)
+    assert s % chunk == 0
+    n_chunks = s // chunk
+    if s0 is None:
+        s0 = jnp.zeros((b, h, d, d), jnp.float32)
+    kernel = functools.partial(_kernel, chunk=chunk, n_chunks=n_chunks)
+    tchunk = lambda b_, h_, c_: (b_, c_, h_, 0)
+    out, s_final = pl.pallas_call(
+        kernel,
+        grid=(b, h, n_chunks),
+        in_specs=[
+            pl.BlockSpec((1, chunk, 1, d), tchunk),
+            pl.BlockSpec((1, chunk, 1, d), tchunk),
+            pl.BlockSpec((1, chunk, 1, d), tchunk),
+            pl.BlockSpec((1, chunk, 1, d), tchunk),
+            pl.BlockSpec((1, d), lambda b_, h_, c_: (h_, 0)),
+            pl.BlockSpec((1, 1, d, d), lambda b_, h_, c_: (b_, h_, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, chunk, 1, d), tchunk),
+            pl.BlockSpec((1, 1, d, d), lambda b_, h_, c_: (b_, h_, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, s, h, d), r.dtype),
+            jax.ShapeDtypeStruct((b, h, d, d), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((d, d), jnp.float32)],
+        interpret=interpret,
+    )(r, k, v, w, u, s0)
+    return out, s_final

@@ -1,0 +1,228 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run (deliverable e).
+
+For every (architecture x input shape x mesh) cell: build the step function
+with production shardings, ``.lower().compile()`` it, and record
+memory_analysis / cost_analysis / collective schedule.  Compilation success
+proves the distribution config is coherent; the recorded numbers feed the
+roofline analysis (EXPERIMENTS.md).
+
+The scan-body cost correction additionally compiles one layer group
+standalone (see hlo_analysis).  Results are merged into a JSON cache so
+the run is resumable cell by cell.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun \
+      --arch all --shape all --mesh both --out benchmarks/results/dryrun.json
+"""
+import argparse   # noqa: E402
+import json       # noqa: E402
+import time       # noqa: E402
+import traceback  # noqa: E402
+
+import jax        # noqa: E402
+
+from ..configs import SHAPES, applicable, get, names          # noqa: E402
+from ..models.transformer import param_count                   # noqa: E402
+from . import hlo_analysis as hlo                              # noqa: E402
+from . import steps                                            # noqa: E402
+from .mesh import make_production_mesh                         # noqa: E402
+
+HBM_PER_CHIP = 16e9  # TPU v5e
+
+
+def active_param_count(cfg) -> int:
+    """Parameters touched per token (MoE: top-k of E experts)."""
+    total = param_count(cfg)
+    if cfg.moe_experts:
+        from ..models import transformer
+        specs = transformer.param_specs(cfg)
+        import numpy as np
+        moe_leaves = 0
+        for path, leaf in jax.tree_util.tree_flatten_with_path(specs)[0]:
+            ps = "/".join(str(getattr(k, "key", getattr(k, "idx", k)))
+                          for k in path)
+            if "ffn" in ps and leaf.ndim == 4:  # (R, E, d, f) expert mats
+                moe_leaves += int(np.prod(leaf.shape))
+        total -= moe_leaves
+        total += int(moe_leaves * cfg.moe_top_k / cfg.moe_experts)
+    return total
+
+
+def analytic_memory(cfg, shape, mesh) -> dict:
+    """Per-device HBM model from specs x shardings (exact for parameters /
+    optimizer / caches / scan carries; working-set terms use the flash-tile
+    memory behaviour of the production kernels).  This is the fit
+    criterion: raw memory_analysis() on the CPU backend is inflated by
+    bf16->f32 dot legalization (fp32 copies of every weight), an artifact
+    absent on TPU — both numbers are reported (EXPERIMENTS.md §Dry-run)."""
+    from ..models import transformer
+    from ..parallel import sharding as shd
+    from jax.sharding import PartitionSpec as P
+
+    pspecs = transformer.param_specs(cfg)
+    p_ps = shd.param_pspecs(cfg, mesh, pspecs)
+    params_local = shd.local_bytes(mesh, pspecs, p_ps)
+    out = {"params": params_local}
+
+    daxes = shd.data_axes(mesh)
+    bshards = min(shape.global_batch, shd.axis_size(mesh, daxes))
+    tp = mesh.shape.get("model", 1)
+    b_l = shape.global_batch / bshards
+    d = cfg.d_model
+
+    if shape.kind == "train":
+        o_specs = steps.opt_specs(cfg)
+        o_ps = shd.zero1_pspecs(mesh, o_specs,
+                                {"m": p_ps, "v": p_ps, "step": P()})
+        out["opt"] = shd.local_bytes(mesh, o_specs, o_ps)
+        out["grads"] = params_local
+        acc = max(cfg.grad_accum, 1)
+        if acc > 1:
+            out["grad_accum_fp32"] = 2 * params_local
+        s_l = shape.seq_len / (tp if shape.seq_len % tp == 0 else 1)
+        x_res = b_l / acc * s_l * d * 2
+        out["saved_residuals"] = cfg.repeats * len(cfg.pattern) * x_res
+        x_full = b_l * shape.seq_len * d * 2
+        chunk = min(1024, shape.seq_len)
+        h_l = max(cfg.n_heads / (1 if cfg.sharding_profile == "hybrid"
+                                 else min(tp, cfg.n_heads)), 1)
+        attn_tile = b_l * h_l * s_l * chunk * 4
+        logits_chunk = (b_l * (shape.seq_len / max(cfg.loss_chunks, 1))
+                        * cfg.vocab_size / (tp if cfg.vocab_size % tp == 0
+                                            else 1) * 4)
+        out["working_set"] = (4 * x_full + 3 * attn_tile
+                              + 3 * logits_chunk) / acc
+    else:
+        c_specs = steps.cache_specs(cfg, shape)
+        c_ps = shd.cache_pspecs(cfg, mesh, c_specs, shape.global_batch)
+        out["cache"] = shd.local_bytes(mesh, c_specs, c_ps)
+        if shape.kind == "prefill":
+            x_full = b_l * shape.seq_len * d * 2
+            out["working_set"] = 6 * x_full
+        else:
+            out["working_set"] = 16 * b_l * d * 4
+
+    out["total"] = float(sum(out.values()))
+    return out
+
+
+def run_cell(arch: str, shape_name: str, mesh, mesh_name: str,
+             components: bool = True, cfg=None) -> dict:
+    """``cfg`` overrides the registry config (perf-iteration variants)."""
+    entry = get(arch)
+    if cfg is None:
+        cfg = entry.config()
+    shape = SHAPES[shape_name]
+    rec = {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+           "kind": shape.kind, "n_devices": mesh.size,
+           "params": param_count(cfg),
+           "params_active": active_param_count(cfg),
+           "repeats": cfg.repeats, "ok": False}
+    if not applicable(entry.sub_quadratic, shape):
+        rec["skipped"] = ("long_500k needs sub-quadratic attention; "
+                          f"{arch} is full-attention (see DESIGN.md)")
+        return rec
+    t0 = time.time()
+    with mesh:
+        fn, arg_specs = steps.jit_cell(cfg, shape, mesh)
+        lowered = fn.lower(*arg_specs)
+        rec["t_lower_s"] = round(time.time() - t0, 2)
+        t1 = time.time()
+        compiled = lowered.compile()
+        rec["t_compile_s"] = round(time.time() - t1, 2)
+        rec["cost"] = hlo.cost_summary(compiled)
+        rec["memory"] = hlo.memory_summary(compiled)
+        rec["peak_hbm_raw"] = hlo.peak_hbm_bytes(rec["memory"])
+        rec["memory_analytic"] = analytic_memory(cfg, shape, mesh)
+        rec["peak_hbm_bytes"] = rec["memory_analytic"]["total"]
+        rec["fits_hbm"] = rec["peak_hbm_bytes"] <= HBM_PER_CHIP
+        text = compiled.as_text()
+        rec["collectives"] = hlo.collective_bytes(text, mesh.size)
+
+        if components and cfg.repeats > 1:
+            mode = "train" if shape.kind == "train" else (
+                "decode" if shape.kind == "decode" else "fwd")
+            gfn, gargs = steps.jit_layer_group(cfg, shape, mesh, mode)
+            gcompiled = gfn.lower(*gargs).compile()
+            gcost = hlo.cost_summary(gcompiled)
+            gcoll = hlo.collective_bytes(gcompiled.as_text(), mesh.size)
+            rec["group_cost"] = gcost
+            rec["group_collectives"] = gcoll
+            rec["cost_corrected"] = hlo.corrected(rec["cost"], gcost,
+                                                  cfg.repeats)
+            rec["collectives_corrected"] = hlo.corrected(
+                rec["collectives"], gcoll, cfg.repeats)
+        else:
+            rec["cost_corrected"] = dict(rec["cost"])
+            rec["collectives_corrected"] = dict(rec["collectives"])
+    rec["ok"] = True
+    return rec
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--mesh", default="both",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--out", default="benchmarks/results/dryrun.json")
+    ap.add_argument("--no-components", action="store_true")
+    ap.add_argument("--force", action="store_true",
+                    help="recompute cells already in the cache")
+    args = ap.parse_args()
+
+    archs = names() if args.arch == "all" else args.arch.split(",")
+    shapes = list(SHAPES) if args.shape == "all" else args.shape.split(",")
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+
+    os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+    results = {}
+    if os.path.exists(args.out):
+        # always keep the cache; --force only recomputes *selected* cells
+        with open(args.out) as f:
+            results = json.load(f)
+
+    n_fail = 0
+    for multi in meshes:
+        mesh_name = "pod2x16x16" if multi else "pod16x16"
+        mesh = make_production_mesh(multi_pod=multi)
+        for arch in archs:
+            for shape in shapes:
+                key = f"{arch}|{shape}|{mesh_name}"
+                if key in results and results[key].get("ok") \
+                        and not args.force:
+                    print(f"[cached] {key}")
+                    continue
+                print(f"[dryrun] {key} ...", flush=True)
+                try:
+                    rec = run_cell(arch, shape, mesh, mesh_name,
+                                   components=not args.no_components)
+                except Exception as e:  # record the failure, keep going
+                    rec = {"arch": arch, "shape": shape, "mesh": mesh_name,
+                           "ok": False, "error": f"{type(e).__name__}: {e}",
+                           "traceback": traceback.format_exc()[-2000:]}
+                    n_fail += 1
+                results[key] = rec
+                with open(args.out, "w") as f:
+                    json.dump(results, f, indent=1, sort_keys=True)
+                status = ("SKIP" if rec.get("skipped")
+                          else "ok" if rec.get("ok") else "FAIL")
+                extra = ""
+                if rec.get("ok") and not rec.get("skipped"):
+                    hbm = rec["peak_hbm_bytes"] / 1e9
+                    extra = (f" hbm={hbm:.2f}GB fits={rec['fits_hbm']}"
+                             f" flops={rec['cost_corrected']['flops']:.3g}"
+                             f" lower={rec['t_lower_s']}s"
+                             f" compile={rec['t_compile_s']}s")
+                print(f"[dryrun] {key}: {status}{extra}", flush=True)
+
+    n_ok = sum(1 for r in results.values() if r.get("ok"))
+    print(f"\ndone: {n_ok} ok / {len(results)} total, {n_fail} new failures")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,113 @@
+"""HLO-derived cost extraction for the roofline analysis.
+
+``cost_analysis()`` supplies per-device FLOPs and bytes accessed;
+collective bytes are parsed from the compiled HLO text (they are absent
+from cost_analysis).  XLA counts a while(scan) body ONCE, so totals are
+corrected with standalone layer-group compiles:
+    total = full + (repeats - 1) * group.
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from typing import Dict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+}
+
+_SHAPE_RE = re.compile(r"(pred|[sub]\d+|bf16|f16|f32|f64)\[([\d,]*)\]")
+_COLL_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(?P<res>\([^)]*\)|[^\s]+)\s+"
+    r"(?P<op>all-reduce|all-gather|reduce-scatter|all-to-all|"
+    r"collective-permute)(?:-start)?\(", re.M)
+_GROUPS_RE = re.compile(r"replica_groups=(\{\{[^}]*\}[^,]*\}|\[[^\]]*\]"
+                        r"(?:<=\[\d+\])?)")
+
+
+def _shape_bytes(text: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(text):
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _group_size(line: str, n_devices: int) -> int:
+    m = _GROUPS_RE.search(line)
+    if not m:
+        return n_devices
+    g = m.group(1)
+    if g.startswith("{{"):
+        first = g[2:].split("}")[0]
+        return max(len([x for x in first.split(",") if x.strip() != ""]), 1)
+    # iota form: [n_groups,group_size]<=[total]
+    dims = [int(x) for x in re.findall(r"\d+", g.split("<=")[0])]
+    return dims[-1] if dims else n_devices
+
+
+def collective_bytes(hlo_text: str, n_devices: int) -> Dict[str, float]:
+    """Per-device link bytes per collective kind (ring-algorithm model):
+      all-reduce       2 * size * (g-1)/g     (size = operand/result)
+      all-gather       size * (g-1)/g         (size = gathered result)
+      reduce-scatter   size * (g-1)           (size = scattered result)
+      all-to-all       size * (g-1)/g
+      collective-permute  size
+    """
+    out: Dict[str, float] = defaultdict(float)
+    for m in _COLL_RE.finditer(hlo_text):
+        line = hlo_text[m.start():hlo_text.find("\n", m.start())]
+        op = m.group("op")
+        size = _shape_bytes(m.group("res"))
+        g = max(_group_size(line, n_devices), 1)
+        if op == "all-reduce":
+            moved = 2.0 * size * (g - 1) / g
+        elif op == "all-gather":
+            moved = size * (g - 1) / g
+        elif op == "reduce-scatter":
+            moved = size * (g - 1)
+        elif op == "all-to-all":
+            moved = size * (g - 1) / g
+        else:  # collective-permute
+            moved = float(size)
+        out[op] += moved
+        out["total"] += moved
+    return dict(out)
+
+
+def cost_summary(compiled) -> Dict[str, float]:
+    ca = compiled.cost_analysis()
+    if isinstance(ca, list):
+        ca = ca[0]
+    return {"flops": float(ca.get("flops", 0.0)),
+            "bytes": float(ca.get("bytes accessed", 0.0))}
+
+
+def memory_summary(compiled) -> Dict[str, float]:
+    ma = compiled.memory_analysis()
+    return {
+        "argument_bytes": float(ma.argument_size_in_bytes),
+        "output_bytes": float(ma.output_size_in_bytes),
+        "temp_bytes": float(ma.temp_size_in_bytes),
+        "alias_bytes": float(ma.alias_size_in_bytes),
+        "code_bytes": float(ma.generated_code_size_in_bytes),
+    }
+
+
+def peak_hbm_bytes(mem: Dict[str, float]) -> float:
+    """Live bytes: arguments + outputs + temporaries - aliased (donated
+    inputs reuse their buffers for outputs)."""
+    return (mem["argument_bytes"] + mem["output_bytes"]
+            + mem["temp_bytes"] - mem["alias_bytes"])
+
+
+def corrected(full: Dict[str, float], group: Dict[str, float],
+              repeats: int) -> Dict[str, float]:
+    out = {}
+    for k in set(full) | set(group):
+        out[k] = full.get(k, 0.0) + (repeats - 1) * group.get(k, 0.0)
+    return out

@@ -1,0 +1,29 @@
+"""Production mesh construction.
+
+Pure functions (no module-level jax device-state access) so importing this
+module never locks the backend: ``dryrun.py`` must set
+XLA_FLAGS=--xla_force_host_platform_device_count=512 before any jax import.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """Single pod: (data=16, model=16) = 256 chips (TPU v5e-256).
+    Multi-pod: (pod=2, data=16, model=16) = 512 chips; the "pod" axis is
+    the data-center-network data-parallel dimension."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes,
+        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def make_test_mesh(*, multi_pod: bool = False):
+    """Miniature mesh for CI on 8 host devices: (2,2,2) or (2,4)."""
+    if multi_pod:
+        return jax.make_mesh((2, 2, 2), ("pod", "data", "model"),
+                             axis_types=(jax.sharding.AxisType.Auto,) * 3)
+    return jax.make_mesh((2, 4), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)

@@ -1,0 +1,87 @@
+"""Serving driver: batched prefill + chunked decode, executor-ready.
+
+The engine exposes device work in bounded-duration chunks (``decode_chunk``)
+so the real-time executor can preempt between chunks — the TPU analogue of
+the paper's thread-block-granularity preemption window.
+
+  PYTHONPATH=src python -m repro.launch.serve --arch smollm-135m --reduced \
+      --batch 4 --prompt-len 32 --decode 64
+"""
+from __future__ import annotations
+
+import argparse
+import time
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs import get
+from ..models import transformer
+
+
+class InferenceEngine:
+    def __init__(self, cfg, params=None, max_len: int = 256, seed: int = 0):
+        self.cfg = cfg
+        self.params = params if params is not None else \
+            transformer.init_params(cfg, jax.random.PRNGKey(seed))
+        self.max_len = max_len
+        self._prefill = jax.jit(
+            lambda p, t: transformer.prefill(cfg, p, t, max_len))
+        self._decode = jax.jit(
+            lambda p, c, tok, pos: transformer.decode_step(cfg, p, c, tok,
+                                                           pos))
+        self.cache = None
+        self.pos = None
+        self.last_tok = None
+
+    def prefill_batch(self, tokens: jax.Array):
+        """tokens: (B, S).  Returns last-token logits."""
+        logits, self.cache, self.pos = self._prefill(self.params, tokens)
+        self.last_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return logits
+
+    def decode_chunk(self, n: int, greedy: bool = True):
+        """Generate ``n`` tokens; one jitted program per token (the
+        preemption boundary).  Returns (B, n) tokens."""
+        out = []
+        for _ in range(n):
+            logits, self.cache = self._decode(self.params, self.cache,
+                                              self.last_tok, self.pos)
+            self.pos = self.pos + 1
+            self.last_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+            out.append(self.last_tok)
+        return jnp.stack(out, axis=1)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--decode", type=int, default=64)
+    args = ap.parse_args()
+
+    entry = get(args.arch)
+    cfg = entry.reduced() if args.reduced else entry.config()
+    eng = InferenceEngine(cfg, max_len=args.prompt_len + args.decode + 8)
+    toks = jax.random.randint(jax.random.PRNGKey(1),
+                              (args.batch, args.prompt_len), 0,
+                              cfg.vocab_size)
+    t0 = time.perf_counter()
+    eng.prefill_batch(toks)
+    t1 = time.perf_counter()
+    out = eng.decode_chunk(args.decode)
+    jax.block_until_ready(out)
+    t2 = time.perf_counter()
+    print(f"prefill {args.batch}x{args.prompt_len}: {(t1 - t0) * 1e3:.1f} ms")
+    per_tok = (t2 - t1) * 1e3 / args.decode
+    print(f"decode {args.decode} tokens: {per_tok:.2f} ms/tok "
+          f"({args.batch * 1e3 / per_tok / 1e3:.1f} tok/s aggregate)")
+    print("sample:", np.asarray(out[0, :16]))
+
+
+if __name__ == "__main__":
+    main()

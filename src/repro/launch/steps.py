@@ -1,0 +1,285 @@
+"""Step builders + input specs shared by the dry-run, the trainer and the
+server.  Everything returns pure functions ready for jax.jit with explicit
+shardings; nothing here touches devices."""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.shapes import ShapeSpec
+from ..models import transformer
+from ..models.blocks import ModelConfig
+from ..optim import adamw
+from ..parallel import sharding as shd
+from ..parallel.hints import set_hook
+
+
+# --------------------------------------------------------------------------
+# input specs (ShapeDtypeStruct stand-ins — weak-type-correct, shardable,
+# no device allocation)
+# --------------------------------------------------------------------------
+
+def batch_specs(cfg: ModelConfig, shape: ShapeSpec) -> Dict[str, Any]:
+    b, s = shape.global_batch, shape.seq_len
+    if cfg.input_mode == "embeddings":
+        inputs = jax.ShapeDtypeStruct((b, s, cfg.d_model), jnp.bfloat16)
+    else:
+        inputs = jax.ShapeDtypeStruct((b, s), jnp.int32)
+    out = {"inputs": inputs,
+           "labels": jax.ShapeDtypeStruct((b, s), jnp.int32)}
+    if any(sp.kind == "cross" for sp in cfg.pattern):
+        out["source"] = jax.ShapeDtypeStruct(
+            (b, cfg.cross_source_len, cfg.d_model), jnp.bfloat16)
+    return out
+
+
+def decode_input_specs(cfg: ModelConfig, shape: ShapeSpec
+                       ) -> Dict[str, Any]:
+    b = shape.global_batch
+    if cfg.input_mode == "embeddings":
+        token = jax.ShapeDtypeStruct((b, cfg.d_model), jnp.bfloat16)
+    else:
+        token = jax.ShapeDtypeStruct((b,), jnp.int32)
+    return {"token": token, "pos": jax.ShapeDtypeStruct((b,), jnp.int32)}
+
+
+def param_specs(cfg: ModelConfig):
+    return transformer.param_specs(cfg)
+
+
+def opt_specs(cfg: ModelConfig):
+    return jax.eval_shape(adamw.init_opt_state, transformer.param_specs(cfg))
+
+
+def cache_specs(cfg: ModelConfig, shape: ShapeSpec):
+    return jax.eval_shape(
+        lambda: transformer.init_cache(cfg, shape.global_batch,
+                                       shape.seq_len))
+
+
+# --------------------------------------------------------------------------
+# step functions
+# --------------------------------------------------------------------------
+
+def build_train_step(cfg: ModelConfig,
+                     opt_cfg: adamw.AdamWConfig = adamw.AdamWConfig()):
+    """One optimizer step; cfg.grad_accum > 1 splits the global batch into
+    microbatches accumulated in fp32 (python-unrolled: activation memory
+    scales 1/grad_accum and XLA cost_analysis stays exact)."""
+    acc = max(cfg.grad_accum, 1)
+
+    def train_step(params, opt_state, batch):
+        if acc == 1:
+            loss, grads = jax.value_and_grad(
+                lambda p: transformer.lm_loss(cfg, p, batch))(params)
+        else:
+            loss = 0.0
+            grads = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            mb_size = batch["labels"].shape[0] // acc
+            for i in range(acc):
+                mb = {k: v[i * mb_size:(i + 1) * mb_size]
+                      for k, v in batch.items()}
+                li, gi = jax.value_and_grad(
+                    lambda p: transformer.lm_loss(cfg, p, mb))(params)
+                loss = loss + li / acc
+                grads = jax.tree.map(
+                    lambda a, g: a + g.astype(jnp.float32) / acc, grads, gi)
+        params, opt_state, om = adamw.adamw_update(opt_cfg, grads,
+                                                   opt_state, params)
+        return params, opt_state, {"loss": loss, **om}
+
+    return train_step
+
+
+def build_prefill_step(cfg: ModelConfig, max_len: int):
+    def prefill_step(params, batch):
+        return transformer.prefill(cfg, params, batch["inputs"], max_len,
+                                   source=batch.get("source"))
+
+    return prefill_step
+
+
+def build_decode_step(cfg: ModelConfig):
+    def decode_step(params, cache, token, pos):
+        return transformer.decode_step(cfg, params, cache, token, pos)
+
+    return decode_step
+
+
+# --------------------------------------------------------------------------
+# sharding assembly: everything jit needs for one (arch x shape x mesh) cell
+# --------------------------------------------------------------------------
+
+def jit_cell(cfg: ModelConfig, shape: ShapeSpec, mesh,
+             opt_cfg: adamw.AdamWConfig = adamw.AdamWConfig()):
+    """Returns (jitted_fn, arg_specs) for the cell's step kind, with
+    explicit in/out shardings and donation, plus the hint hook installed."""
+    n = shd.named
+    pspecs = transformer.param_specs(cfg)
+    p_sh = n(mesh, shd.param_pspecs(cfg, mesh, pspecs))
+    set_hook(shd.make_hint_hook(cfg, mesh, shape.global_batch,
+                                shape.seq_len))
+    bax = shd.batch_pspec(mesh, shape.global_batch, cfg.sharding_profile)[0]
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    if shape.kind == "train":
+        o_specs = opt_specs(cfg)
+        o_sh = n(mesh, shd.zero1_pspecs(
+            mesh, o_specs, {"m": shd.param_pspecs(cfg, mesh, pspecs),
+                            "v": shd.param_pspecs(cfg, mesh, pspecs),
+                            "step": P()}))
+        b_specs = batch_specs(cfg, shape)
+        b_sh = n(mesh, shd.input_pspecs(cfg, mesh, "train",
+                                        shape.global_batch))
+        b_sh = {k: b_sh[k] for k in b_specs}
+        metr_sh = {"loss": NamedSharding(mesh, P()),
+                   "lr": NamedSharding(mesh, P()),
+                   "grad_norm": NamedSharding(mesh, P())}
+        fn = jax.jit(build_train_step(cfg, opt_cfg),
+                     in_shardings=(p_sh, o_sh, b_sh),
+                     out_shardings=(p_sh, o_sh, metr_sh),
+                     donate_argnums=(0, 1))
+        return fn, (pspecs, o_specs, b_specs)
+
+    if shape.kind == "prefill":
+        b_specs = batch_specs(cfg, shape)
+        b_sh = n(mesh, shd.input_pspecs(cfg, mesh, "prefill",
+                                        shape.global_batch))
+        b_sh = {k: b_sh[k] for k in b_specs}
+        c_specs = cache_specs(cfg, shape)
+        c_sh = n(mesh, shd.cache_pspecs(cfg, mesh, c_specs,
+                                        shape.global_batch))
+        out_sh = (NamedSharding(mesh, P(bax, None)), c_sh,
+                  NamedSharding(mesh, P(bax)))
+        fn = jax.jit(build_prefill_step(cfg, shape.seq_len),
+                     in_shardings=(p_sh, b_sh), out_shardings=out_sh)
+        return fn, (pspecs, b_specs)
+
+    if shape.kind == "decode":
+        c_specs = cache_specs(cfg, shape)
+        c_sh = n(mesh, shd.cache_pspecs(cfg, mesh, c_specs,
+                                        shape.global_batch))
+        d_specs = decode_input_specs(cfg, shape)
+        tok_sp = P(bax) if cfg.input_mode == "tokens" else P(bax, None)
+        fn = jax.jit(build_decode_step(cfg),
+                     in_shardings=(p_sh, c_sh,
+                                   NamedSharding(mesh, tok_sp),
+                                   NamedSharding(mesh, P(bax))),
+                     out_shardings=(NamedSharding(mesh, P(bax, None)), c_sh),
+                     donate_argnums=(1,))
+        return fn, (pspecs, c_specs, d_specs["token"], d_specs["pos"])
+
+    raise ValueError(shape.kind)
+
+
+# --------------------------------------------------------------------------
+# per-layer-group component (scan-body cost correction, see DESIGN.md)
+# --------------------------------------------------------------------------
+
+def jit_layer_group(cfg: ModelConfig, shape: ShapeSpec, mesh,
+                    mode: str):
+    """Compile one pattern-group application standalone so its cost can be
+    multiplied by (repeats - 1): XLA's cost_analysis counts a scan body
+    once.  mode: "train" (fwd+bwd via vjp) or "fwd"."""
+    import numpy as np
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    pspecs = transformer.param_specs(cfg)
+    group_specs = jax.tree.map(
+        lambda l: jax.ShapeDtypeStruct(l.shape[1:], l.dtype),
+        pspecs["blocks"])
+    group_psh = jax.tree.map(
+        lambda sp: P(*sp[1:]),
+        shd.param_pspecs(cfg, mesh, pspecs)["blocks"],
+        is_leaf=lambda x: isinstance(x, P))
+
+    b = shape.global_batch
+    s = shape.seq_len if shape.kind != "decode" else 1
+    x_spec = jax.ShapeDtypeStruct((b, s, cfg.d_model), cfg.dtype)
+    has_cross = any(sp.kind == "cross" for sp in cfg.pattern)
+    src_spec = jax.ShapeDtypeStruct(
+        (b, cfg.cross_source_len, cfg.d_model), cfg.dtype) if has_cross \
+        else None
+    positions = np.arange(s)
+
+    def group_fwd(gp, x, source):
+        pos = jnp.asarray(positions)
+        for i, spec in enumerate(cfg.pattern):
+            apply = functools.partial(transformer._apply_block, cfg, spec)
+            if cfg.remat and mode == "train":
+                apply = jax.checkpoint(
+                    apply, policy=getattr(jax.checkpoint_policies,
+                                          cfg.remat_policy))
+            x, _ = apply(gp[i], x, pos, source)
+        return x
+
+    set_hook(shd.make_hint_hook(cfg, mesh, shape.global_batch, s))
+    bax = shd.batch_pspec(mesh, shape.global_batch, cfg.sharding_profile)[0]
+    tp = mesh.shape.get("model", 1)
+    s_ax = "model" if (cfg.sharding_profile != "fsdp_dp"
+                       and s % tp == 0 and s >= tp) else None
+    x_sh = NamedSharding(mesh, P(bax, s_ax, None))
+    src_sh = NamedSharding(mesh, P(bax, None, None)) if has_cross else None
+
+    if mode == "train":
+        def fn(gp, x, ct, source=None):
+            y, vjp = jax.vjp(lambda g, xx: group_fwd(g, xx, source), gp, x)
+            return vjp(ct)
+
+        args = (group_specs, x_spec, x_spec) + ((src_spec,) if has_cross
+                                                else ())
+        in_sh = (shd.named(mesh, group_psh), x_sh, x_sh) + (
+            (src_sh,) if has_cross else ())
+        return jax.jit(fn, in_shardings=in_sh), args
+
+    if mode == "decode":
+        from ..models import blocks as blk
+        c_specs = cache_specs(cfg, shape)
+        c_slice = jax.tree.map(
+            lambda l: jax.ShapeDtypeStruct(l.shape[1:], l.dtype), c_specs)
+        c_psh = jax.tree.map(
+            lambda sp: P(*sp[1:]),
+            shd.cache_pspecs(cfg, mesh, c_specs, shape.global_batch),
+            is_leaf=lambda x: isinstance(x, P))
+        pos_spec = jax.ShapeDtypeStruct((b,), jnp.int32)
+        x1_spec = jax.ShapeDtypeStruct((b, 1, cfg.d_model), cfg.dtype)
+
+        def fn(gp, gc, x, pos):
+            new_c = []
+            for i, spec in enumerate(cfg.pattern):
+                p, c = gp[i], gc[i]
+                if spec.kind == "attn":
+                    x, c = blk.attention_block_decode(cfg, p["core"], x, c,
+                                                      pos)
+                elif spec.kind == "cross":
+                    x, c = blk.attention_block_decode(cfg, p["core"], x, c,
+                                                      pos, is_cross=True)
+                elif spec.kind == "mamba":
+                    x, c = blk.mamba_block_decode(cfg, p["core"], x, c)
+                elif spec.kind == "rwkv":
+                    x, c = blk.rwkv_block_decode(cfg, p["core"], x, c)
+                if "ffn" in p:
+                    if spec.moe:
+                        x = blk.moe_block(cfg, p["ffn"], x, no_drop=True)
+                    else:
+                        x = blk.mlp_block(cfg, p["ffn"], x)
+                new_c.append(c)
+            return x, tuple(new_c)
+
+        in_sh = (shd.named(mesh, group_psh), shd.named(mesh, c_psh),
+                 NamedSharding(mesh, P(bax, None, None)),
+                 NamedSharding(mesh, P(bax)))
+        return jax.jit(fn, in_shardings=in_sh), \
+            (group_specs, c_slice, x1_spec, pos_spec)
+
+    def fn(gp, x, source=None):
+        return group_fwd(gp, x, source)
+
+    args = (group_specs, x_spec) + ((src_spec,) if has_cross else ())
+    in_sh = (shd.named(mesh, group_psh), x_sh) + ((src_sh,) if has_cross
+                                                  else ())
+    return jax.jit(fn, in_shardings=in_sh), args

@@ -1,0 +1,7 @@
+from .blocks import BlockSpec, ModelConfig
+from .transformer import (decode_step, forward, init_cache, init_params,
+                          lm_loss, param_count, param_specs, prefill)
+
+__all__ = ["BlockSpec", "ModelConfig", "decode_step", "forward",
+           "init_cache", "init_params", "lm_loss", "param_count",
+           "param_specs", "prefill"]

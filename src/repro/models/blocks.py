@@ -1,0 +1,508 @@
+"""Transformer / SSM building blocks shared by all 10 architectures.
+
+Everything is a pure function of (config, params, inputs).  Parameters are
+plain dict pytrees created by the matching ``init_*`` functions; stacking
+over layers is handled by models.transformer.
+
+Conventions:
+  x            : (B, S, d_model) activations, cfg.dtype (bf16 by default)
+  params       : weights in cfg.dtype; norm weights in fp32
+  head layout  : (B, S, H, head_dim)
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..kernels import ops
+
+
+# --------------------------------------------------------------------------
+# config
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class BlockSpec:
+    kind: str          # "attn" | "cross" | "mamba" | "rwkv"
+    moe: bool = False  # FFN of this block is a mixture of experts
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    pattern: Tuple[BlockSpec, ...] = (BlockSpec("attn"),)
+    head_dim: Optional[int] = None           # default d_model // n_heads
+    norm: str = "rms"                         # "rms" | "nonparam"
+    moe_experts: int = 0
+    moe_top_k: int = 0
+    moe_capacity: float = 1.25
+    window: Optional[int] = None              # sliding-window attention
+    rope_theta: float = 10_000.0
+    cross_source_len: int = 64                # stub frontend tokens (vlm/audio)
+    input_mode: str = "tokens"                # "tokens" | "embeddings"
+    mamba_d_state: int = 16
+    mamba_d_conv: int = 4
+    mamba_expand: int = 2
+    rwkv_head_dim: int = 64
+    attn_chunk: int = 2048                    # flash KV-chunk (ref path)
+    mlp_variant: str = "swiglu"               # "swiglu" | "gelu" | "relu2"
+    tie_embeddings: bool = False
+    dtype: Any = jnp.bfloat16
+    sharding_profile: str = "tp"              # "tp" | "hybrid"
+    fsdp: bool = False                        # ZeRO-3: params over data axes
+    grad_accum: int = 1                       # microbatched grad accumulation
+    remat: bool = True
+    remat_policy: str = "nothing_saveable"    # or "dots_with_no_batch_dims_saveable"
+    loss_chunks: int = 8                      # seq-chunked xent (memory)
+    moe_seq_chunks: int = 4                   # chunked MoE dispatch (memory)
+
+    def __post_init__(self):
+        if self.n_layers % len(self.pattern) != 0:
+            raise ValueError("n_layers must be a multiple of the pattern")
+        if self.head_dim is None:
+            object.__setattr__(self, "head_dim", self.d_model // self.n_heads)
+
+    @property
+    def repeats(self) -> int:
+        return self.n_layers // len(self.pattern)
+
+    @property
+    def mamba_d_inner(self) -> int:
+        return self.mamba_expand * self.d_model
+
+    @property
+    def rwkv_heads(self) -> int:
+        return self.d_model // self.rwkv_head_dim
+
+    def block_at(self, layer: int) -> BlockSpec:
+        return self.pattern[layer % len(self.pattern)]
+
+
+# --------------------------------------------------------------------------
+# norms / rope
+# --------------------------------------------------------------------------
+
+def rms_norm(x: jax.Array, weight: Optional[jax.Array]) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + 1e-6)
+    if weight is not None:
+        out = out * weight
+    return out.astype(x.dtype)
+
+
+def nonparametric_ln(x: jax.Array) -> jax.Array:
+    """OLMo-style LayerNorm without adaptive gain/bias."""
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    return ((xf - mu) * jax.lax.rsqrt(var + 1e-5)).astype(x.dtype)
+
+
+def norm(cfg: ModelConfig, w: Optional[jax.Array], x: jax.Array) -> jax.Array:
+    if cfg.norm == "nonparam":
+        return nonparametric_ln(x)
+    return rms_norm(x, w)
+
+
+def rope(q: jax.Array, k: jax.Array, positions: jax.Array,
+         theta: float) -> Tuple[jax.Array, jax.Array]:
+    """Rotary embeddings.  q,k: (B, S, H, D); positions: (S,) or (B, S)."""
+    d = q.shape[-1]
+    half = d // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    if positions.ndim == 1:
+        ang = positions.astype(jnp.float32)[None, :, None] * freqs[None, None]
+    else:
+        ang = positions.astype(jnp.float32)[:, :, None] * freqs[None, None]
+    cos, sin = jnp.cos(ang)[..., None, :], jnp.sin(ang)[..., None, :]
+
+    def rot(t):
+        t1, t2 = t[..., :half], t[..., half:]
+        return jnp.concatenate([t1 * cos - t2 * sin,
+                                t2 * cos + t1 * sin], axis=-1).astype(t.dtype)
+
+    return rot(q), rot(k)
+
+
+# --------------------------------------------------------------------------
+# attention blocks
+# --------------------------------------------------------------------------
+
+def init_attention(cfg: ModelConfig, key, cross: bool = False) -> dict:
+    d, hd = cfg.d_model, cfg.head_dim
+    h, hkv = cfg.n_heads, cfg.n_kv_heads
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    scale = d ** -0.5
+    p = {
+        "wq": jax.random.normal(k1, (d, h * hd), cfg.dtype) * scale,
+        "wk": jax.random.normal(k2, (d, hkv * hd), cfg.dtype) * scale,
+        "wv": jax.random.normal(k3, (d, hkv * hd), cfg.dtype) * scale,
+        "wo": jax.random.normal(k4, (h * hd, d), cfg.dtype) * scale,
+    }
+    if cfg.norm == "rms":
+        p["norm_w"] = jnp.ones((d,), jnp.float32)
+    return p
+
+
+def _split_heads(t: jax.Array, n: int) -> jax.Array:
+    b, s, _ = t.shape
+    return t.reshape(b, s, n, -1)
+
+
+def attention_block(cfg: ModelConfig, p: dict, x: jax.Array,
+                    positions: jax.Array,
+                    source: Optional[jax.Array] = None):
+    """Self- or cross-attention with pre-norm and residual.
+
+    Returns (x_out, (k, v)) — the per-layer keys/values feed prefill cache
+    population (k/v are post-RoPE for self-attention)."""
+    h = norm(cfg, p.get("norm_w"), x)
+    q = _split_heads(h @ p["wq"], cfg.n_heads)
+    kv_src = norm(cfg, p.get("norm_w"), source) if source is not None else h
+    k = _split_heads(kv_src @ p["wk"], cfg.n_kv_heads)
+    v = _split_heads(kv_src @ p["wv"], cfg.n_kv_heads)
+    if source is None:
+        q, k = rope(q, k, positions, cfg.rope_theta)
+        out = ops.attention(q, k, v, causal=True, window=cfg.window,
+                            chunk=cfg.attn_chunk)
+    else:
+        out = ops.attention(q, k, v, causal=False, window=None)
+    b, s, _, _ = out.shape
+    return x + out.reshape(b, s, -1) @ p["wo"], (k, v)
+
+
+def attention_block_decode(cfg: ModelConfig, p: dict, x: jax.Array,
+                           cache: dict, pos: jax.Array,
+                           is_cross: bool = False) -> Tuple[jax.Array, dict]:
+    """One-token attention; cache: {k: (B,Smax,Hkv,D), v: ...}.
+
+    Sliding-window caches are ring buffers of size ``window``: the write
+    slot is pos % Smax and, once full, every slot is a valid key (exactly
+    the last ``window`` positions)."""
+    b = x.shape[0]
+    h = norm(cfg, p.get("norm_w"), x)          # (B, 1, d)
+    q = _split_heads(h @ p["wq"], cfg.n_heads)  # (B,1,H,D)
+    if is_cross:
+        # cross-attention reads the (precomputed) source cache only
+        out = ops.attention(q, cache["k"], cache["v"], causal=False)
+        return x + out.reshape(b, 1, -1) @ p["wo"], cache
+    k_new = _split_heads(h @ p["wk"], cfg.n_kv_heads)
+    v_new = _split_heads(h @ p["wv"], cfg.n_kv_heads)
+    q, k_new = rope(q, k_new, pos.reshape(b, 1), cfg.rope_theta)
+    smax = cache["k"].shape[1]
+    slot = pos % smax
+    cache_len = jnp.minimum(pos + 1, smax)
+    k_cache = _write_at(cache["k"], k_new, slot)
+    v_cache = _write_at(cache["v"], v_new, slot)
+    out = ops.decode_attention(q[:, 0], k_cache, v_cache, cache_len)
+    new_cache = {"k": k_cache, "v": v_cache}
+    return x + out.reshape(b, 1, -1) @ p["wo"], new_cache
+
+
+def _write_at(cache: jax.Array, new: jax.Array, pos: jax.Array) -> jax.Array:
+    """Scatter (B,1,H,D) into (B,Smax,H,D) at per-batch position pos.
+
+    A true scatter (not a full-cache select): with donated caches XLA
+    updates rows in place instead of rewriting the whole buffer — the
+    §Perf decode-path fix."""
+    b = cache.shape[0]
+    pos = jnp.broadcast_to(jnp.asarray(pos), (b,))
+    return cache.at[jnp.arange(b), pos].set(new[:, 0].astype(cache.dtype))
+
+
+# --------------------------------------------------------------------------
+# MLP / MoE
+# --------------------------------------------------------------------------
+
+def init_mlp(cfg: ModelConfig, key) -> dict:
+    d, f = cfg.d_model, cfg.d_ff
+    k1, k2, k3 = jax.random.split(key, 3)
+    scale = d ** -0.5
+    p = {
+        "wi": jax.random.normal(k1, (d, f), cfg.dtype) * scale,
+        "wo": jax.random.normal(k3, (f, d), cfg.dtype) * (f ** -0.5),
+    }
+    if cfg.mlp_variant == "swiglu":
+        p["wg"] = jax.random.normal(k2, (d, f), cfg.dtype) * scale
+    if cfg.norm == "rms":
+        p["norm_w"] = jnp.ones((d,), jnp.float32)
+    return p
+
+
+def mlp_block(cfg: ModelConfig, p: dict, x: jax.Array) -> jax.Array:
+    h = norm(cfg, p.get("norm_w"), x)
+    up = h @ p["wi"]
+    if cfg.mlp_variant == "swiglu":
+        up = up * jax.nn.silu(h @ p["wg"])
+    elif cfg.mlp_variant == "relu2":
+        up = jnp.square(jax.nn.relu(up))       # minitron/nemotron
+    else:
+        up = jax.nn.gelu(up)                   # musicgen
+    return x + up @ p["wo"]
+
+
+def init_moe(cfg: ModelConfig, key) -> dict:
+    d, f, e = cfg.d_model, cfg.d_ff, cfg.moe_experts
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    scale = d ** -0.5
+    p = {
+        "router": jax.random.normal(k1, (d, e), jnp.float32) * scale,
+        "wi": jax.random.normal(k2, (e, d, f), cfg.dtype) * scale,
+        "wg": jax.random.normal(k3, (e, d, f), cfg.dtype) * scale,
+        "wo": jax.random.normal(k4, (e, f, d), cfg.dtype) * (f ** -0.5),
+    }
+    if cfg.norm == "rms":
+        p["norm_w"] = jnp.ones((d,), jnp.float32)
+    return p
+
+
+def moe_block(cfg: ModelConfig, p: dict, x: jax.Array,
+              no_drop: bool = False) -> jax.Array:
+    """Top-k token-choice MoE with capacity-bounded gather dispatch.
+
+    Tokens are routed to their top-k experts; each expert processes at most
+    C = ceil(k * T / E * capacity_factor) tokens (overflow is dropped, the
+    standard GShard discipline).  Dispatch/combine use gather/scatter so
+    compute is E*C*d*f (active FLOPs), not dense all-experts.
+    ``no_drop`` (decode path, where T = batch is tiny) sets C = T so
+    single-token steps are capacity-loss-free.
+
+    Long sequences are dispatched in ``cfg.moe_seq_chunks`` chunks with
+    per-chunk capacity C/chunks, bounding the token-gather working set
+    (the chunked-capacity discipline slightly redistributes drops).
+    """
+    b, s, d = x.shape
+    h = norm(cfg, p.get("norm_w"), x)
+    flat = h.reshape(-1, d)                                  # (T, d)
+    t = flat.shape[0]
+    nc = cfg.moe_seq_chunks if (t > 65536 and not no_drop
+                                and t % cfg.moe_seq_chunks == 0) else 1
+    parts = []
+    for i in range(nc):
+        parts.append(_moe_dispatch(cfg, p, flat[i * (t // nc):
+                                                (i + 1) * (t // nc)],
+                                   no_drop))
+    out = jnp.concatenate(parts, axis=0) if nc > 1 else parts[0]
+    return x + out.reshape(b, s, d)
+
+
+def _moe_dispatch(cfg: ModelConfig, p: dict, flat: jax.Array,
+                  no_drop: bool) -> jax.Array:
+    from ..parallel.hints import shard_hint
+    d = flat.shape[-1]
+    e, k = cfg.moe_experts, cfg.moe_top_k
+    t = flat.shape[0]
+    cap = t if no_drop \
+        else int(max(1, -(-k * t * cfg.moe_capacity // e)))  # ceil
+
+    logits = (flat @ p["router"].astype(flat.dtype)).astype(jnp.float32)
+    gates, eidx = jax.lax.top_k(logits, k)                   # (T, k)
+    gates = jax.nn.softmax(gates, axis=-1)
+
+    # position of each (token, slot) within its expert
+    onehot = jax.nn.one_hot(eidx, e, dtype=jnp.int32)        # (T, k, E)
+    flat_oh = onehot.reshape(t * k, e)
+    pos_in_e = jnp.cumsum(flat_oh, axis=0) * flat_oh - 1     # (T*k, E)
+    pos = jnp.max(pos_in_e, axis=-1).reshape(t, k)           # (T, k)
+    keep = pos < cap
+
+    # scatter token ids into (E, C) slots
+    slot_e = eidx.reshape(-1)                                # (T*k,)
+    slot_c = jnp.where(keep, pos, cap).reshape(-1)           # overflow -> cap
+    tok_id = jnp.broadcast_to(jnp.arange(t)[:, None], (t, k)).reshape(-1)
+    slots = jnp.full((e, cap + 1), t, dtype=jnp.int32)       # t = pad token
+    slots = slots.at[slot_e, slot_c].set(tok_id)[:, :cap]    # (E, C)
+
+    padded = jnp.concatenate([flat, jnp.zeros((1, d), flat.dtype)], axis=0)
+    xin = shard_hint(padded[slots], "moe_in")                # (E, C, d)
+    up = shard_hint(jnp.einsum("ecd,edf->ecf", xin, p["wi"]), "moe_hidden")
+    gate = jax.nn.silu(jnp.einsum("ecd,edf->ecf", xin, p["wg"]))
+    xout = shard_hint(jnp.einsum("ecf,efd->ecd", up * gate, p["wo"]),
+                      "moe_in")                              # (E, C, d)
+
+    # combine: apply gates in slot space, then scatter-add back to tokens
+    gate_w = jnp.where(keep, gates, 0.0).astype(flat.dtype)  # (T, k)
+    gflat = jnp.zeros((e, cap + 1), flat.dtype)
+    gflat = gflat.at[slot_e, slot_c].set(gate_w.reshape(-1))[:, :cap]
+    out = jnp.zeros((t + 1, d), flat.dtype)
+    out = out.at[slots.reshape(-1)].add(
+        (xout * gflat[..., None]).reshape(-1, d))
+    return out[:t]
+
+
+# --------------------------------------------------------------------------
+# Mamba (S6) block
+# --------------------------------------------------------------------------
+
+def init_mamba(cfg: ModelConfig, key) -> dict:
+    d, di, n = cfg.d_model, cfg.mamba_d_inner, cfg.mamba_d_state
+    kc = cfg.mamba_d_conv
+    k1, k2, k3, k4, k5 = jax.random.split(key, 5)
+    scale = d ** -0.5
+    p = {
+        "in_proj": jax.random.normal(k1, (d, 2 * di), cfg.dtype) * scale,
+        "conv_w": jax.random.normal(k2, (kc, di), cfg.dtype) * 0.1,
+        "x_proj": jax.random.normal(k3, (di, 2 * n + 1), cfg.dtype)
+                  * di ** -0.5,
+        "dt_bias": jnp.zeros((di,), jnp.float32),
+        "A_log": jnp.log(jnp.broadcast_to(
+            jnp.arange(1, n + 1, dtype=jnp.float32), (di, n)).copy()),
+        "D": jnp.ones((di,), jnp.float32),
+        "out_proj": jax.random.normal(k4, (di, d), cfg.dtype) * di ** -0.5,
+    }
+    if cfg.norm == "rms":
+        p["norm_w"] = jnp.ones((d,), jnp.float32)
+    return p
+
+
+def _mamba_inner(cfg: ModelConfig, p: dict, h: jax.Array,
+                 conv_state=None, ssm_state=None, single_step=False):
+    di, n = cfg.mamba_d_inner, cfg.mamba_d_state
+    xz = h @ p["in_proj"]
+    xin, z = jnp.split(xz, 2, axis=-1)                      # (B,S,Di)
+    if single_step:
+        # conv_state: (B, kconv-1, Di) of previous inputs
+        win = jnp.concatenate([conv_state, xin], axis=1)    # (B,kc,Di)
+        conv = jnp.einsum("bkd,kd->bd", win, p["conv_w"])[:, None]
+        new_conv_state = win[:, 1:]
+    else:
+        kc = cfg.mamba_d_conv
+        pad = jnp.zeros(xin.shape[:1] + (kc - 1,) + xin.shape[2:], xin.dtype)
+        xpad = jnp.concatenate([pad, xin], axis=1)
+        conv = sum(xpad[:, i:i + xin.shape[1]] * p["conv_w"][i]
+                   for i in range(kc))
+        new_conv_state = xpad[:, xin.shape[1]:]             # last kc-1 inputs
+    conv = jax.nn.silu(conv)
+    proj = conv @ p["x_proj"]                               # (B,S,2N+1)
+    Bm, Cm, dt_raw = proj[..., :n], proj[..., n:2 * n], proj[..., 2 * n:]
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32)
+                         + p["dt_bias"][None, None])        # (B,S,1)
+    dt = jnp.broadcast_to(dt, conv.shape).astype(jnp.float32)
+    A = -jnp.exp(p["A_log"])
+    if single_step:
+        y, new_ssm = ops.mamba_decode_step(
+            conv[:, 0], dt[:, 0], A, Bm[:, 0].astype(jnp.float32),
+            Cm[:, 0].astype(jnp.float32), p["D"], ssm_state)
+        y = y[:, None]
+    else:
+        y, new_ssm = ops.mamba_scan(conv, dt, A, Bm.astype(jnp.float32),
+                                    Cm.astype(jnp.float32), p["D"], h0=ssm_state)
+    y = y * jax.nn.silu(z)
+    return y @ p["out_proj"], new_conv_state, new_ssm
+
+
+def mamba_block(cfg: ModelConfig, p: dict, x: jax.Array):
+    """Returns (x_out, {"conv", "ssm"}) — final states for prefill."""
+    h = norm(cfg, p.get("norm_w"), x)
+    out, conv_state, ssm_state = _mamba_inner(cfg, p, h)
+    return x + out, {"conv": conv_state, "ssm": ssm_state}
+
+
+def mamba_block_decode(cfg: ModelConfig, p: dict, x: jax.Array,
+                       cache: dict) -> Tuple[jax.Array, dict]:
+    h = norm(cfg, p.get("norm_w"), x)
+    out, conv_state, ssm_state = _mamba_inner(
+        cfg, p, h, conv_state=cache["conv"], ssm_state=cache["ssm"],
+        single_step=True)
+    return x + out, {"conv": conv_state, "ssm": ssm_state}
+
+
+# --------------------------------------------------------------------------
+# RWKV6 block (time-mix + channel-mix)
+# --------------------------------------------------------------------------
+
+def init_rwkv(cfg: ModelConfig, key) -> dict:
+    d, hd = cfg.d_model, cfg.rwkv_head_dim
+    h = cfg.rwkv_heads
+    ks = jax.random.split(key, 8)
+    scale = d ** -0.5
+    p = {
+        "mix_r": jnp.full((d,), 0.5, jnp.float32),
+        "mix_k": jnp.full((d,), 0.5, jnp.float32),
+        "mix_v": jnp.full((d,), 0.5, jnp.float32),
+        "mix_w": jnp.full((d,), 0.5, jnp.float32),
+        "wr": jax.random.normal(ks[0], (d, d), cfg.dtype) * scale,
+        "wk": jax.random.normal(ks[1], (d, d), cfg.dtype) * scale,
+        "wv": jax.random.normal(ks[2], (d, d), cfg.dtype) * scale,
+        "w0": jnp.full((d,), -4.0, jnp.float32),   # decay base
+        "w_lora_a": jax.random.normal(ks[3], (d, 64), cfg.dtype) * scale,
+        "w_lora_b": jax.random.normal(ks[4], (64, d), cfg.dtype) * 64 ** -0.5,
+        "u": jnp.zeros((h, hd), jnp.float32),      # per-head bonus
+        "wo": jax.random.normal(ks[5], (d, d), cfg.dtype) * scale,
+        "cm_k": jax.random.normal(ks[6], (d, cfg.d_ff), cfg.dtype) * scale,
+        "cm_v": jax.random.normal(ks[7], (cfg.d_ff, d), cfg.dtype)
+                * cfg.d_ff ** -0.5,
+        "cm_mix": jnp.full((d,), 0.5, jnp.float32),
+    }
+    if cfg.norm == "rms":
+        p["norm_w"] = jnp.ones((d,), jnp.float32)
+        p["norm_w2"] = jnp.ones((d,), jnp.float32)
+    return p
+
+
+def _token_shift(x: jax.Array, prev: Optional[jax.Array] = None) -> jax.Array:
+    """x_{t-1}: shift right by one along seq; prev fills position 0."""
+    pad = prev if prev is not None \
+        else jnp.zeros_like(x[:, :1])
+    return jnp.concatenate([pad, x[:, :-1]], axis=1)
+
+
+def _rwkv_time_mix(cfg: ModelConfig, p: dict, h: jax.Array,
+                   h_prev: jax.Array, state):
+    b, s, d = h.shape
+    nh, hd = cfg.rwkv_heads, cfg.rwkv_head_dim
+    mix = lambda m: h * m + h_prev * (1.0 - m)
+    r = (mix(p["mix_r"]).astype(cfg.dtype) @ p["wr"]).reshape(b, s, nh, hd)
+    k = (mix(p["mix_k"]).astype(cfg.dtype) @ p["wk"]).reshape(b, s, nh, hd)
+    v = (mix(p["mix_v"]).astype(cfg.dtype) @ p["wv"]).reshape(b, s, nh, hd)
+    # data-dependent decay (Finch): w = exp(-exp(w0 + lora(x)))
+    wx = mix(p["mix_w"]).astype(cfg.dtype)
+    w_log = p["w0"] + (jax.nn.tanh(wx @ p["w_lora_a"]) @ p["w_lora_b"]) \
+        .astype(jnp.float32)
+    w = jnp.exp(-jnp.exp(w_log)).reshape(b, s, nh, hd)
+    if s == 1 and state is not None:
+        out, new_state = ops.rwkv6_decode_step(
+            r[:, 0], k[:, 0], v[:, 0], w[:, 0], p["u"], state)
+        out = out[:, None]
+    else:
+        out, new_state = ops.rwkv6_scan(r, k, v, w, p["u"], s0=state)
+    return out.reshape(b, s, d) @ p["wo"], new_state
+
+
+def _rwkv_channel_mix(cfg: ModelConfig, p: dict, h: jax.Array,
+                      h_prev: jax.Array):
+    mixed = h * p["cm_mix"] + h_prev * (1.0 - p["cm_mix"])
+    k = jnp.square(jax.nn.relu(mixed.astype(cfg.dtype) @ p["cm_k"]))
+    return k @ p["cm_v"]
+
+
+def rwkv_block(cfg: ModelConfig, p: dict, x: jax.Array):
+    """Returns (x_out, {"wkv","shift_tm","shift_cm"}) for prefill."""
+    h = norm(cfg, p.get("norm_w"), x)
+    tm, wkv_state = _rwkv_time_mix(cfg, p, h, _token_shift(h), None)
+    x = x + tm
+    h2 = norm(cfg, p.get("norm_w2", p.get("norm_w")), x)
+    out = x + _rwkv_channel_mix(cfg, p, h2, _token_shift(h2))
+    return out, {"wkv": wkv_state, "shift_tm": h[:, -1:],
+                 "shift_cm": h2[:, -1:]}
+
+
+def rwkv_block_decode(cfg: ModelConfig, p: dict, x: jax.Array,
+                      cache: dict) -> Tuple[jax.Array, dict]:
+    h = norm(cfg, p.get("norm_w"), x)
+    tm, wkv_state = _rwkv_time_mix(cfg, p, h, cache["shift_tm"],
+                                   cache["wkv"])
+    x = x + tm
+    h2 = norm(cfg, p.get("norm_w2", p.get("norm_w")), x)
+    out = x + _rwkv_channel_mix(cfg, p, h2, cache["shift_cm"])
+    return out, {"wkv": wkv_state, "shift_tm": h, "shift_cm": h2}

@@ -1,0 +1,27 @@
+"""Sharding hints: the model code stays mesh-agnostic and calls
+``shard_hint(x, kind)`` at strategic points; the launch layer installs a
+hook that applies ``with_sharding_constraint`` with the profile's
+NamedSharding for that kind (or leaves x untouched on a single device).
+
+Kinds currently emitted:
+  residual   : (B, S, d) the inter-block residual stream (SP target)
+  logits     : (B, S, V) pre-loss logits
+"""
+from __future__ import annotations
+
+from typing import Callable, Optional
+
+import jax
+
+_HOOK: Optional[Callable] = None
+
+
+def set_hook(fn: Optional[Callable]) -> None:
+    global _HOOK
+    _HOOK = fn
+
+
+def shard_hint(x: jax.Array, kind: str) -> jax.Array:
+    if _HOOK is None:
+        return x
+    return _HOOK(x, kind)

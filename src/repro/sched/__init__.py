@@ -1,0 +1,10 @@
+from .admission import AdmissionController, JobProfile
+from .checkpointer import AsyncCheckpointer, latest_step, restore, save
+from .executor import DeviceExecutor
+from .fault import FaultTolerantLoop, Heartbeat, StallError, with_retry
+from .job import RTJob
+
+__all__ = ["AdmissionController", "JobProfile", "AsyncCheckpointer",
+           "latest_step", "restore", "save", "DeviceExecutor",
+           "FaultTolerantLoop", "Heartbeat", "StallError", "with_retry",
+           "RTJob"]

@@ -1,0 +1,42 @@
+"""Elastic scaling: re-shard a training state onto a different mesh.
+
+When nodes join or leave, the framework rebuilds the mesh and re-places the
+(checkpointed) state under the new sharding rules.  Because checkpoints are
+stored as full logical arrays (checkpointer.py) and sharding rules are pure
+functions of (config, mesh), rescaling is: save -> new mesh -> restore with
+the new NamedShardings -> recompile steps.  ``rescale`` packages that."""
+from __future__ import annotations
+
+from typing import Any, Callable, Tuple
+
+import jax
+
+from ..models.blocks import ModelConfig
+from ..parallel import sharding as shd
+from . import checkpointer
+
+
+def state_shardings(cfg: ModelConfig, mesh, state_specs) -> Any:
+    """NamedShardings for a {params, opt} training state on ``mesh``."""
+    from jax.sharding import PartitionSpec as P
+    p_ps = shd.param_pspecs(cfg, mesh, state_specs["params"])
+    out = {"params": p_ps}
+    if "opt" in state_specs:
+        out["opt"] = shd.zero1_pspecs(
+            mesh, state_specs["opt"],
+            {"m": p_ps, "v": p_ps, "step": P()})
+    return shd.named(mesh, out)
+
+
+def rescale(cfg: ModelConfig, ckpt_dir: str, state_like: Any,
+            new_mesh) -> Tuple[Any, Any]:
+    """Restore the newest checkpoint re-sharded for ``new_mesh``.
+
+    Returns (state, shardings).  The caller re-jits its step functions
+    with the returned shardings (compilation is mesh-specific)."""
+    shards = state_shardings(cfg, new_mesh, jax.eval_shape(
+        lambda: state_like) if not isinstance(state_like, dict)
+        else jax.tree.map(
+            lambda l: jax.ShapeDtypeStruct(l.shape, l.dtype), state_like))
+    state = checkpointer.restore(ckpt_dir, state_like, shardings=shards)
+    return state, shards

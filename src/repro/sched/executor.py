@@ -1,0 +1,202 @@
+"""Preemptive priority-based device executor — the TPU-native realization
+of the paper's runlist control (see DESIGN.md §2).
+
+The device (or mesh slice) executes one XLA program at a time; the
+executor's admission state decides *whose* programs may dispatch.  Two
+modes realize the paper's two approaches:
+
+  * ``notify`` (IOCTL approach): jobs bracket device segments with the
+    ``device_segment(job)`` context manager.  Admission follows Algorithm 2
+    verbatim over (task_running, task_pending); the runlist-update critical
+    section is guarded by a mutex (the rt_mutex analogue) and its measured
+    cost is the epsilon of the analysis (benchmarks/overhead.py).
+
+  * ``poll`` (kernel-thread approach): a scheduler thread polls job states
+    every ``poll_interval`` and reserves the device for the
+    highest-priority active real-time job at *job* granularity — no job
+    code changes (opaque jobs).
+
+Preemption takes effect at program boundaries: before each dispatch the
+executor re-checks that the calling job is still admitted (and otherwise
+waits, busy-spinning or suspending per ``wait_mode``).  Long device work
+should be chunked (microbatches / decode chunks) to bound the preemption
+delay — the epsilon analogue of thread-block-boundary preemption.
+"""
+from __future__ import annotations
+
+import threading
+import time
+from typing import Callable, List, Optional
+
+import jax
+
+from .job import RTJob
+
+
+class DeviceExecutor:
+    def __init__(self, mode: str = "notify", wait_mode: str = "suspend",
+                 poll_interval: float = 0.001):
+        assert mode in ("notify", "poll", "unmanaged")
+        assert wait_mode in ("busy", "suspend")
+        if mode == "poll" and wait_mode != "busy":
+            # Sec. V-A: self-suspension would be misread as a state change
+            wait_mode = "busy"
+        self.mode = mode
+        self.wait_mode = wait_mode
+        self.poll_interval = poll_interval
+        self._mutex = threading.Lock()      # runlist-update rt_mutex
+        self._cv = threading.Condition(self._mutex)
+        self.task_running: List[RTJob] = []  # Algorithm 2 state
+        self.task_pending: List[RTJob] = []
+        self.reserved: Optional[RTJob] = None  # poll mode reservation
+        self._active: List[RTJob] = []       # jobs currently in a release
+        self._device_lock = threading.Lock()  # serializes program dispatch
+        self.update_times: List[float] = []   # measured epsilon samples
+        self.dispatches = 0
+        self._poller: Optional[threading.Thread] = None
+        self._stop = threading.Event()
+        if mode == "poll":
+            self._poller = threading.Thread(target=self._poll_loop,
+                                            daemon=True, name="kthread")
+            self._poller.start()
+
+    # ------------------------------------------------------------------
+    # job lifecycle (state changes the polling scheduler watches)
+    # ------------------------------------------------------------------
+    def on_job_start(self, job: RTJob) -> None:
+        with self._mutex:
+            self._active.append(job)
+
+    def on_job_complete(self, job: RTJob) -> None:
+        with self._mutex:
+            if job in self._active:
+                self._active.remove(job)
+            if job in self.task_running:
+                self.task_running.remove(job)
+            if job in self.task_pending:
+                self.task_pending.remove(job)
+            if self.reserved is job:
+                self.reserved = None
+            self._cv.notify_all()
+
+    def shutdown(self) -> None:
+        self._stop.set()
+        if self._poller:
+            self._poller.join(timeout=1.0)
+
+    # ------------------------------------------------------------------
+    # poll mode: Algorithm 1 (job-granular reservation)
+    # ------------------------------------------------------------------
+    def _poll_loop(self) -> None:
+        prev: Optional[RTJob] = None
+        while not self._stop.is_set():
+            with self._mutex:
+                rt = [j for j in self._active if j.is_rt]
+                new = max(rt, key=lambda j: j.device_priority, default=None)
+                if new is not prev:
+                    t0 = time.perf_counter()
+                    self.reserved = new          # runlist rewrite
+                    self._cv.notify_all()
+                    self.update_times.append(time.perf_counter() - t0)
+                    prev = new
+            time.sleep(self.poll_interval)
+
+    # ------------------------------------------------------------------
+    # notify mode: Algorithm 2 (segment-granular admission)
+    # ------------------------------------------------------------------
+    def _ioctl_add(self, job: RTJob) -> None:
+        t0 = time.perf_counter()
+        if not job.is_rt:
+            if not any(j.is_rt for j in self.task_running):
+                self.task_running.append(job)
+            else:
+                self.task_pending.append(job)
+        else:
+            tau_h = max(self.task_running,
+                        key=lambda j: j.device_priority, default=None)
+            if tau_h is None or job.device_priority > tau_h.device_priority:
+                self.task_running.append(job)
+                if tau_h is not None:
+                    self.task_running.remove(tau_h)
+                    self.task_pending.append(tau_h)
+            else:
+                self.task_pending.append(job)
+        self.update_times.append(time.perf_counter() - t0)
+        self._cv.notify_all()
+
+    def _ioctl_remove(self, job: RTJob) -> None:
+        t0 = time.perf_counter()
+        rt_pend = [j for j in self.task_pending if j.is_rt]
+        if rt_pend:
+            tau_k = max(rt_pend, key=lambda j: j.device_priority)
+            self.task_pending.remove(tau_k)
+            self.task_running.append(tau_k)
+        else:
+            self.task_running.extend(self.task_pending)
+            self.task_pending.clear()
+        if job in self.task_running:
+            self.task_running.remove(job)
+        self.update_times.append(time.perf_counter() - t0)
+        self._cv.notify_all()
+
+    # ------------------------------------------------------------------
+    # admission check used at every program boundary
+    # ------------------------------------------------------------------
+    def _admitted(self, job: RTJob) -> bool:
+        if self.mode == "unmanaged":
+            return True
+        if self.mode == "poll":
+            return (self.reserved is job) or \
+                (self.reserved is None and not job.is_rt) or \
+                (self.reserved is None and job.is_rt)
+        if job not in self.task_running:
+            return False
+        rt = [j for j in self.task_running if j.is_rt]
+        if rt:
+            return job is max(rt, key=lambda j: j.device_priority)
+        return True
+
+    def _wait_admitted(self, job: RTJob) -> None:
+        if self.wait_mode == "busy":
+            while True:
+                with self._mutex:
+                    if self._admitted(job):
+                        return
+                time.sleep(0)  # busy-wait (yielding spin)
+        else:
+            with self._cv:
+                while not self._admitted(job):
+                    self._cv.wait(timeout=0.05)
+
+    # ------------------------------------------------------------------
+    # public API
+    # ------------------------------------------------------------------
+    class _Segment:
+        def __init__(self, ex: "DeviceExecutor", job: RTJob):
+            self.ex, self.job = ex, job
+
+        def __enter__(self):
+            if self.ex.mode == "notify":
+                with self.ex._mutex:
+                    self.ex._ioctl_add(self.job)
+            return self
+
+        def __exit__(self, *exc):
+            if self.ex.mode == "notify":
+                with self.ex._mutex:
+                    self.ex._ioctl_remove(self.job)
+            return False
+
+    def device_segment(self, job: RTJob) -> "_Segment":
+        """The single macro of the IOCTL approach (begin+end)."""
+        return DeviceExecutor._Segment(self, job)
+
+    def run(self, job: RTJob, program: Callable, *args, **kw):
+        """Dispatch one device program for ``job``; blocks until the result
+        is ready.  Re-checks admission first (preemption point)."""
+        self._wait_admitted(job)
+        with self._device_lock:
+            self.dispatches += 1
+            out = program(*args, **kw)
+            jax.block_until_ready(out)
+        return out

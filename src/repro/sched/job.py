@@ -1,0 +1,119 @@
+"""Real-time jobs for the device executor.
+
+An ``RTJob`` is the runtime realization of the paper's task model: its
+execution alternates host (CPU) segments and device (GPU) segments, it has
+a fixed priority (and an optionally distinct device priority, Sec. V-C),
+and it is released periodically.
+
+Two integration styles mirror the paper's two approaches:
+  * annotated jobs call ``executor.device_segment(job)`` around their
+    device work (the IOCTL approach's two macros collapse into one context
+    manager);
+  * opaque jobs only expose ``run_once()`` — the polling scheduler manages
+    them with no code changes (the kernel-thread approach).
+"""
+from __future__ import annotations
+
+import itertools
+import threading
+import time
+from dataclasses import dataclass, field
+from typing import Callable, List, Optional
+
+BEST_EFFORT = -1_000_000
+
+
+class JobState:
+    IDLE = "idle"
+    READY = "ready"
+    RUNNING = "running"
+    DONE = "done"
+
+
+@dataclass
+class JobStats:
+    releases: int = 0
+    completions: int = 0
+    response_times: List[float] = field(default_factory=list)
+    deadline_misses: int = 0
+
+    @property
+    def mort(self) -> float:
+        return max(self.response_times) if self.response_times else 0.0
+
+
+class RTJob:
+    """A periodically released job executing ``body(job, iteration)``.
+
+    ``body`` runs on the job's own thread; device segments inside it go
+    through the executor (which enforces preemptive priority scheduling at
+    program boundaries)."""
+
+    _uid = itertools.count()
+
+    def __init__(self, name: str, body: Callable, period_s: float,
+                 priority: int, deadline_s: Optional[float] = None,
+                 device_priority: Optional[int] = None,
+                 best_effort: bool = False, n_iterations: int = 1):
+        self.uid = next(RTJob._uid)
+        self.name = name
+        self.body = body
+        self.period_s = period_s
+        self.deadline_s = deadline_s or period_s
+        self.priority = BEST_EFFORT if best_effort else priority
+        self.device_priority = (self.priority if device_priority is None
+                                else device_priority)
+        self.best_effort = best_effort
+        self.n_iterations = n_iterations
+        self.state = JobState.IDLE
+        self.stats = JobStats()
+        self.release_time = 0.0
+        self._stop = threading.Event()
+        self._thread: Optional[threading.Thread] = None
+
+    @property
+    def is_rt(self) -> bool:
+        return not self.best_effort
+
+    # ------------------------------------------------------------------
+    def start(self, executor, stop_after_s: Optional[float] = None) -> None:
+        self._thread = threading.Thread(
+            target=self._run, args=(executor, stop_after_s),
+            name=f"job-{self.name}", daemon=True)
+        self._thread.start()
+
+    def stop(self) -> None:
+        self._stop.set()
+
+    def join(self, timeout: Optional[float] = None) -> None:
+        if self._thread:
+            self._thread.join(timeout)
+
+    def _run(self, executor, stop_after_s) -> None:
+        t0 = time.monotonic()
+        next_release = t0
+        for it in range(self.n_iterations):
+            if self._stop.is_set():
+                break
+            if stop_after_s is not None \
+                    and time.monotonic() - t0 >= stop_after_s:
+                break
+            now = time.monotonic()
+            if now < next_release:
+                time.sleep(next_release - now)
+            self.release_time = max(next_release, now)
+            next_release = self.release_time + self.period_s
+            self.state = JobState.RUNNING
+            self.stats.releases += 1
+            executor.on_job_start(self)
+            try:
+                self.body(self, it)
+            finally:
+                executor.on_job_complete(self)
+            resp = time.monotonic() - self.release_time
+            self.stats.completions += 1
+            self.stats.response_times.append(resp)
+            if resp > self.deadline_s and self.is_rt:
+                self.stats.deadline_misses += 1
+            self.state = JobState.READY
+        self.state = JobState.DONE

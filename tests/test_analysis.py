@@ -1,0 +1,123 @@
+"""Unit tests for the response-time analyses (Lemmas 1-7) on hand-solvable
+tasksets, plus structural properties (monotonicity, improved <= baseline)."""
+import math
+
+import pytest
+
+from repro.core import (GenParams, GpuSegment, Task, Taskset, bx_cpu_segment,
+                        bx_gpu_segment, generate_taskset,
+                        ioctl_busy_improved_rta, ioctl_busy_rta,
+                        ioctl_suspend_improved_rta, ioctl_suspend_rta,
+                        kthread_busy_rta, kthread_K, overlap_cg, overlap_gc,
+                        schedulable)
+
+
+def two_task_set(eps=0.5):
+    th = Task("hi", [1.0], [GpuSegment(0.5, 2.0)], 20.0, 20.0, 0, 20)
+    tl = Task("lo", [2.0, 1.0], [GpuSegment(0.5, 3.0)], 60.0, 60.0, 0, 10)
+    return Taskset([th, tl], n_cpus=1, epsilon=eps, kthread_cpu=1)
+
+
+def test_kthread_rta_hand_computed():
+    ts = two_task_set(eps=0.5)
+    R = kthread_busy_rta(ts)
+    # hi: no higher-priority tasks; K = 2*eps (own update pair)
+    # R = C + G + K = 1 + 2.5 + 1.0 = 4.5
+    assert R["hi"] == pytest.approx(4.5, abs=1e-9)
+    # lo: C=3, G=3.5; K = 2e + ceil((R+Jh)/20)*2e, Jh = 4.5-3.5 = 1.0
+    # hpp interference: ceil(R/20)*(C_h+G_h) = ceil(R/20)*3.5
+    # fixed point: R = 6.5 + (1+1) + 3.5 = 12.0
+    assert R["lo"] == pytest.approx(12.0, abs=1e-9)
+
+
+def test_ioctl_busy_rta_hand_computed():
+    ts = two_task_set(eps=0.5)
+    R = ioctl_busy_rta(ts)
+    # hi: C + G* + (eta+1)eps = 1 + (2.5+1.0) + 2*0.5 = 5.5
+    assert R["hi"] == pytest.approx(5.5, abs=1e-9)
+    # lo: C + G* + 2eps + ceil(R/20)*(C_h+G_h^*+stretch)
+    #   = 3 + 4.5 + 1.0 + 1*(1+3.5+1.0) = 14.0 (corrected)
+    assert R["lo"] == pytest.approx(14.0, abs=1e-9)
+    # verbatim (no busy-stretch): 13.0
+    Rv = ioctl_busy_rta(ts, corrected=False)
+    assert Rv["lo"] == pytest.approx(13.0, abs=1e-9)
+
+
+def test_ioctl_suspend_rta_hand_computed():
+    ts = two_task_set(eps=0.5)
+    R = ioctl_suspend_rta(ts)
+    assert R["hi"] == pytest.approx(5.5, abs=1e-9)
+    # lo: 3 + 4.5 + 1.0
+    #   + ceil((R+J_h^c)/20)*(C_h + G_h^{m*}) ; J_h^c = 5.5-1.5 = 4.0
+    #   + ceil((R+J_h^g)/20)*G_h^e           ; J_h^g = 5.5-2.0 = 3.5
+    # R = 8.5 + 1*(1+1.5) + 1*2.0 = 13.0
+    assert R["lo"] == pytest.approx(13.0, abs=1e-9)
+
+
+def test_epsilon_monotonicity():
+    for eps in (0.1, 0.5, 1.0):
+        a = ioctl_busy_rta(two_task_set(eps=eps))
+        b = ioctl_busy_rta(two_task_set(eps=eps + 0.1))
+        for k in a:
+            assert a[k] <= b[k] + 1e-12
+
+
+@pytest.mark.parametrize("seed", range(30))
+def test_improved_never_worse_than_baseline(seed):
+    ts = generate_taskset(seed, GenParams())
+    base_b = ioctl_busy_rta(ts)
+    imp_b = ioctl_busy_improved_rta(ts)
+    base_s = ioctl_suspend_rta(ts)
+    imp_s = ioctl_suspend_improved_rta(ts)
+    for t in ts.rt_tasks:
+        assert imp_b[t.name] <= base_b[t.name] + 1e-9
+        assert imp_s[t.name] <= base_s[t.name] + 1e-9
+
+
+def test_overlap_terms_positive_when_periods_allow():
+    """A long pure-GPU segment of the low-priority task fully contains
+    several short high-priority CPU jobs: O^cg must be positive."""
+    th = Task("hi", [0.5], [], 2.0, 2.0, 0, 20)
+    tl = Task("lo", [1.0], [GpuSegment(0.0, 10.0)], 50.0, 50.0, 0, 10)
+    ts = Taskset([th, tl], n_cpus=1, epsilon=0.1, kthread_cpu=1)
+    bx = bx_gpu_segment(ts, tl, 0)
+    assert bx == pytest.approx(10.0, abs=1e-9)  # hi has no GPU work
+    # floor(10/2)-1 = 4 fully-contained hi jobs, each C=0.5
+    assert overlap_cg(ts, tl, th) == pytest.approx(2.0, abs=1e-9)
+    # and the improved analysis is strictly tighter for lo
+    base = ioctl_busy_rta(ts)
+    imp = ioctl_busy_improved_rta(ts)
+    assert imp["lo"] < base["lo"] - 1.0
+
+
+def test_overlap_gc_symmetric():
+    th = Task("hi", [0.1], [GpuSegment(0.0, 0.4)], 2.0, 2.0, 0, 20)
+    tl = Task("lo", [10.0], [GpuSegment(0.0, 1.0)], 50.0, 50.0, 1, 10)
+    ts = Taskset([th, tl], n_cpus=2, epsilon=0.1, kthread_cpu=2)
+    bx = bx_cpu_segment(ts, tl, 0)
+    assert bx == pytest.approx(10.0, abs=1e-9)  # hi is on another core
+    # floor(10/2)-1 = 4 contained hi jobs, each Ge=0.4
+    assert overlap_gc(ts, tl, th) == pytest.approx(1.6, abs=1e-9)
+
+
+def test_kthread_K_cpu_only_remote_core_is_zero_verbatim():
+    t_gpu = Task("g", [1.0], [GpuSegment(0.1, 1.0)], 10.0, 10.0, 0, 20)
+    t_cpu = Task("c", [1.0], [], 10.0, 10.0, 1, 10)
+    ts = Taskset([t_gpu, t_cpu], n_cpus=2, epsilon=0.5, kthread_cpu=2)
+    R = {}
+    assert kthread_K(ts, t_cpu, 5.0, R, corrected=False) == 0.0
+    # corrected: still 0 — no same-core GPU-using higher-priority task
+    assert kthread_K(ts, t_cpu, 5.0, R, corrected=True) == 0.0
+    # but a same-core GPU-using HP task flips x_i on
+    t_cpu2 = Task("c2", [1.0], [], 10.0, 10.0, 0, 10)
+    ts2 = Taskset([t_gpu, t_cpu2], n_cpus=1, epsilon=0.5, kthread_cpu=2)
+    assert kthread_K(ts2, t_cpu2, 5.0, R, corrected=True) > 0.0
+
+
+def test_unschedulable_detection():
+    t1 = Task("a", [8.0], [GpuSegment(0.0, 8.0)], 10.0, 10.0, 0, 20)
+    t2 = Task("b", [8.0], [], 10.0, 10.0, 0, 10)
+    ts = Taskset([t1, t2], n_cpus=1, epsilon=0.5, kthread_cpu=1)
+    R = ioctl_busy_rta(ts)
+    assert math.isinf(R["b"])
+    assert not schedulable(ts, ioctl_busy_rta)

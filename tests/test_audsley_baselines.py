@@ -1,0 +1,117 @@
+"""GPU-segment priority assignment (Sec. V-C) and the MPCP/FMLP+ baseline
+analyses (Sec. VII-A.1)."""
+import math
+
+import pytest
+
+from repro.core import (GenParams, GpuSegment, Task, Taskset,
+                        assign_gpu_priorities, fmlp_busy_rta,
+                        fmlp_schedulable, fmlp_suspend_rta, generate_taskset,
+                        ioctl_busy_rta, mpcp_busy_rta, mpcp_schedulable,
+                        schedulable, schedulable_with_assignment, simulate)
+
+
+def fig5b_taskset():
+    """Sec. V-C/VI-B's motivating scenario: tau1 has high CPU priority and a
+    long GPU kernel; tau2 has a tight deadline and a short kernel that gets
+    stuck behind tau1's under default (CPU==GPU) priorities.  Swapping the
+    *GPU segment* priorities rescues tau2 without hurting tau1's slack."""
+    t1 = Task("tau1", [1.0], [GpuSegment(0.1, 20.0)], 60.0, 60.0, 0, 30)
+    t2 = Task("tau2", [1.0], [GpuSegment(0.1, 1.0)], 30.0, 8.0, 1, 20)
+    return Taskset([t1, t2], n_cpus=2, epsilon=0.1, kthread_cpu=2)
+
+
+def test_audsley_rescues_unschedulable_taskset():
+    ts = fig5b_taskset()
+    assert not schedulable(ts, ioctl_busy_rta)
+    assigned = assign_gpu_priorities(ts, ioctl_busy_rta)
+    assert assigned is not None
+    # tau2's GPU segment must have been raised above tau1's
+    a = {t.name: t.gpu_priority for t in assigned.tasks}
+    assert a["tau2"] > a["tau1"]
+    assert schedulable_with_assignment(ts, ioctl_busy_rta)
+
+
+def test_audsley_preserves_same_core_order():
+    """Relative GPU priority order on one core must match CPU order."""
+    for seed in range(30):
+        ts = generate_taskset(seed, GenParams())
+        assigned = assign_gpu_priorities(ts, ioctl_busy_rta)
+        if assigned is None:
+            continue
+        by_cpu = {}
+        for t in assigned.rt_tasks:
+            if t.uses_gpu:
+                by_cpu.setdefault(t.cpu, []).append(t)
+        for tasks in by_cpu.values():
+            tasks.sort(key=lambda t: t.priority)
+            for a, b in zip(tasks, tasks[1:]):
+                assert a.gpu_priority < b.gpu_priority
+
+
+def test_audsley_assignment_is_simulated_safe():
+    """The assigned priorities drive the ioctl runtime: still schedulable,
+    and tau2's observed response stays within its (GPU-priority) bound."""
+    ts = fig5b_taskset()
+    assigned = assign_gpu_priorities(ts, ioctl_busy_rta)
+    res = simulate(assigned, "ioctl", mode="busy", horizon=800.0)
+    assert sum(res.deadline_misses.values()) == 0
+    R = ioctl_busy_rta(assigned, use_gpu_prio=True)
+    assert res.mort["tau2"] <= R["tau2"] + 1e-6
+
+
+# ---------------------------------------------------------------------------
+# baselines
+# ---------------------------------------------------------------------------
+
+def test_fmlp_fifo_blocking_grows_with_contenders():
+    """FIFO blocking scales with the number of GPU users."""
+    def make(n):
+        tasks = [Task(f"g{k}", [1.0], [GpuSegment(0.1, 2.0)],
+                      100.0 + k, 100.0 + k, k % 2, 50 - k)
+                 for k in range(n)]
+        return Taskset(tasks, n_cpus=2, epsilon=0.0, kthread_cpu=2)
+    r2 = fmlp_busy_rta(make(2))
+    r4 = fmlp_busy_rta(make(4))
+    assert r4["g0"] > r2["g0"]
+
+
+def test_mpcp_highest_priority_blocked_once():
+    """Under MPCP the top task waits at most one lower-priority section."""
+    t1 = Task("hi", [1.0], [GpuSegment(0.0, 1.0)], 50.0, 50.0, 0, 30)
+    t2 = Task("lo", [1.0], [GpuSegment(0.0, 5.0)], 200.0, 200.0, 1, 10)
+    ts = Taskset([t1, t2], n_cpus=2, epsilon=0.0, kthread_cpu=2)
+    R = mpcp_busy_rta(ts)
+    # C + G + one lower-priority gcs = 1 + 1 + 5 = 7
+    assert R["hi"] == pytest.approx(7.0, abs=1e-9)
+
+
+def test_baselines_bound_sync_simulation():
+    """MPCP/FMLP+ analyses bound the corresponding lock-based schedules."""
+    for seed in range(25):
+        ts = generate_taskset(seed, GenParams(n_cpus=2, tasks_per_cpu=(2, 4),
+                                              epsilon=0.0))
+        horizon = 6 * max(t.period for t in ts.tasks)
+        for rta, appr, mode in [(mpcp_busy_rta, "sync_priority", "busy"),
+                                (mpcp_suspend_like, "sync_priority", "suspend"),
+                                (fmlp_busy_rta, "sync_fifo", "busy")]:
+            R = rta(ts)
+            res = simulate(ts, appr, mode=mode, horizon=horizon)
+            for t in ts.rt_tasks:
+                b = R[t.name]
+                if b is None or math.isinf(b):
+                    continue
+                assert res.mort[t.name] <= b + 1e-6, (
+                    f"seed={seed} {rta.__name__} {t.name}: "
+                    f"{res.mort[t.name]:.4f} > {b:.4f}")
+
+
+def mpcp_suspend_like(ts):
+    from repro.core import mpcp_suspend_rta
+    return mpcp_suspend_rta(ts)
+
+
+def test_schedulable_frontends():
+    ts = generate_taskset(0, GenParams())
+    assert isinstance(mpcp_schedulable(ts), bool)
+    assert isinstance(fmlp_schedulable(ts), bool)

@@ -1,0 +1,111 @@
+"""Hand-computed schedule tests in the style of the paper's Fig. 3.
+
+Three tasks, priority tau1 > tau2 > tau3; tau1 alone on core 0, tau2/tau3 on
+core 1.  Under the synchronization-based approach tau1 is blocked by the
+long GPU segment of tau3 that is already holding the GPU; the IOCTL-based
+approach preempts tau3's GPU execution; the kernel-thread approach reserves
+the GPU for tau1's whole job from its release (paying epsilon on tau1's
+core, mirroring the paper's '5.5 + epsilon' observation).
+
+Every expected number below is derived by hand from the piece-level
+semantics documented in repro.core.simulator.
+"""
+import math
+
+import pytest
+
+from repro.core import (GpuSegment, Task, Taskset, ioctl_busy_rta,
+                        kthread_busy_rta, simulate)
+
+EPS = 0.25
+
+
+def fig3_taskset(epsilon=EPS, kthread_cpu=0):
+    t1 = Task("tau1", cpu_segments=[2.5, 1.0],
+              gpu_segments=[GpuSegment(0.0, 2.0)],
+              period=100.0, deadline=100.0, cpu=0, priority=30)
+    t2 = Task("tau2", cpu_segments=[1.0, 0.7],
+              gpu_segments=[GpuSegment(0.0, 0.8)],
+              period=100.0, deadline=100.0, cpu=1, priority=20)
+    t3 = Task("tau3", cpu_segments=[0.5, 1.0],
+              gpu_segments=[GpuSegment(0.0, 4.0)],
+              period=100.0, deadline=100.0, cpu=1, priority=10)
+    return Taskset([t1, t2, t3], n_cpus=2, epsilon=epsilon,
+                   kthread_cpu=kthread_cpu)
+
+
+def test_sync_priority_suspend_blocking():
+    """tau3 grabs the GPU before tau1 requests it; non-preemptive access
+    blocks tau1 for nearly tau3's whole 4-unit kernel."""
+    ts = fig3_taskset()
+    res = simulate(ts, "sync_priority", mode="suspend", horizon=100.0)
+    # tau2 holds GPU 1.0-1.8, tau3 1.8-5.8; tau1 requests at 2.5, waits,
+    # runs ge 5.8-7.8 and final CPU 7.8-8.8.
+    assert res.mort["tau1"] == pytest.approx(8.8, abs=1e-6)
+    assert res.mort["tau2"] == pytest.approx(2.5, abs=1e-6)
+    assert res.mort["tau3"] == pytest.approx(6.8, abs=1e-6)
+
+
+def test_ioctl_busy_preempts_gpu():
+    """Segment-level preemption: tau1's GPU work overtakes tau3's."""
+    ts = fig3_taskset()
+    res = simulate(ts, "ioctl", mode="busy", horizon=100.0)
+    # tau1: cpu 0-2.5, begin-update 2.5-2.75, ge 2.75-4.75,
+    #       end-update 4.75-5.0, cpu 5.0-6.0.
+    assert res.mort["tau1"] == pytest.approx(6.0, abs=1e-6)
+    # tau2: begin 1.0-1.25, ge 1.25-2.05, end 2.05-2.3, cpu 2.3-3.0.
+    assert res.mort["tau2"] == pytest.approx(3.0, abs=1e-6)
+    # tau3: pending from 3.5, promoted by tau1's end-update at 5.0,
+    #       ge 5.0-9.0, end 9.0-9.25, cpu 9.25-10.25.
+    assert res.mort["tau3"] == pytest.approx(10.25, abs=1e-6)
+    # preemption beats the synchronization-based schedule for tau1
+    sync = simulate(fig3_taskset(), "sync_priority", mode="suspend",
+                    horizon=100.0)
+    assert res.mort["tau1"] < sync.mort["tau1"]
+
+
+def test_kthread_busy_response_is_5_5_plus_eps():
+    """Job-granular reservation: tau1's response is its stand-alone time
+    plus exactly one runlist rewrite on its own core (the paper's
+    '5.5 + epsilon' shape in Fig. 3b)."""
+    ts = fig3_taskset(kthread_cpu=0)
+    res = simulate(ts, "kthread", mode="busy", horizon=100.0)
+    standalone = 2.5 + 2.0 + 1.0
+    assert res.mort["tau1"] == pytest.approx(standalone + EPS, abs=1e-6)
+    # tau2 waits for tau1's whole job (GPU reserved), then a rewrite:
+    # ge 6.0-6.8, cpu 6.8-7.5.
+    assert res.mort["tau2"] == pytest.approx(7.5, abs=1e-6)
+    assert res.mort["tau3"] == pytest.approx(13.0, abs=1e-6)
+
+
+def test_kthread_epsilon_scaling():
+    """Doubling epsilon shifts tau1's kthread response by exactly 2x."""
+    r1 = simulate(fig3_taskset(epsilon=0.25), "kthread", horizon=100.0)
+    r2 = simulate(fig3_taskset(epsilon=0.5), "kthread", horizon=100.0)
+    assert r2.mort["tau1"] - r1.mort["tau1"] == pytest.approx(0.25, abs=1e-6)
+
+
+def test_unmanaged_round_robin_shares_gpu():
+    """Default-driver time slicing: concurrent kernels interleave, so the
+    highest-priority task's kernel is inflated by its GPU-sharing peers."""
+    t1 = Task("t1", [0.0], [GpuSegment(0.0, 2.0)], 50.0, 50.0, 0, 30)
+    t2 = Task("t2", [0.0], [GpuSegment(0.0, 2.0)], 50.0, 50.0, 1, 20)
+    ts = Taskset([t1, t2], n_cpus=2, epsilon=0.0)
+    res = simulate(ts, "unmanaged", mode="busy", horizon=50.0)
+    # both kernels time-slice: combined makespan 4.0; t1 finishes within
+    # [2.0, 4.0] and the loser at 4.0.
+    assert max(res.mort["t1"], res.mort["t2"]) == pytest.approx(4.0, abs=1e-6)
+    assert min(res.mort["t1"], res.mort["t2"]) >= 2.0 - 1e-9
+
+
+def test_analysis_bounds_fig3():
+    """Analytic WCRTs bound the simulated responses on the Fig. 3 taskset."""
+    ts = fig3_taskset()
+    res_k = simulate(fig3_taskset(), "kthread", horizon=400.0)
+    res_i = simulate(fig3_taskset(), "ioctl", mode="busy", horizon=400.0)
+    Rk = kthread_busy_rta(ts)
+    Ri = ioctl_busy_rta(ts)
+    for name in ("tau1", "tau2", "tau3"):
+        assert not math.isinf(Rk[name])
+        assert res_k.mort[name] <= Rk[name] + 1e-6
+        assert res_i.mort[name] <= Ri[name] + 1e-6

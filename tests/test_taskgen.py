@@ -1,0 +1,79 @@
+"""Taskset generation (Table II) — structural invariants + hypothesis
+property tests on UUniFast."""
+import random
+
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import GenParams, generate_taskset, uunifast
+
+
+@given(st.integers(0, 10_000), st.integers(1, 20),
+       st.floats(0.05, 4.0))
+@settings(max_examples=200, deadline=None)
+def test_uunifast_sums_and_positivity(seed, n, total):
+    utils = uunifast(random.Random(seed), n, total)
+    assert len(utils) == n
+    assert all(u >= 0 for u in utils)
+    assert sum(utils) == pytest.approx(total, rel=1e-9)
+
+
+@pytest.mark.parametrize("seed", range(50))
+def test_taskset_structure(seed):
+    p = GenParams()
+    ts = generate_taskset(seed, p)
+    n = len(ts.tasks)
+    assert 3 * p.n_cpus <= n <= 6 * p.n_cpus
+    prios = [t.priority for t in ts.tasks]
+    assert len(set(prios)) == n
+    # RM: strictly shorter period => strictly higher priority
+    rt = sorted(ts.tasks, key=lambda t: t.period)
+    for a, b in zip(rt, rt[1:]):
+        assert a.priority > b.priority or a.period == b.period
+    for t in ts.tasks:
+        assert t.deadline == t.period
+        if t.uses_gpu:
+            assert 1 <= t.eta_g <= 3
+            assert t.eta_c == t.eta_g + 1
+            ratio = t.G / t.C
+            assert 0.15 <= ratio <= 2.1  # G/C in [0.2, 2] up to split noise
+            for g in t.gpu_segments:
+                assert 0 < g.misc < g.total
+        else:
+            assert t.eta_g == 0
+
+
+@pytest.mark.parametrize("seed", range(20))
+def test_utilization_within_bounds(seed):
+    ts = generate_taskset(seed, GenParams())
+    per_cpu = {}
+    for t in ts.tasks:
+        per_cpu[t.cpu] = per_cpu.get(t.cpu, 0.0) + t.utilization
+    for cpu, u in per_cpu.items():
+        assert u <= 0.6 + 1e-6
+
+
+def test_best_effort_ratio():
+    p = GenParams(best_effort_ratio=0.5)
+    ts = generate_taskset(3, p)
+    n_be = sum(1 for t in ts.tasks if t.best_effort)
+    assert n_be == round(0.5 * len(ts.tasks))
+    for t in ts.tasks:
+        if t.best_effort:
+            assert t.priority < min(x.priority for x in ts.rt_tasks)
+
+
+def test_bcet_ratio_applied():
+    p = GenParams(bcet_ratio=0.7)
+    ts = generate_taskset(0, p)
+    for t in ts.tasks:
+        assert t.C_best == pytest.approx(0.7 * t.C, rel=1e-9)
+        for g in t.gpu_segments:
+            assert g.exec_best == pytest.approx(0.7 * g.exec, rel=1e-9)
+
+
+def test_n_tasks_total_override():
+    p = GenParams(n_tasks_total=10)
+    ts = generate_taskset(1, p)
+    assert len(ts.tasks) == 10
