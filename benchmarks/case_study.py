@@ -175,11 +175,14 @@ def run_case_study(duration_s: float = 8.0, modes=None) -> List[dict]:
     ]
 
     rows = []
-    modes = modes or [("unmanaged", "suspend"), ("poll", "busy"),
-                      ("notify", "busy"), ("notify", "suspend")]
+    # scheduling approaches by registry name (core.policy); the legacy
+    # executor mode names would work too, but the registry names are the
+    # single shared vocabulary of simulator, analysis, and runtime
+    modes = modes or [("unmanaged", "suspend"), ("kthread", "busy"),
+                      ("ioctl", "busy"), ("ioctl", "suspend")]
     for mode, wait in modes:
-        label = {"unmanaged": "unmanaged", "poll": "kthread_busy"}.get(
-            mode, f"ioctl_{wait}")
+        label = {"unmanaged": "unmanaged", "poll": "kthread_busy",
+                 "kthread": "kthread_busy"}.get(mode, f"ioctl_{wait}")
         wcrt = {}
         if mode != "unmanaged":
             ac = AdmissionController(mode=mode, wait_mode=wait, n_cpus=1,
@@ -189,7 +192,7 @@ def run_case_study(duration_s: float = 8.0, modes=None) -> List[dict]:
                 if res["wcrt"]:
                     wcrt = {k: v for k, v in res["wcrt"].items()
                             if v is not None}
-        ex = DeviceExecutor(mode=mode, wait_mode=wait)
+        ex = DeviceExecutor(policy=mode, wait_mode=wait)
         jobs = make_jobs(w, ex)
         for j in jobs:
             j.start(ex, stop_after_s=duration_s)

@@ -30,10 +30,34 @@ def _csv(name: str, t_us: float, derived: str) -> None:
     print(f"{name},{t_us:.1f},{derived}")
 
 
+def bench_policies():
+    """Simulate a small fixed taskset under EVERY registered scheduling
+    policy (resolved by name from repro.core.policy) — a new policy
+    registered anywhere shows up here with no further edits."""
+    from repro.core import (GenParams, available_policies, generate_taskset,
+                            simulate)
+    ts = generate_taskset(0, GenParams(n_cpus=2, tasks_per_cpu=(2, 3),
+                                       epsilon=0.5))
+    ts.kthread_cpu = ts.n_cpus
+    horizon = 4 * max(t.period for t in ts.tasks)
+    rows = []
+    t0 = time.time()
+    for name in available_policies():
+        res = simulate(ts, name, horizon=horizon)
+        rows.append({"policy": name,
+                     "max_mort_ms": round(max(res.mort.values()), 3),
+                     "misses": sum(res.deadline_misses.values())})
+    _save("policies", rows)
+    per = (time.time() - t0) * 1e6 / max(len(rows), 1)
+    _csv("policy_registry_sim", per,
+         "policies=" + "|".join(r["policy"] for r in rows))
+    return rows
+
+
 def bench_schedulability(n: int):
     from benchmarks import schedulability
     t0 = time.time()
-    rows = schedulability.run(n)
+    rows = schedulability.run(n, workers=schedulability.default_workers())
     _save("schedulability", rows)
     per = (time.time() - t0) * 1e6 / max(len(rows) * n * 5, 1)
     # headline: peak advantage of our best approach over the best baseline
@@ -118,6 +142,8 @@ def main() -> None:
         return only is None or name in only
 
     print("name,us_per_call,derived")
+    if want("policies"):
+        bench_policies()
     if want("schedulability"):
         bench_schedulability(n)
     if want("prio"):

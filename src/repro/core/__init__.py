@@ -3,38 +3,51 @@ Scheduling for Real-Time GPU Tasks' (Wang, Liu, Wong, Kim, 2024).
 
 Public API:
   task model      : Task, GpuSegment, Taskset
+  policy registry : SchedulingPolicy, register_policy, make_policy,
+                    available_policies, policy_spec, Alg2State, pick_reserved
+  engine          : EventDrivenEngine (heap-based event queue)
   analyses        : kthread_busy_rta, ioctl_busy_rta, ioctl_suspend_rta,
                     ioctl_busy_improved_rta, ioctl_suspend_improved_rta,
-                    schedulable
+                    schedulable, fold_to_device
   baselines       : mpcp_schedulable, fmlp_schedulable (+ *_rta variants)
   priority assign : assign_gpu_priorities, schedulable_with_assignment
   generation      : GenParams, generate_taskset, uunifast
   simulation      : Simulator, simulate, SimResult
 """
-from .analysis import (ioctl_busy_rta, ioctl_suspend_rta, kthread_busy_rta,
-                       kthread_K, schedulable)
+from .analysis import (fold_to_device, ioctl_busy_rta, ioctl_suspend_rta,
+                       kthread_busy_rta, kthread_K, schedulable)
 from .audsley import assign_gpu_priorities, schedulable_with_assignment
 from .baselines import (fmlp_busy_rta, fmlp_schedulable, fmlp_suspend_rta,
                         mpcp_busy_rta, mpcp_schedulable, mpcp_suspend_rta)
+from .engine import EventDrivenEngine
 from .improved import ioctl_busy_improved_rta, ioctl_suspend_improved_rta
 from .ioctl import IoctlPolicy
 from .kthread import KernelThreadPolicy
 from .overlap import bx_cpu_segment, bx_gpu_segment, overlap_cg, overlap_gc
-from .runlist import Runlist, SyncPolicy, TSG, UnmanagedPolicy
+from .policy import (Alg2State, BasePolicy, SchedulingPolicy,
+                     available_policies, job_gpu_priority, job_is_rt,
+                     make_policy, pick_reserved, policy_spec,
+                     register_policy)
+from .runlist import Platform, Runlist, SyncPolicy, TSG, UnmanagedPolicy
 from .simulator import SimResult, Simulator, build_pieces, simulate
 from .task_model import GpuSegment, Task, Taskset
 from .taskgen import GenParams, generate_taskset, uunifast
 
 __all__ = [
     "Task", "GpuSegment", "Taskset",
+    "SchedulingPolicy", "BasePolicy", "register_policy", "make_policy",
+    "available_policies", "policy_spec", "Alg2State", "pick_reserved",
+    "job_is_rt", "job_gpu_priority",
+    "EventDrivenEngine",
     "kthread_busy_rta", "ioctl_busy_rta", "ioctl_suspend_rta", "kthread_K",
     "ioctl_busy_improved_rta", "ioctl_suspend_improved_rta", "schedulable",
+    "fold_to_device",
     "mpcp_schedulable", "fmlp_schedulable", "mpcp_busy_rta",
     "mpcp_suspend_rta", "fmlp_busy_rta", "fmlp_suspend_rta",
     "assign_gpu_priorities", "schedulable_with_assignment",
     "GenParams", "generate_taskset", "uunifast",
     "Simulator", "simulate", "SimResult", "build_pieces",
     "IoctlPolicy", "KernelThreadPolicy", "SyncPolicy", "UnmanagedPolicy",
-    "Runlist", "TSG",
+    "Runlist", "TSG", "Platform",
     "bx_gpu_segment", "bx_cpu_segment", "overlap_cg", "overlap_gc",
 ]

@@ -14,6 +14,29 @@ All analyses return a dict {task name -> WCRT}, with ``math.inf`` for tasks
 whose recurrence exceeds the deadline (unschedulable).  Best-effort tasks are
 not analyzed (value ``None``): they have no deadline.
 
+Every entry point shares the ``_rta_loop`` driver, which adds two
+result-preserving accelerations used by the schedulability sweeps:
+
+  * ``early_exit=True`` stops at the first unschedulable task (the
+    remaining WCRTs cannot rescue the taskset) — partial dicts are only
+    returned on the failure path, so ``schedulable`` stays exact;
+  * ``only=<name>`` computes just the prefix of tasks needed for one
+    task's bound — with ``use_gpu_prio=True`` jitters are deadline-based
+    (the OPA property), so a single task suffices (Audsley's inner loop).
+
+Multi-device tasksets (``ts.n_devices > 1``, DESIGN.md §4) are analyzed
+per device: tasks bound to other devices have their GPU segments folded
+into CPU demand ``G + (3*eta^g + 1)*eps`` — a stand-in for their
+worst-case core occupancy (executing/busy-waiting through their own
+device segments and runlist updates) — since distinct devices share cores
+but not runlists, driver locks, or GPU time.  This projection is
+validated against the simulator for the *self-suspension* mode (no
+busy-wait chains; tests/test_multi_device.py).  For busy-waiting modes it
+is a close heuristic, not a guaranteed bound: a core busy-waiting on
+device A while blocked behind device-A contention can occupy its core
+longer than the folded charge (cross-device busy-wait coupling — open
+item in ROADMAP.md).
+
 Conventions:
   G_i^*  = G_i   + 2*eps*eta_i^g       (Sec. VI-A.2)
   G_i^e* = G_i^e + 2*eps*eta_i^g
@@ -24,6 +47,7 @@ Conventions:
 """
 from __future__ import annotations
 
+import functools
 import math
 from typing import Callable, Dict, Optional
 
@@ -84,6 +108,98 @@ def _gpu_hp_remote(ts: Taskset, ti: Task, use_gpu_prio: bool) -> list[Task]:
 
 
 # --------------------------------------------------------------------------
+# shared fixed-point driver + multi-device projection
+# --------------------------------------------------------------------------
+
+def _rta_loop(ts: Taskset, make_f: Callable[[Task, Dict], Callable],
+              early_exit: bool = False, only: Optional[str] = None,
+              r_independent: bool = False) -> Dict[str, Optional[float]]:
+    """Run the per-task fixed points in decreasing priority order.
+
+    ``make_f(ti, R)`` builds the recurrence for ``ti`` given the WCRTs of
+    the higher-priority tasks computed so far.  ``r_independent`` declares
+    that the recurrences never read ``R`` (deadline-based jitters), which
+    lets ``only`` skip every other task outright."""
+    R: Dict[str, Optional[float]] = {}
+    for ti in ts.by_priority():
+        if only is not None and r_independent and ti.name != only:
+            continue
+        if ti.is_rt:
+            R[ti.name] = _iterate(ti, make_f(ti, R))
+        else:
+            R[ti.name] = None
+        if only is not None and ti.name == only:
+            return R
+        if early_exit and ti.is_rt and math.isinf(R[ti.name]):
+            return R  # partial: the taskset is already unschedulable
+    return R
+
+
+def fold_to_device(ts: Taskset, device: int) -> Taskset:
+    """Single-device projection: tasks on ``device`` keep their structure;
+    GPU tasks on other devices become CPU-only with their device work
+    folded into an extra CPU segment (conservative core occupancy:
+    G + 2*eps*eta^g busy-wait stretch + (eta^g+1)*eps update blocking).
+    The folded segment's *best case* is 0: the overlap lemmas (Eqs. 5-9)
+    read C_best as execution that is *guaranteed* to occur, and a
+    suspended remote-device task may occupy its core arbitrarily little —
+    inflating the best case would overstate guaranteed overlap and make
+    the improved analyses optimistic."""
+    tasks = []
+    for t in ts.tasks:
+        if t.uses_gpu and t.device != device:
+            extra = t.G + (3 * t.eta_g + 1) * ts.epsilon
+            tasks.append(Task(
+                name=t.name,
+                cpu_segments=tuple(t.cpu_segments) + (extra,),
+                cpu_segments_best=tuple(t.cpu_segments_best) + (0.0,),
+                gpu_segments=(),
+                period=t.period, deadline=t.deadline, cpu=t.cpu,
+                priority=t.priority, gpu_priority=t.gpu_priority,
+                best_effort=t.best_effort, device=0))
+        elif t.device != 0:
+            import dataclasses
+            tasks.append(dataclasses.replace(t, device=0))
+        else:
+            tasks.append(t)
+    return Taskset(tasks=tasks, n_cpus=ts.n_cpus, epsilon=ts.epsilon,
+                   kthread_cpu=ts.kthread_cpu, n_devices=1)
+
+
+def per_device(rta: Callable) -> Callable:
+    """Lift a single-device RTA to multi-device tasksets (identity when
+    ``n_devices == 1``).  Each GPU task takes its bound from its own
+    device's projection; CPU-only tasks take the max over projections."""
+    @functools.wraps(rta)
+    def wrapper(ts: Taskset, *args, **kw):
+        if ts.n_devices <= 1:
+            return rta(ts, *args, **kw)
+        own_device = {t.name: t.device for t in ts.tasks if t.uses_gpu}
+        out: Dict[str, Optional[float]] = {}
+        for d in range(ts.n_devices):
+            only = kw.get("only")
+            if only is not None and own_device.get(only, d) != d:
+                continue  # a GPU task's bound comes from its device only
+            Rd = rta(fold_to_device(ts, d), *args, **kw)
+            for name, r in Rd.items():
+                if name in own_device:
+                    if own_device[name] == d:
+                        out[name] = r
+                elif name not in out or _worse(r, out[name]):
+                    out[name] = r
+        return out
+
+    def _worse(a, b) -> bool:
+        if a is None:
+            return False
+        if b is None:
+            return True
+        return a > b
+
+    return wrapper
+
+
+# --------------------------------------------------------------------------
 # Lemma 1 + Lemma 2: kernel-thread approach (busy-waiting)
 # --------------------------------------------------------------------------
 
@@ -119,8 +235,11 @@ def kthread_K(ts: Taskset, ti: Task, R_i: float, R: Dict[str, float],
     return total
 
 
+@per_device
 def kthread_busy_rta(ts: Taskset, use_gpu_prio: bool = False,
-                     corrected: bool = True) -> Dict[str, Optional[float]]:
+                     corrected: bool = True, early_exit: bool = False,
+                     only: Optional[str] = None
+                     ) -> Dict[str, Optional[float]]:
     """Lemma 2: WCRT under the kernel-thread approach.
 
     R_i = C_i + G_i + K_i
@@ -132,16 +251,11 @@ def kthread_busy_rta(ts: Taskset, use_gpu_prio: bool = False,
     through the job-granular runlist reservation (Sec. V-A under-utilization)
     and carry a release jitter J_h.
     """
-    R: Dict[str, Optional[float]] = {}
-    for ti in ts.by_priority():
-        if not ti.is_rt:
-            R[ti.name] = None
-            continue
-
+    def make_f(ti: Task, R: Dict) -> Callable:
         hpp = ts.hpp(ti)
         remote = _gpu_hp_remote(ts, ti, use_gpu_prio)
 
-        def f(R_i: float, ti=ti, hpp=hpp, remote=remote) -> float:
+        def f(R_i: float) -> float:
             v = ti.C + ti.G + kthread_K(ts, ti, R_i, R, use_gpu_prio,
                                         corrected)
             for h in hpp:
@@ -150,9 +264,10 @@ def kthread_busy_rta(ts: Taskset, use_gpu_prio: bool = False,
                 J_h = _jitter(ts, h, "job", R, use_gpu_prio)
                 v += ceil_pos(R_i + J_h, h.period) * (h.C + h.G)
             return v
+        return f
 
-        R[ti.name] = _iterate(ti, f)
-    return R
+    return _rta_loop(ts, make_f, early_exit=early_exit, only=only,
+                     r_independent=use_gpu_prio)
 
 
 # --------------------------------------------------------------------------
@@ -171,8 +286,11 @@ def _gmstar(t: Task, eps: float) -> float:
     return t.Gm + 2.0 * eps * t.eta_g
 
 
+@per_device
 def ioctl_busy_rta(ts: Taskset, use_gpu_prio: bool = False,
-                   corrected: bool = True) -> Dict[str, Optional[float]]:
+                   corrected: bool = True, early_exit: bool = False,
+                   only: Optional[str] = None
+                   ) -> Dict[str, Optional[float]]:
     """Lemma 3: WCRT under the IOCTL-based approach with busy-waiting.
 
     R_i = C_i + G_i^* + (eta_i^g + 1) * eps
@@ -187,16 +305,13 @@ def ioctl_busy_rta(ts: Taskset, use_gpu_prio: bool = False,
     term; ``corrected=False`` is the paper's verbatim Lemma 3.
     """
     eps = ts.epsilon
-    R: Dict[str, Optional[float]] = {}
-    for ti in ts.by_priority():
-        if not ti.is_rt:
-            R[ti.name] = None
-            continue
+
+    def make_f(ti: Task, R: Dict) -> Callable:
         hpp_cpu = [h for h in ts.hpp(ti) if not h.uses_gpu]
         hpp_gpu = [h for h in ts.hpp(ti) if h.uses_gpu]
         remote = _gpu_hp_remote(ts, ti, use_gpu_prio)
 
-        def f(R_i: float, ti=ti) -> float:
+        def f(R_i: float) -> float:
             v = ti.C + _gstar(ti, eps) + (ti.eta_g + 1) * eps
             for h in hpp_cpu:
                 v += ceil_pos(R_i, h.period) * h.C
@@ -207,16 +322,19 @@ def ioctl_busy_rta(ts: Taskset, use_gpu_prio: bool = False,
                 J = _jitter(ts, h, "gpu", R, use_gpu_prio)
                 v += ceil_pos(R_i + J, h.period) * _gestar(h, eps)
             return v
+        return f
 
-        R[ti.name] = _iterate(ti, f)
-    return R
+    return _rta_loop(ts, make_f, early_exit=early_exit, only=only,
+                     r_independent=use_gpu_prio)
 
 
 # --------------------------------------------------------------------------
 # Lemma 4: IOCTL-based approach, self-suspension
 # --------------------------------------------------------------------------
 
-def ioctl_suspend_rta(ts: Taskset, use_gpu_prio: bool = False
+@per_device
+def ioctl_suspend_rta(ts: Taskset, use_gpu_prio: bool = False,
+                      early_exit: bool = False, only: Optional[str] = None
                       ) -> Dict[str, Optional[float]]:
     """Lemma 4: WCRT under the IOCTL-based approach with self-suspension.
 
@@ -233,16 +351,13 @@ def ioctl_suspend_rta(ts: Taskset, use_gpu_prio: bool = False
     tau_i").
     """
     eps = ts.epsilon
-    R: Dict[str, Optional[float]] = {}
-    for ti in ts.by_priority():
-        if not ti.is_rt:
-            R[ti.name] = None
-            continue
+
+    def make_f(ti: Task, R: Dict) -> Callable:
         hpp_cpu = [h for h in ts.hpp(ti) if not h.uses_gpu]
         hpp_gpu = [h for h in ts.hpp(ti) if h.uses_gpu]
         remote = _gpu_hp_remote(ts, ti, use_gpu_prio)
 
-        def f(R_i: float, ti=ti) -> float:
+        def f(R_i: float) -> float:
             v = ti.C + _gstar(ti, eps) + (ti.eta_g + 1) * eps
             for h in hpp_cpu:
                 v += ceil_pos(R_i, h.period) * h.C
@@ -257,20 +372,34 @@ def ioctl_suspend_rta(ts: Taskset, use_gpu_prio: bool = False
                     Jg = _jitter(ts, h, "gpu", R, use_gpu_prio)
                     v += ceil_pos(R_i + Jg, h.period) * _gestar(h, eps)
             return v
+        return f
 
-        R[ti.name] = _iterate(ti, f)
-    return R
+    return _rta_loop(ts, make_f, early_exit=early_exit, only=only,
+                     r_independent=use_gpu_prio)
 
 
 # --------------------------------------------------------------------------
 # Schedulability helpers
 # --------------------------------------------------------------------------
 
+@functools.lru_cache(maxsize=512)
+def supports_kwarg(rta: Callable, kwname: str) -> bool:
+    """Whether an RTA callable accepts ``kwname`` (for the optional
+    early_exit/only accelerations; external RTAs without them still work)."""
+    try:
+        import inspect
+        return kwname in inspect.signature(rta).parameters
+    except (TypeError, ValueError):  # pragma: no cover
+        return False
+
+
 def schedulable(ts: Taskset, rta: Callable[..., Dict[str, Optional[float]]],
                 **kw) -> bool:
+    if supports_kwarg(rta, "early_exit"):
+        kw.setdefault("early_exit", True)
     R = rta(ts, **kw)
     for t in ts.rt_tasks:
-        r = R[t.name]
+        r = R.get(t.name, math.inf)  # absent => early-exited: unschedulable
         if r is None or math.isinf(r) or r > t.deadline + _EPS:
             return False
     return True

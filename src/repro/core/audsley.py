@@ -23,10 +23,15 @@ import dataclasses
 import math
 from typing import Callable, Dict, Optional
 
+from .analysis import supports_kwarg
 from .task_model import Task, Taskset
 
 
 def _test_task(ts: Taskset, name: str, rta: Callable, **kw) -> bool:
+    if supports_kwarg(rta, "only"):
+        # with use_gpu_prio the jitters are deadline-based (the OPA
+        # property), so the candidate's bound alone is enough
+        kw.setdefault("only", name)
     R = rta(ts, use_gpu_prio=True, **kw)
     t = next(t for t in ts.tasks if t.name == name)
     r = R[name]
@@ -34,8 +39,10 @@ def _test_task(ts: Taskset, name: str, rta: Callable, **kw) -> bool:
 
 
 def _full_test(ts: Taskset, rta: Callable, **kw) -> bool:
+    if supports_kwarg(rta, "early_exit"):
+        kw.setdefault("early_exit", True)
     R = rta(ts, use_gpu_prio=True, **kw)
-    return all(R[t.name] is not None and not math.isinf(R[t.name])
+    return all(not math.isinf(R.get(t.name, math.inf))
                and R[t.name] <= t.deadline + 1e-9 for t in ts.rt_tasks)
 
 

@@ -45,7 +45,7 @@ from __future__ import annotations
 import math
 from typing import Callable, Dict, Optional
 
-from .analysis import _iterate, ceil_pos
+from .analysis import _rta_loop, ceil_pos
 from .task_model import Task, Taskset
 
 
@@ -100,20 +100,16 @@ def _boost_blocking(ts: Taskset, ti: Task, R_i: float) -> float:
     return min(events, arrivals) * per_event
 
 
-def _rta(ts: Taskset, protocol: str, mode: str) -> Dict[str, Optional[float]]:
-    R: Dict[str, Optional[float]] = {}
-    for ti in ts.by_priority():
-        if not ti.is_rt:
-            R[ti.name] = None
-            continue
+def _rta(ts: Taskset, protocol: str, mode: str,
+         early_exit: bool = False) -> Dict[str, Optional[float]]:
+    def make_f(ti: Task, R: Dict) -> Callable:
         B_i = _blocking(ts, ti, protocol)
-        if math.isinf(B_i):
-            R[ti.name] = math.inf
-            continue
         hpp = ts.hpp(ti)
+        if math.isinf(B_i):
+            return lambda R_i: math.inf
 
         if mode == "busy":
-            def f(R_i: float, ti=ti, hpp=hpp, B_i=B_i) -> float:
+            def f(R_i: float) -> float:
                 v = ti.C + ti.G + B_i + _boost_blocking(ts, ti, R_i)
                 for h in hpp:
                     B_h = _blocking(ts, h, protocol)
@@ -122,7 +118,7 @@ def _rta(ts: Taskset, protocol: str, mode: str) -> Dict[str, Optional[float]]:
                     v += ceil_pos(R_i, h.period) * (h.C + h.G + B_h)
                 return v
         else:  # suspension-aware
-            def f(R_i: float, ti=ti, hpp=hpp, B_i=B_i) -> float:
+            def f(R_i: float) -> float:
                 v = ti.C + ti.G + B_i + _boost_blocking(ts, ti, R_i)
                 for h in hpp:
                     J_h = max((R.get(h.name) or h.deadline) - (h.C + h.Gm), 0.0)
@@ -130,30 +126,34 @@ def _rta(ts: Taskset, protocol: str, mode: str) -> Dict[str, Optional[float]]:
                         J_h = max(h.deadline - (h.C + h.Gm), 0.0)
                     v += ceil_pos(R_i + J_h, h.period) * (h.C + h.Gm)
                 return v
+        return f
 
-        R[ti.name] = _iterate(ti, f)
-    return R
-
-
-def mpcp_busy_rta(ts: Taskset) -> Dict[str, Optional[float]]:
-    return _rta(ts, "mpcp", "busy")
+    return _rta_loop(ts, make_f, early_exit=early_exit)
 
 
-def mpcp_suspend_rta(ts: Taskset) -> Dict[str, Optional[float]]:
-    return _rta(ts, "mpcp", "suspend")
+def mpcp_busy_rta(ts: Taskset, early_exit: bool = False
+                  ) -> Dict[str, Optional[float]]:
+    return _rta(ts, "mpcp", "busy", early_exit)
 
 
-def fmlp_busy_rta(ts: Taskset) -> Dict[str, Optional[float]]:
-    return _rta(ts, "fmlp", "busy")
+def mpcp_suspend_rta(ts: Taskset, early_exit: bool = False
+                     ) -> Dict[str, Optional[float]]:
+    return _rta(ts, "mpcp", "suspend", early_exit)
 
 
-def fmlp_suspend_rta(ts: Taskset) -> Dict[str, Optional[float]]:
-    return _rta(ts, "fmlp", "suspend")
+def fmlp_busy_rta(ts: Taskset, early_exit: bool = False
+                  ) -> Dict[str, Optional[float]]:
+    return _rta(ts, "fmlp", "busy", early_exit)
+
+
+def fmlp_suspend_rta(ts: Taskset, early_exit: bool = False
+                     ) -> Dict[str, Optional[float]]:
+    return _rta(ts, "fmlp", "suspend", early_exit)
 
 
 def _sched(ts: Taskset, rta: Callable) -> bool:
-    R = rta(ts)
-    return all(R[t.name] is not None and not math.isinf(R[t.name])
+    R = rta(ts, early_exit=True)
+    return all(not math.isinf(R.get(t.name, math.inf))
                and R[t.name] <= t.deadline + 1e-9 for t in ts.rt_tasks)
 
 

@@ -1,0 +1,194 @@
+"""Event-driven scheduling engine (DESIGN.md §1).
+
+The engine advances a :class:`~repro.core.simulator.Simulator` through a
+heap-based event queue instead of the seed's per-task rescan loop:
+
+  * **Releases** are typed, time-anchored events kept in a min-heap — the
+    only event class whose firing time is known arbitrarily far ahead
+    (sporadic tasks with fixed periods/offsets).  Popping the heap replaces
+    the O(n_tasks) "who releases next?" scan of every advance step.
+  * **Piece completions, RR slice expiries, runlist-update completions and
+    kthread polls** are *derived* events: their firing times depend on the
+    current core/GPU allocation, which any event can change (a release can
+    preempt the piece whose completion was 'scheduled').  The engine
+    therefore re-derives the earliest such event from the active allocation
+    after each step — only the jobs that actually hold a resource
+    contribute, so the advance step touches the progressing set, not every
+    job in the system.
+
+Multi-device platforms (DESIGN.md §4): the engine instantiates one policy
+per device and routes job-scoped hooks by ``task.device``; CPU arbitration
+is global (cores are shared across devices), GPU arbitration is
+per-device.
+
+The semantics are piece-for-piece identical to the seed simulator loop —
+`tests/test_engine_equivalence.py` pins golden MORT/deadline-miss traces
+captured from the pre-engine implementation.
+"""
+from __future__ import annotations
+
+import heapq
+from typing import TYPE_CHECKING, Dict, List, Optional
+
+if TYPE_CHECKING:  # pragma: no cover
+    from .simulator import Job, Simulator
+
+_TIME_EPS = 1e-9
+_MAX_EVENTS = int(5e6)
+
+
+class EventDrivenEngine:
+    """Drives one Simulator to its horizon.
+
+    The engine owns scheduling mechanics (core arbitration, the driver
+    rt_mutex cascade, time advancement); the Simulator owns job lifecycle
+    (release → pieces → completion) and result bookkeeping; the policies
+    own all approach-specific arbitration state."""
+
+    def __init__(self, sim: "Simulator"):
+        self.sim = sim
+
+    # ------------------------------------------------------------------
+    # core arbitration
+    # ------------------------------------------------------------------
+    def _core_winners(self) -> Dict[int, Optional["Job"]]:
+        """Highest-priority demanding job per core.  A started update piece
+        is a non-preemptive kernel section and keeps its core outright."""
+        sim = self.sim
+        winners: Dict[int, Optional["Job"]] = {
+            c: None for c in range(sim.ts.n_cpus)}
+        active = sim.active_jobs()
+        for j in active:
+            if j.current_kind() == "upd" and j.upd_started:
+                winners[j.task.cpu] = j
+        for c in range(sim.ts.n_cpus):
+            if winners[c] is not None:
+                continue
+            cands = [j for j in active
+                     if j.task.cpu == c
+                     and j.cpu_demand(sim.mode, sim.policy_for(j))]
+            if cands:
+                winners[c] = max(
+                    cands,
+                    key=lambda j: sim.policy_for(j).effective_priority(j))
+        # policy machinery (e.g. the kernel thread mid-rewrite) can consume
+        # a core outright
+        for p in sim.policies:
+            for c in p.occupied_cores():
+                winners[c] = None
+        return winners
+
+    def _allocate(self) -> Dict[int, Optional["Job"]]:
+        """Compute core winners, letting due runlist updates acquire the
+        driver mutex: completion-side (driver-context) updates first, then
+        winners standing at a begin() boundary — cascading through
+        zero-cost (pending-only) updates."""
+        sim = self.sim
+        for _ in range(16 * (len(sim.jobs) + 2)):
+            winners = self._core_winners()
+            entered = False
+            # driver-context end updates need no core and go first
+            ends = sorted([j for j in sim.active_jobs()
+                           if j.current_kind() == "upde"
+                           and not j.upd_started],
+                          key=lambda j: -j.task.priority)
+            begins = sorted(
+                [j for j in winners.values() if j is not None
+                 and j.current_kind() == "upd" and not j.upd_started],
+                key=lambda j: -sim.policy_for(j).effective_priority(j))
+            for j in ends + begins:
+                if sim.policy_for(j).try_acquire(j):
+                    j.upd_started = True
+                    piece = j.current_piece()
+                    sim.policy_for(j).begin_update(j, piece)
+                    entered = True
+                    if piece.remaining <= _TIME_EPS:
+                        sim._complete_piece(j)
+                    break  # re-derive state after a change
+            if not entered:
+                return winners
+        raise RuntimeError("allocation did not settle")
+
+    # ------------------------------------------------------------------
+    # the event loop
+    # ------------------------------------------------------------------
+    def run(self) -> None:
+        sim = self.sim
+        # release event queue: (time, task_index, task).  task_index makes
+        # simultaneous releases fire in taskset order (seed-equivalent).
+        heap: List[tuple] = [(sim.next_release[t.name], i, t)
+                             for i, t in enumerate(sim.ts.tasks)]
+        heapq.heapify(heap)
+
+        guard = 0
+        while sim.t < sim.horizon - _TIME_EPS:
+            guard += 1
+            if guard > _MAX_EVENTS:
+                raise RuntimeError("simulator event budget exceeded")
+
+            # 1. release events due now (fired in taskset order on ties)
+            while heap and heap[0][0] <= sim.t + _TIME_EPS:
+                due = []
+                while heap and heap[0][0] <= sim.t + _TIME_EPS:
+                    due.append(heapq.heappop(heap))
+                due.sort(key=lambda e: e[1])
+                for _, idx, task in due:
+                    nxt = sim.next_release[task.name] + task.period
+                    sim.next_release[task.name] = nxt
+                    heapq.heappush(heap, (nxt, idx, task))
+                    sim._release(task)
+
+            # 2. allocation (lets due IOCTL updates enter the kernel section)
+            winners = self._allocate()
+            for p in sim.policies:
+                p.notify_winners(winners)
+            if any(p.recheck_winners_after_notify for p in sim.policies):
+                winners = self._core_winners()  # a rewrite may block a core
+            owners = {d: p.gpu_owner() for d, p in enumerate(sim.policies)}
+
+            # driver-context end updates progress in wall time once started
+            driver_upds = [j for j in sim.active_jobs()
+                           if j.current_kind() == "upde" and j.upd_started]
+
+            # 3. next event horizon: earliest of the queued releases and the
+            # derived events of the current allocation
+            dt = sim.horizon - sim.t
+            if heap:
+                dt = min(dt, heap[0][0] - sim.t)
+            for c, j in winners.items():
+                if j is not None and j.cpu_progresses():
+                    dt = min(dt, j.current_piece().remaining)
+            for owner in owners.values():
+                if owner is not None and owner.wants_gpu():
+                    dt = min(dt, owner.current_piece().remaining)
+            for j in driver_upds:
+                dt = min(dt, j.current_piece().remaining)
+            for p in sim.policies:
+                dt = min(dt, p.next_gpu_event())
+            if dt <= _TIME_EPS:
+                dt = _TIME_EPS  # numerical floor; completions fire below
+
+            # 4. advance the progressing set
+            for c, j in winners.items():
+                if j is not None and j.cpu_progresses():
+                    j.current_piece().remaining -= dt
+            for owner in owners.values():
+                if owner is not None and owner.wants_gpu():
+                    owner.current_piece().remaining -= dt
+            for j in driver_upds:
+                j.current_piece().remaining -= dt
+            for p in sim.policies:
+                p.gpu_rr_advance(dt)
+            sim.t += dt
+
+            # 5. fire completions (cascades handled inside)
+            for j in list(sim.jobs):
+                p = j.current_piece()
+                if p is None or not j.active:
+                    continue
+                if p.remaining <= _TIME_EPS:
+                    progressed = (p.kind == "ge" or
+                                  (p.kind == "upde" and j.upd_started) or
+                                  j.cpu_progresses())
+                    if progressed:
+                        sim._complete_piece(j)

@@ -12,20 +12,26 @@ lower bound on parallelism already counted inside the term).
 The improvement applies to the IOCTL-based approach only (the kernel-thread
 approach reserves the device at job granularity, so segment-level overlap
 does not arise -- Sec. VII-A.3).
+
+Both entry points run on the shared ``_rta_loop`` driver (early_exit /
+only / multi-device semantics identical to `core.analysis`).
 """
 from __future__ import annotations
 
 import math
-from typing import Dict, Optional
+from typing import Callable, Dict, Optional
 
-from .analysis import (_gestar, _gmstar, _gstar, _iterate, _jitter,
-                       _gpu_hp_remote, ceil_pos)
+from .analysis import (_gestar, _gmstar, _gstar, _gpu_hp_remote, _jitter,
+                       _rta_loop, ceil_pos, per_device)
 from .overlap import overlap_cg, overlap_gc
 from .task_model import Task, Taskset
 
 
+@per_device
 def ioctl_busy_improved_rta(ts: Taskset, use_gpu_prio: bool = False,
-                            corrected: bool = True
+                            corrected: bool = True,
+                            early_exit: bool = False,
+                            only: Optional[str] = None
                             ) -> Dict[str, Optional[float]]:
     """Lemma 6: IOCTL busy-waiting WCRT with overlap deduction.
 
@@ -37,11 +43,8 @@ def ioctl_busy_improved_rta(ts: Taskset, use_gpu_prio: bool = False,
               max(ceil((R_i+J_h^g)/T_h)*G_h^{e*} - O^gc_{i,h}, 0)
     """
     eps = ts.epsilon
-    R: Dict[str, Optional[float]] = {}
-    for ti in ts.by_priority():
-        if not ti.is_rt:
-            R[ti.name] = None
-            continue
+
+    def make_f(ti: Task, R: Dict) -> Callable:
         hpp_cpu = [h for h in ts.hpp(ti) if not h.uses_gpu]
         hpp_gpu = [h for h in ts.hpp(ti) if h.uses_gpu]
         remote = _gpu_hp_remote(ts, ti, use_gpu_prio)
@@ -49,7 +52,7 @@ def ioctl_busy_improved_rta(ts: Taskset, use_gpu_prio: bool = False,
                for h in hpp_cpu + hpp_gpu}
         Ogc = {h.name: overlap_gc(ts, ti, h) for h in hpp_gpu + remote}
 
-        def f(R_i: float, ti=ti) -> float:
+        def f(R_i: float) -> float:
             v = ti.C + _gstar(ti, eps) + (ti.eta_g + 1) * eps
             for h in hpp_cpu:
                 v += max(ceil_pos(R_i, h.period) * h.C - Ocg[h.name], 0.0)
@@ -63,12 +66,16 @@ def ioctl_busy_improved_rta(ts: Taskset, use_gpu_prio: bool = False,
                 v += max(ceil_pos(R_i + J, h.period) * _gestar(h, eps)
                          - Ogc[h.name], 0.0)
             return v
+        return f
 
-        R[ti.name] = _iterate(ti, f)
-    return R
+    return _rta_loop(ts, make_f, early_exit=early_exit, only=only,
+                     r_independent=use_gpu_prio)
 
 
-def ioctl_suspend_improved_rta(ts: Taskset, use_gpu_prio: bool = False
+@per_device
+def ioctl_suspend_improved_rta(ts: Taskset, use_gpu_prio: bool = False,
+                               early_exit: bool = False,
+                               only: Optional[str] = None
                                ) -> Dict[str, Optional[float]]:
     """Lemma 7: IOCTL self-suspension WCRT with overlap deduction.
 
@@ -76,11 +83,8 @@ def ioctl_suspend_improved_rta(ts: Taskset, use_gpu_prio: bool = False
     and O^gc from GPU-side interference.
     """
     eps = ts.epsilon
-    R: Dict[str, Optional[float]] = {}
-    for ti in ts.by_priority():
-        if not ti.is_rt:
-            R[ti.name] = None
-            continue
+
+    def make_f(ti: Task, R: Dict) -> Callable:
         hpp_cpu = [h for h in ts.hpp(ti) if not h.uses_gpu]
         hpp_gpu = [h for h in ts.hpp(ti) if h.uses_gpu]
         remote = _gpu_hp_remote(ts, ti, use_gpu_prio)
@@ -88,7 +92,7 @@ def ioctl_suspend_improved_rta(ts: Taskset, use_gpu_prio: bool = False
                for h in hpp_cpu + hpp_gpu}
         Ogc = {h.name: overlap_gc(ts, ti, h) for h in hpp_gpu + remote}
 
-        def f(R_i: float, ti=ti) -> float:
+        def f(R_i: float) -> float:
             v = ti.C + _gstar(ti, eps) + (ti.eta_g + 1) * eps
             for h in hpp_cpu:
                 v += max(ceil_pos(R_i, h.period) * h.C - Ocg[h.name], 0.0)
@@ -106,6 +110,7 @@ def ioctl_suspend_improved_rta(ts: Taskset, use_gpu_prio: bool = False
                     v += max(ceil_pos(R_i + Jg, h.period) * _gestar(h, eps)
                              - Ogc[h.name], 0.0)
             return v
+        return f
 
-        R[ti.name] = _iterate(ti, f)
-    return R
+    return _rta_loop(ts, make_f, early_exit=early_exit, only=only,
+                     r_independent=use_gpu_prio)

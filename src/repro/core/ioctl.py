@@ -7,11 +7,12 @@ the driver under an rt_mutex.  In the simulator, these appear as explicit
 the caller's core, non-preemptive — kernel path holding the driver lock —
 and pausing the GPU while the runlist is rewritten).
 
-Algorithm 2 state: two disjoint lists, ``task_running`` (TSGs on the
-runlist) and ``task_pending``.  Verbatim logic, with one safety deviation
-noted inline: on removal with no pending real-time task, the paper sets
-task_running <- task_pending, which would drop best-effort TSGs that
-remained in task_running; we take the union instead.
+Algorithm 2 state lives in the shared ``policy.Alg2State`` (two disjoint
+lists, ``task_running`` and ``task_pending``) — the very same state machine
+the runtime executor's notify mode drives, so the simulated admission and
+the live admission cannot diverge (DESIGN.md §2).  One safety deviation
+from the paper is noted in Alg2State: on removal with no pending real-time
+task we take the union of the lists instead of overwriting task_running.
 
 Both busy-waiting and self-suspension are supported during pure GPU
 execution and while waiting for admission (Table I / Sec. VI).
@@ -20,21 +21,35 @@ from __future__ import annotations
 
 from typing import TYPE_CHECKING, Optional
 
-from .runlist import BasePolicy, Runlist, TSG
+from .analysis import ioctl_busy_rta, ioctl_suspend_rta
+from .policy import (Alg2State, SchedulingPolicy, job_gpu_priority,
+                     job_is_rt, register_policy)
+from .runlist import Runlist, TSG
 
 if TYPE_CHECKING:  # pragma: no cover
     from .simulator import Job
 
 
-class IoctlPolicy(BasePolicy):
+class IoctlPolicy(SchedulingPolicy):
     name = "ioctl"
     needs_ioctl_pieces = True
+    needs_segment_hooks = True
 
     def __init__(self, rr_slice: float = 2.0):
-        self.running: list["Job"] = []   # task_running
-        self.pending: list["Job"] = []   # task_pending
+        self.alg2 = Alg2State(on_enter_running=self._enter_running,
+                              on_leave_running=self._leave_running)
         self.lock_holder: Optional["Job"] = None
         self.rr = Runlist(rr_slice)        # RR among best-effort members
+        self._tsgs: dict = {}
+
+    # task_running / task_pending views (kept for API compatibility)
+    @property
+    def running(self) -> list:
+        return self.alg2.running
+
+    @property
+    def pending(self) -> list:
+        return self.alg2.pending
 
     # ---- rt_mutex ----------------------------------------------------------
     # The update is a kernel section: a caller must win its core (ordinary
@@ -53,73 +68,21 @@ class IoctlPolicy(BasePolicy):
     def _release_lock(self) -> None:
         self.lock_holder = None
 
-    # ---- Algorithm 2 -------------------------------------------------------
-    def _ioctl_runlist_update(self, job: "Job", add: bool) -> None:
-        gp = lambda j: j.task.gpu_priority
-        if add:
-            if not job.task.is_rt:                    # lines 6-10
-                if not any(j.task.is_rt for j in self.running):
-                    self._to_running(job)
-                else:
-                    self.pending.append(job)
-                    job.gpu_pending = True
-            else:                                     # lines 11-17
-                tau_h = max(self.running, key=gp, default=None)
-                if tau_h is None or gp(job) > gp(tau_h):
-                    self._to_running(job)
-                    if tau_h is not None and tau_h.task.is_rt:
-                        # preempt tau_h: move to pending
-                        self._from_running(tau_h)
-                        self.pending.append(tau_h)
-                        tau_h.gpu_pending = True
-                    elif tau_h is not None:
-                        # best-effort members are displaced as well
-                        for be in [j for j in self.running
-                                   if j is not job and not j.task.is_rt]:
-                            self._from_running(be)
-                            self.pending.append(be)
-                            be.gpu_pending = True
-                else:
-                    self.pending.append(job)
-                    job.gpu_pending = True
-        else:                                         # lines 18-25
-            rt_pend = [j for j in self.pending if j.task.is_rt]
-            if rt_pend:
-                tau_k = max(rt_pend, key=gp)
-                self.pending.remove(tau_k)
-                self._to_running(tau_k)
-                self._from_running(job)
-            else:
-                self._from_running(job)
-                # paper: task_running <- task_pending (union, see docstring)
-                for j in list(self.pending):
-                    self.pending.remove(j)
-                    self._to_running(j)
-
-    def _to_running(self, job: "Job") -> None:
-        if job not in self.running:
-            self.running.append(job)
-        job.gpu_pending = False
-        if not job.task.is_rt:
+    # ---- best-effort TSG bookkeeping (Alg2State callbacks) -----------------
+    def _enter_running(self, job) -> None:
+        if not job_is_rt(job):
             self.rr.add(self._tsg(job))
 
-    def _from_running(self, job: "Job") -> None:
-        if job in self.running:
-            self.running.remove(job)
-        tsg = self._tsgs.get(job.uid)
+    def _leave_running(self, job) -> None:
+        tsg = self._tsgs.get(id(job))
         if tsg:
             self.rr.remove(tsg)
 
-    _tsgs: dict = None
-
-    def attach(self, sim) -> None:
-        super().attach(sim)
-        self._tsgs = {}
-
     def _tsg(self, job: "Job") -> TSG:
-        if job.uid not in self._tsgs:
-            self._tsgs[job.uid] = TSG(job=job, priority=job.task.gpu_priority)
-        return self._tsgs[job.uid]
+        if id(job) not in self._tsgs:
+            self._tsgs[id(job)] = TSG(job=job,
+                                      priority=job_gpu_priority(job))
+        return self._tsgs[id(job)]
 
     # ---- simulator hooks ----------------------------------------------------
     def begin_update(self, job: "Job", piece) -> None:
@@ -131,10 +94,11 @@ class IoctlPolicy(BasePolicy):
         once the runlist registers are written); a call that only touches
         task_pending is the cheap mode of the paper's overhead histogram
         (Table V) and is modeled as free."""
-        before = set(j.uid for j in self.running)
-        self._ioctl_runlist_update(job, add=(piece.which == "begin"))
-        after = set(j.uid for j in self.running)
-        cost = self.sim.ts.epsilon if before != after else 0.0
+        if piece.which == "begin":
+            rewrote = self.alg2.add(job)
+        else:
+            rewrote = self.alg2.remove(job)
+        cost = self.sim.ts.epsilon if rewrote else 0.0
         piece.duration = cost
         piece.remaining = cost
         if cost > 0.0:
@@ -145,11 +109,8 @@ class IoctlPolicy(BasePolicy):
 
     def on_job_complete(self, job: "Job") -> None:
         # defensive cleanup (a well-formed job has already called end())
-        if job in self.running:
-            self._from_running(job)
-        if job in self.pending:
-            self.pending.remove(job)
-        self._tsgs.pop(job.uid, None)
+        self.alg2.discard(job)
+        self._tsgs.pop(id(job), None)
 
     _gpu_pause_left = 0.0
 
@@ -192,3 +153,27 @@ class IoctlPolicy(BasePolicy):
         if k == "ge":
             return True   # self-suspended during pure GPU execution / wait
         return False
+
+    # ---- runtime face (sched.executor notify mode) -------------------------
+    def runtime_segment_begin(self, job) -> bool:
+        return self.alg2.add(job)
+
+    def runtime_segment_end(self, job) -> bool:
+        return self.alg2.remove(job)
+
+    def runtime_on_complete(self, job) -> None:
+        self.alg2.discard(job)
+        self._tsgs.pop(id(job), None)
+
+    def runtime_admitted(self, job) -> bool:
+        if job not in self.running:
+            return False
+        rt = [j for j in self.running if job_is_rt(j)]
+        if rt:
+            return job is max(rt, key=job_gpu_priority)
+        return True
+
+
+register_policy("ioctl", IoctlPolicy,
+                "Algorithm 2: IOCTL segment-granular runlist control",
+                rtas={"busy": ioctl_busy_rta, "suspend": ioctl_suspend_rta})

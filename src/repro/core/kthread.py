@@ -33,19 +33,28 @@ Cost model (aligned with Lemmas 1/2):
     task itself).  Without this, a reserved task's own local preemptors
     (possibly lower-priority than a remote victim) would extend the
     victim's blocking beyond the (C_h + G_h) per-job charge of Lemma 2.
+
+The reservation rule itself (line 4) is the shared ``pick_reserved`` from
+`core/policy.py` — the runtime executor's scheduler thread applies the same
+function to live RTJobs (DESIGN.md §2).
 """
 from __future__ import annotations
 
-from typing import TYPE_CHECKING, Dict, Optional
+from typing import TYPE_CHECKING, Dict, Optional, Sequence, Tuple
 
-from .runlist import BasePolicy, Runlist, TSG
+from .analysis import kthread_busy_rta
+from .policy import SchedulingPolicy, pick_reserved, register_policy
+from .runlist import Runlist, TSG
 
 if TYPE_CHECKING:  # pragma: no cover
     from .simulator import Job
 
 
-class KernelThreadPolicy(BasePolicy):
+class KernelThreadPolicy(SchedulingPolicy):
     name = "kthread"
+    requires_busy_wait = True
+    wants_poll_thread = True
+    recheck_winners_after_notify = True
 
     def __init__(self, poll_interval: float = 0.0, rr_slice: float = 2.0):
         """poll_interval=0 models event-driven detection (the paper uses a
@@ -69,13 +78,12 @@ class KernelThreadPolicy(BasePolicy):
         return self._last_winners.get(j.task.cpu) is j
 
     def _pick_reserved(self) -> Optional["Job"]:
-        """Line 4: highest-priority GPU-using ready real-time task."""
-        ready_rt = [j for j in self.sim.active_jobs()
-                    if j.task.is_rt and j.task.uses_gpu and not j.done
-                    and self._eligible(j)]
-        if not ready_rt:
-            return None
-        return max(ready_rt, key=lambda j: j.task.gpu_priority)
+        """Line 4: highest-priority GPU-using ready real-time task on this
+        policy's device (shared rule: policy.pick_reserved)."""
+        cands = [j for j in self.sim.active_jobs()
+                 if j.task.uses_gpu and not j.done
+                 and j.task.device == self.device and self._eligible(j)]
+        return pick_reserved(cands)
 
     def _apply(self, tau_h: Optional["Job"]) -> None:
         """Lines 5-9: reserve tau_h's TSGs, or re-admit all active TSGs."""
@@ -90,7 +98,7 @@ class KernelThreadPolicy(BasePolicy):
             for tsg in self.tsgs.values():
                 self.runlist.add(tsg)
 
-    # ---- scheduling-decision loop (driven by the simulator) ----------------
+    # ---- scheduling-decision loop (driven by the engine) -------------------
     def notify_winners(self, winners: Dict[int, Optional["Job"]]) -> None:
         self._last_winners = dict(winners)
         if self.update_left > 0.0:
@@ -161,3 +169,33 @@ class KernelThreadPolicy(BasePolicy):
         """The kernel thread occupies its core (at top priority) while
         performing a runlist rewrite."""
         return self.update_left > 0.0
+
+    def occupied_cores(self) -> Tuple[int, ...]:
+        if self.kthread_cpu_busy() \
+                and self.sim.ts.kthread_cpu < self.sim.ts.n_cpus:
+            return (self.sim.ts.kthread_cpu,)
+        return ()
+
+    # ---- runtime face (scheduler thread in sched.executor) -----------------
+    def runtime_pick(self, active_jobs: Sequence):
+        """One polling-loop evaluation over live jobs: the device is
+        reserved for the highest-priority active real-time job (job
+        granularity — opaque jobs, no code changes)."""
+        return pick_reserved(active_jobs)
+
+    def runtime_apply(self, decision) -> bool:
+        changed = decision is not self.reserved
+        self.reserved = decision
+        return changed
+
+    def runtime_on_complete(self, job) -> None:
+        if self.reserved is job:
+            self.reserved = None
+
+    def runtime_admitted(self, job) -> bool:
+        return self.reserved is job or self.reserved is None
+
+
+register_policy("kthread", KernelThreadPolicy,
+                "Algorithm 1: kernel-thread job-granular reservation",
+                rtas={"busy": kthread_busy_rta})

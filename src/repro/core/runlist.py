@@ -6,7 +6,11 @@ schedules round-robin with per-TSG time slices.  We model exactly the state
 the scheduling approaches manipulate:
 
   * ``TSG``      — one per job in flight (pid, priority, active flag).
-  * ``Runlist``  — the set of schedulable TSGs + round-robin rotation state.
+  * ``Runlist``  — the set of schedulable TSGs + round-robin rotation state
+                   of ONE device.
+  * ``Platform`` — N devices, each with its own runlist (DESIGN.md §4);
+                   tasks carry a ``device`` index (default 0), and the
+                   engine instantiates one policy per device.
 
 Policies built directly on this model:
   * ``UnmanagedPolicy`` — the default driver: every active TSG is on the
@@ -16,11 +20,17 @@ Policies built directly on this model:
     FMLP+ style): the GPU is a mutually exclusive resource; a task acquires
     the lock for the whole GPU segment; the queue is priority-ordered (MPCP)
     or FIFO (FMLP+); lock holders are priority-boosted on their core.
+
+Both also implement the runtime face of ``SchedulingPolicy``, so the
+device executor can run them by name from the registry.
 """
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import TYPE_CHECKING, Optional
+from typing import TYPE_CHECKING, List, Optional
+
+from .policy import (BasePolicy, SchedulingPolicy, job_gpu_priority,
+                     job_priority, register_policy)
 
 if TYPE_CHECKING:  # pragma: no cover
     from .simulator import Job, Simulator
@@ -90,42 +100,22 @@ class Runlist:
             self.slice_left = self.slice_ms
 
 
-class BasePolicy:
-    """Interface the simulator drives.  All hooks are optional."""
+class Platform:
+    """N accelerators, one runlist each.  ``devices[d]`` is the hardware
+    scheduling state of device d; policies layer their arbitration on top."""
 
-    name = "base"
-    needs_ioctl_pieces = False  # insert `upd` pieces around GPU segments
+    def __init__(self, n_devices: int = 1, slice_ms: float = 2.0):
+        self.devices: List[Runlist] = [Runlist(slice_ms)
+                                       for _ in range(n_devices)]
 
-    def attach(self, sim: "Simulator") -> None:
-        self.sim = sim
+    def __len__(self) -> int:
+        return len(self.devices)
 
-    def on_job_release(self, job: "Job") -> None: ...
-    def on_job_complete(self, job: "Job") -> None: ...
-    def on_segment_begin(self, job: "Job") -> None: ...
-    def on_ge_complete(self, job: "Job") -> None: ...
-    def on_update_done(self, job: "Job", which: str) -> None: ...
-    def begin_update(self, job: "Job", piece) -> None: ...
-    def notify_winners(self, winners) -> None: ...
-    def try_acquire(self, job: "Job") -> bool:
-        return True
-
-    def gpu_owner(self) -> Optional["Job"]:
-        raise NotImplementedError
-
-    def gpu_rr_advance(self, dt: float) -> None: ...
-
-    def next_gpu_event(self) -> float:
-        return float("inf")
-
-    def effective_priority(self, job: "Job") -> int:
-        return job.task.priority
-
-    def cpu_blocked(self, job: "Job") -> bool:
-        """True if the job cannot use the CPU now (policy-specific)."""
-        return False
+    def __getitem__(self, d: int) -> Runlist:
+        return self.devices[d]
 
 
-class UnmanagedPolicy(BasePolicy):
+class UnmanagedPolicy(SchedulingPolicy):
     """Default driver: time-sliced round-robin over all active TSGs."""
 
     name = "unmanaged"
@@ -157,8 +147,10 @@ class UnmanagedPolicy(BasePolicy):
             return max(self.runlist.slice_left, 1e-9)
         return float("inf")
 
+    # runtime face: the default driver admits everything, always.
 
-class SyncPolicy(BasePolicy):
+
+class SyncPolicy(SchedulingPolicy):
     """Synchronization-based access control (MPCP-like / FMLP+-like).
 
     The GPU segment (G^m + G^e) is a critical section under a global lock.
@@ -167,6 +159,7 @@ class SyncPolicy(BasePolicy):
     """
 
     name = "sync"
+    needs_segment_hooks = True
 
     def __init__(self, order: str = "priority"):
         assert order in ("priority", "fifo")
@@ -174,22 +167,32 @@ class SyncPolicy(BasePolicy):
         self.holder: Optional["Job"] = None
         self.queue: list["Job"] = []  # waiting jobs
 
-    def on_segment_begin(self, job: "Job") -> None:
+    # ---- shared lock mechanics (simulator Jobs or runtime RTJobs) --------
+    def _lock_acquire(self, job) -> bool:
+        """Returns True if the lock was granted immediately."""
         if self.holder is None:
             self.holder = job
-        else:
-            self.queue.append(job)
+            return True
+        self.queue.append(job)
+        return False
+
+    def _lock_release(self) -> None:
+        self.holder = None
+        if self.queue:
+            if self.order == "priority":
+                self.queue.sort(key=lambda j: -job_priority(j))
+            self.holder = self.queue.pop(0)
+
+    # ---- simulator face ---------------------------------------------------
+    def on_segment_begin(self, job: "Job") -> None:
+        if not self._lock_acquire(job):
             job.lock_wait = True
 
     def on_ge_complete(self, job: "Job") -> None:
         assert self.holder is job, "lock released by non-holder"
-        self.holder = None
-        if self.queue:
-            if self.order == "priority":
-                self.queue.sort(key=lambda j: -j.task.priority)
-            nxt = self.queue.pop(0)
-            nxt.lock_wait = False
-            self.holder = nxt
+        self._lock_release()
+        if self.holder is not None:
+            self.holder.lock_wait = False
 
     def on_job_complete(self, job: "Job") -> None:
         if job in self.queue:
@@ -209,3 +212,37 @@ class SyncPolicy(BasePolicy):
         # waiting for the lock: blocked unless busy-waiting (sim handles
         # busy-wait CPU occupancy separately)
         return job.lock_wait and self.sim.mode == "suspend"
+
+    # ---- runtime face -----------------------------------------------------
+    def runtime_segment_begin(self, job) -> bool:
+        self._lock_acquire(job)
+        return False  # lock handoff is not a runlist rewrite
+
+    def runtime_segment_end(self, job) -> bool:
+        if self.holder is job:
+            self._lock_release()
+        elif job in self.queue:
+            self.queue.remove(job)
+        return False
+
+    def runtime_on_complete(self, job) -> None:
+        if self.holder is job:
+            self._lock_release()
+        if job in self.queue:
+            self.queue.remove(job)
+
+    def runtime_admitted(self, job) -> bool:
+        return self.holder is None or self.holder is job
+
+
+register_policy("unmanaged", UnmanagedPolicy,
+                "default driver: time-sliced RR, no priority (Table I)")
+register_policy("sync_priority",
+                lambda **kw: SyncPolicy(order="priority", **kw),
+                "MPCP-style lock-based GPU access, priority queue")
+register_policy("sync_fifo",
+                lambda **kw: SyncPolicy(order="fifo", **kw),
+                "FMLP+-style lock-based GPU access, FIFO queue")
+
+__all__ = ["TSG", "Runlist", "Platform", "UnmanagedPolicy", "SyncPolicy",
+           "BasePolicy", "BOOST"]

@@ -1,17 +1,19 @@
 """Discrete-event simulator for CPU+GPU task scheduling (Secs. II, V, VII).
 
-Simulates a partitioned fixed-priority multi-core + one GPU platform running
-a Taskset under one of the arbitration policies:
+Simulates a partitioned fixed-priority multi-core platform with one or
+more GPUs running a Taskset under one of the registered arbitration
+policies (see `core/policy.py`):
 
-  * ``UnmanagedPolicy``    — default driver, time-sliced round-robin (Sec. II)
-  * ``SyncPolicy``         — MPCP/FMLP+-style lock-based access (Sec. III)
-  * ``KernelThreadPolicy`` — Algorithm 1 (busy-waiting only)
-  * ``IoctlPolicy``        — Algorithm 2 (busy-waiting or self-suspension)
+  * ``unmanaged``     — default driver, time-sliced round-robin (Sec. II)
+  * ``sync_priority`` / ``sync_fifo`` — MPCP/FMLP+-style lock-based access
+  * ``kthread``       — Algorithm 1 (busy-waiting only)
+  * ``ioctl``         — Algorithm 2 (busy-waiting or self-suspension)
 
 Execution semantics:
   * Jobs are alternating pieces: cpu -> [upd] gm ge [upd] -> cpu ...
     (``upd`` = epsilon-long runlist update, IOCTL policy only).
-  * ``cpu``/``gm``/``upd`` pieces need the job's core; ``ge`` needs the GPU.
+  * ``cpu``/``gm``/``upd`` pieces need the job's core; ``ge`` needs the
+    task's device.
   * Busy-wait mode: the job occupies its core (at its priority) while its
     GPU work is pending/running; self-suspension releases the core.
   * ``upd`` pieces are non-preemptive kernel sections under a global
@@ -20,20 +22,23 @@ Execution semantics:
     is dormant until its predecessor completes (its response time still
     counts from release).
 
+Time advancement lives in `core/engine.py` (heap-based event queue); this
+module owns the job lifecycle and result bookkeeping.  On a multi-device
+Taskset the simulator instantiates one policy per device and routes
+job-scoped hooks by ``task.device`` (DESIGN.md §4).
+
 The simulator is the ground truth used to validate that analytic WCRTs
 bound the maximum observed response times (MORT <= WCRT, Table IV).
 """
 from __future__ import annotations
 
 import itertools
-import math
 import random
-from dataclasses import dataclass, field
-from typing import Dict, List, Optional
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Sequence, Union
 
-from .ioctl import IoctlPolicy
-from .kthread import KernelThreadPolicy
-from .runlist import BasePolicy, SyncPolicy, UnmanagedPolicy
+from .engine import EventDrivenEngine
+from .policy import SchedulingPolicy, make_policy
 from .task_model import Task, Taskset
 
 _TIME_EPS = 1e-9
@@ -84,7 +89,7 @@ class Job:
     def wants_gpu(self) -> bool:
         return self.active and not self.done and self.current_kind() == "ge"
 
-    def cpu_demand(self, mode: str, policy: BasePolicy) -> bool:
+    def cpu_demand(self, mode: str, policy: SchedulingPolicy) -> bool:
         """Does this job occupy (or want) its core right now?"""
         if not self.active or self.done:
             return False
@@ -125,11 +130,17 @@ class SimResult:
 
 
 def build_pieces(task: Task, with_ioctl: bool, epsilon: float,
-                 frac: float = 1.0) -> List[Piece]:
+                 frac: Optional[float] = 1.0,
+                 rng: Optional[random.Random] = None) -> List[Piece]:
     """Alternate CPU and GPU segments; sample actual durations at
-    best + frac * (wcet - best)."""
+    best + frac * (wcet - best).  With ``frac=None`` each piece draws its
+    own fraction uniformly from ``rng`` (randomized execution times)."""
     def dur(w, b):
-        return b + frac * (w - b)
+        f = rng.random() if frac is None else frac
+        return b + f * (w - b)
+
+    if frac is None and rng is None:
+        raise ValueError("frac=None (randomized durations) requires an rng")
 
     pieces: List[Piece] = []
     nc, ng = task.eta_c, task.eta_g
@@ -156,23 +167,55 @@ def build_pieces(task: Task, with_ioctl: bool, epsilon: float,
     return pieces
 
 
+PolicyArg = Union[str, SchedulingPolicy, Sequence[SchedulingPolicy]]
+
+
 class Simulator:
-    def __init__(self, ts: Taskset, policy: BasePolicy, mode: str = "busy",
-                 horizon: float = 3000.0, exec_frac: float = 1.0,
+    """One simulation run.
+
+    ``policy`` may be a registry name (one instance is built per device),
+    a single policy instance (single-device tasksets only), or an explicit
+    per-device sequence of instances.
+
+    ``exec_frac`` selects actual execution times between best-case and
+    WCET: a float places every piece at ``best + frac*(wcet-best)``;
+    ``None`` samples a fresh fraction per piece from ``random.Random(seed)``
+    — the only consumer of ``seed`` (deterministic runs ignore it).
+    """
+
+    def __init__(self, ts: Taskset, policy: PolicyArg, mode: str = "busy",
+                 horizon: float = 3000.0,
+                 exec_frac: Optional[float] = 1.0,
                  offsets: Optional[Dict[str, float]] = None,
                  seed: int = 0, trace: bool = False):
-        if isinstance(policy, KernelThreadPolicy) and mode != "busy":
+        if isinstance(policy, str):
+            policies = [make_policy(policy) for _ in range(ts.n_devices)]
+        elif isinstance(policy, SchedulingPolicy):
+            if ts.n_devices > 1:
+                raise ValueError(
+                    "multi-device tasksets need one policy per device; "
+                    "pass a registry name or a sequence of instances")
+            policies = [policy]
+        else:
+            policies = list(policy)
+            if len(policies) != ts.n_devices:
+                raise ValueError(
+                    f"{len(policies)} policies for {ts.n_devices} devices")
+        if any(p.requires_busy_wait for p in policies) and mode != "busy":
             raise ValueError("kernel-thread approach requires busy-waiting "
                              "(self-suspension breaks state detection, Sec. V-A)")
         self.ts = ts
-        self.policy = policy
+        self.policies = policies
+        self.policy = policies[0]  # seed-API compatibility
         self.mode = mode
         self.horizon = horizon
         self.exec_frac = exec_frac
         self.offsets = offsets or {}
         self.rng = random.Random(seed)
         self.keep_trace = trace
-        policy.attach(self)
+        for d, p in enumerate(policies):
+            p.device = d
+            p.attach(self)
 
         self.t = 0.0
         self.jobs: List[Job] = []          # in-flight (released, not done)
@@ -182,8 +225,12 @@ class Simulator:
         self.result = SimResult({t.name: [] for t in ts.tasks},
                                 {}, {t.name: 0 for t in ts.tasks},
                                 {t.name: 0 for t in ts.tasks}, [])
+        self.engine = EventDrivenEngine(self)
 
     # ------------------------------------------------------------------
+    def policy_for(self, job: Job) -> SchedulingPolicy:
+        return self.policies[job.task.device]
+
     def active_jobs(self) -> List[Job]:
         return [j for j in self.jobs if j.active and not j.done]
 
@@ -193,8 +240,10 @@ class Simulator:
 
     # ------------------------------------------------------------------
     def _release(self, task: Task) -> None:
-        pieces = build_pieces(task, self.policy.needs_ioctl_pieces,
-                              self.ts.epsilon, self.exec_frac)
+        policy = self.policies[task.device]
+        pieces = build_pieces(task, policy.needs_ioctl_pieces,
+                              self.ts.epsilon, self.exec_frac,
+                              rng=self.rng)
         job = Job(task, self.t, pieces)
         self.jobs.append(job)
         self.queues[task.name].append(job)
@@ -206,7 +255,7 @@ class Simulator:
     def _activate(self, job: Job) -> None:
         job.active = True
         self._trace("activate", job.task.name)
-        self.policy.on_job_release(job)
+        self.policy_for(job).on_job_release(job)
         self._enter_piece(job)
 
     def _enter_piece(self, job: Job) -> None:
@@ -215,9 +264,9 @@ class Simulator:
         if p is None:
             self._complete_job(job)
             return
-        if p.kind == "gm" and not self.policy.needs_ioctl_pieces:
+        if p.kind == "gm" and not self.policy_for(job).needs_ioctl_pieces:
             # segment boundary for lock-based / kthread policies
-            self.policy.on_segment_begin(job)
+            self.policy_for(job).on_segment_begin(job)
         if p.kind not in ("upd", "upde") and p.remaining <= _TIME_EPS:
             self._complete_piece(job)
 
@@ -227,11 +276,10 @@ class Simulator:
         job.idx += 1
         if p.kind in ("upd", "upde"):
             job.upd_started = False
-            self.policy.on_update_done(job, p.which)
+            self.policy_for(job).on_update_done(job, p.which)
         elif p.kind == "ge":
-            self.policy.on_ge_complete(job)
+            self.policy_for(job).on_ge_complete(job)
         self._enter_piece(job)
-
 
     def _complete_job(self, job: Job) -> None:
         job.completion = self.t
@@ -244,125 +292,13 @@ class Simulator:
         self.jobs.remove(job)
         q = self.queues[job.task.name]
         q.pop(0)
-        self.policy.on_job_complete(job)
+        self.policy_for(job).on_job_complete(job)
         if q:  # successor job was waiting for the process to free up
             self._activate(q[0])
 
     # ------------------------------------------------------------------
-    def _core_winners(self) -> Dict[int, Optional[Job]]:
-        """Highest-priority demanding job per core.  A started update piece
-        is a non-preemptive kernel section and keeps its core outright."""
-        winners: Dict[int, Optional[Job]] = {c: None for c in range(self.ts.n_cpus)}
-        for j in self.active_jobs():
-            if j.current_kind() == "upd" and j.upd_started:
-                winners[j.task.cpu] = j
-        for c in range(self.ts.n_cpus):
-            if winners[c] is not None:
-                continue
-            cands = [j for j in self.active_jobs()
-                     if j.task.cpu == c and j.cpu_demand(self.mode, self.policy)]
-            if cands:
-                winners[c] = max(cands,
-                                 key=lambda j: self.policy.effective_priority(j))
-        # the kernel thread's update preempts everything on its core
-        if isinstance(self.policy, KernelThreadPolicy) \
-                and self.policy.kthread_cpu_busy() \
-                and self.ts.kthread_cpu < self.ts.n_cpus:
-            winners[self.ts.kthread_cpu] = None  # core consumed by kthread
-        return winners
-
-    def _allocate(self) -> Dict[int, Optional[Job]]:
-        """Compute core winners, letting due runlist updates acquire the
-        driver mutex: completion-side (driver-context) updates first, then
-        winners standing at a begin() boundary — cascading through
-        zero-cost (pending-only) updates."""
-        for _ in range(16 * (len(self.jobs) + 2)):
-            winners = self._core_winners()
-            entered = False
-            # driver-context end updates need no core and go first
-            ends = sorted([j for j in self.active_jobs()
-                           if j.current_kind() == "upde" and not j.upd_started],
-                          key=lambda j: -j.task.priority)
-            begins = sorted(
-                [j for j in winners.values() if j is not None
-                 and j.current_kind() == "upd" and not j.upd_started],
-                key=lambda j: -self.policy.effective_priority(j))
-            for j in ends + begins:
-                if self.policy.try_acquire(j):
-                    j.upd_started = True
-                    piece = j.current_piece()
-                    self.policy.begin_update(j, piece)
-                    entered = True
-                    if piece.remaining <= _TIME_EPS:
-                        self._complete_piece(j)
-                    break  # re-derive state after a change
-            if not entered:
-                return winners
-        raise RuntimeError("allocation did not settle")
-
     def run(self) -> SimResult:
-        guard = 0
-        max_events = int(5e6)
-        while self.t < self.horizon - _TIME_EPS:
-            guard += 1
-            if guard > max_events:
-                raise RuntimeError("simulator event budget exceeded")
-
-            # 1. releases due now
-            for task in self.ts.tasks:
-                while self.next_release[task.name] <= self.t + _TIME_EPS:
-                    self.next_release[task.name] += task.period
-                    self._release(task)
-
-            # 2. allocation (lets due IOCTL updates enter the kernel section)
-            winners = self._allocate()
-            self.policy.notify_winners(winners)
-            if isinstance(self.policy, KernelThreadPolicy):
-                winners = self._core_winners()  # a rewrite may block a core
-            owner = self.policy.gpu_owner()
-
-            # driver-context end updates progress in wall time once started
-            driver_upds = [j for j in self.active_jobs()
-                           if j.current_kind() == "upde" and j.upd_started]
-
-            # 3. next event horizon
-            dt = self.horizon - self.t
-            for task in self.ts.tasks:
-                dt = min(dt, self.next_release[task.name] - self.t)
-            for c, j in winners.items():
-                if j is not None and j.cpu_progresses():
-                    dt = min(dt, j.current_piece().remaining)
-            if owner is not None and owner.wants_gpu():
-                dt = min(dt, owner.current_piece().remaining)
-            for j in driver_upds:
-                dt = min(dt, j.current_piece().remaining)
-            dt = min(dt, self.policy.next_gpu_event())
-            if dt <= _TIME_EPS:
-                dt = _TIME_EPS  # numerical floor; completions fire below
-
-            # 4. advance
-            for c, j in winners.items():
-                if j is not None and j.cpu_progresses():
-                    j.current_piece().remaining -= dt
-            if owner is not None and owner.wants_gpu():
-                owner.current_piece().remaining -= dt
-            for j in driver_upds:
-                j.current_piece().remaining -= dt
-            self.policy.gpu_rr_advance(dt)
-            self.t += dt
-
-            # 5. fire completions (cascades handled inside)
-            for j in list(self.jobs):
-                p = j.current_piece()
-                if p is None or not j.active:
-                    continue
-                if p.remaining <= _TIME_EPS:
-                    progressed = (p.kind == "ge" or
-                                  (p.kind == "upde" and j.upd_started) or
-                                  j.cpu_progresses())
-                    if progressed:
-                        self._complete_piece(j)
-
+        self.engine.run()
         for name, rts in self.result.response_times.items():
             self.result.mort[name] = max(rts) if rts else 0.0
         return self.result
@@ -373,19 +309,19 @@ class Simulator:
 # --------------------------------------------------------------------------
 
 def simulate(ts: Taskset, approach: str, mode: str = "busy",
-             horizon: float = 3000.0, **kw) -> SimResult:
-    """approach in {unmanaged, sync_priority, sync_fifo, kthread, ioctl}."""
-    if approach == "unmanaged":
-        policy: BasePolicy = UnmanagedPolicy()
-    elif approach == "sync_priority":
-        policy = SyncPolicy(order="priority")
-    elif approach == "sync_fifo":
-        policy = SyncPolicy(order="fifo")
-    elif approach == "kthread":
-        policy = KernelThreadPolicy(poll_interval=kw.pop("poll_interval", 0.0))
+             horizon: float = 3000.0,
+             policy_kw: Optional[dict] = None, **kw) -> SimResult:
+    """Run ``ts`` under a registered approach.
+
+    ``approach`` is any name in `core.policy.available_policies()`
+    (seed set: unmanaged, sync_priority, sync_fifo, kthread, ioctl).
+    ``policy_kw`` is forwarded to the policy factory; the historical
+    ``poll_interval=`` keyword still reaches the kthread factory."""
+    policy_kw = dict(policy_kw or {})
+    if approach == "kthread" and "poll_interval" in kw:
+        policy_kw.setdefault("poll_interval", kw.pop("poll_interval"))
+    policies = [make_policy(approach, **policy_kw)
+                for _ in range(ts.n_devices)]
+    if any(p.requires_busy_wait for p in policies):
         mode = "busy"
-    elif approach == "ioctl":
-        policy = IoctlPolicy()
-    else:
-        raise ValueError(approach)
-    return Simulator(ts, policy, mode=mode, horizon=horizon, **kw).run()
+    return Simulator(ts, policies, mode=mode, horizon=horizon, **kw).run()

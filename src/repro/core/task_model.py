@@ -54,7 +54,9 @@ class Task:
     ``priority`` follows Linux rt_priority convention: larger = higher.
     ``gpu_priority`` defaults to ``priority`` (Sec. V-C assignment may change
     it).  ``best_effort`` tasks have no real-time priority (they map to
-    CFS/default tasks in the paper's evaluation).
+    CFS/default tasks in the paper's evaluation).  ``device`` is the index
+    of the accelerator the task's GPU segments execute on (multi-GPU
+    platforms, DESIGN.md §4); 0 on the paper's single-GPU platform.
     """
 
     name: str
@@ -67,6 +69,7 @@ class Task:
     gpu_priority: Optional[int] = None
     best_effort: bool = False
     cpu_segments_best: Optional[Sequence[float]] = None
+    device: int = 0  # accelerator index
 
     def __post_init__(self):
         self.cpu_segments = tuple(float(c) for c in self.cpu_segments)
@@ -86,31 +89,40 @@ class Task:
             # Best-effort tasks sit below all real-time priorities.
             self.priority = BEST_EFFORT_PRIORITY + self.priority % 1000
             self.gpu_priority = self.priority
+        # cache the cumulative quantities: they are invariant after
+        # construction (priority mutations don't touch segment times) and
+        # sit on the hot path of every fixed-point RTA iteration
+        self._C = sum(self.cpu_segments)
+        self._C_best = sum(self.cpu_segments_best)
+        self._G = sum(g.total for g in self.gpu_segments)
+        self._Gm = sum(g.misc for g in self.gpu_segments)
+        self._Ge = sum(g.exec for g in self.gpu_segments)
+        self._Ge_best = sum(g.exec_best for g in self.gpu_segments)
 
     # --- cumulative quantities used throughout the analysis -----------------
     @property
     def C(self) -> float:
-        return sum(self.cpu_segments)
+        return self._C
 
     @property
     def C_best(self) -> float:
-        return sum(self.cpu_segments_best)
+        return self._C_best
 
     @property
     def G(self) -> float:
-        return sum(g.total for g in self.gpu_segments)
+        return self._G
 
     @property
     def Gm(self) -> float:
-        return sum(g.misc for g in self.gpu_segments)
+        return self._Gm
 
     @property
     def Ge(self) -> float:
-        return sum(g.exec for g in self.gpu_segments)
+        return self._Ge
 
     @property
     def Ge_best(self) -> float:
-        return sum(g.exec_best for g in self.gpu_segments)
+        return self._Ge_best
 
     @property
     def eta_c(self) -> int:
@@ -140,12 +152,14 @@ class Task:
 
 @dataclass
 class Taskset:
-    """A taskset on a multi-core platform with one GPU (Sec. IV)."""
+    """A taskset on a multi-core platform with ``n_devices`` GPUs
+    (Sec. IV; the paper's platform has exactly one)."""
 
     tasks: list[Task]
     n_cpus: int
     epsilon: float = 1.0  # runlist update cost (ms), Table II
     kthread_cpu: int = 0  # core hosting the kernel thread (kthread approach)
+    n_devices: int = 1    # number of accelerators (each with its own runlist)
 
     def __post_init__(self):
         prios = [t.priority for t in self.tasks]
@@ -154,6 +168,13 @@ class Taskset:
         for t in self.tasks:
             if not (0 <= t.cpu < self.n_cpus):
                 raise ValueError(f"{t.name}: cpu {t.cpu} out of range")
+            if not (0 <= t.device < self.n_devices):
+                raise ValueError(f"{t.name}: device {t.device} out of range")
+
+    def tasks_on_device(self, device: int) -> list[Task]:
+        """GPU-using tasks bound to ``device`` (CPU-only tasks are device-
+        agnostic and excluded)."""
+        return [t for t in self.tasks if t.uses_gpu and t.device == device]
 
     @property
     def rt_tasks(self) -> list[Task]:

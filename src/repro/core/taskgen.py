@@ -36,6 +36,7 @@ class GenParams:
     best_effort_ratio: float = 0.0   # Fig. 12 sweep
     bcet_ratio: float = 1.0          # best-case = ratio * WCET
     n_tasks_total: Optional[int] = None  # Fig. 7 sweep (overrides per-cpu)
+    n_devices: int = 1               # multi-GPU platform (DESIGN.md §4)
 
 
 def uunifast(rng: random.Random, n: int, total_util: float) -> list[float]:
@@ -84,10 +85,16 @@ def generate_taskset(seed: int, p: GenParams = GenParams()) -> Taskset:
     be_idx = set(rng.sample(range(n), min(n_be, n)))
 
     tasks = []
+    n_gpu_seen = 0  # device assignment: GPU tasks round-robin over devices
     for i, (cpu, util) in enumerate(specs):
         period = rng.uniform(*p.period_ms)
         budget = max(util * period, 1e-3)
         uses_gpu = i in gpu_idx
+        # deterministic round-robin keeps the rng stream identical to the
+        # single-device generator (golden tasksets are unchanged)
+        device = n_gpu_seen % p.n_devices if uses_gpu else 0
+        if uses_gpu:
+            n_gpu_seen += 1
         if uses_gpu:
             g_ratio = rng.uniform(*p.g_to_c_ratio)
             C_total = budget / (1.0 + g_ratio)
@@ -115,6 +122,7 @@ def generate_taskset(seed: int, p: GenParams = GenParams()) -> Taskset:
             period=period, deadline=period, cpu=cpu,
             priority=0,  # assigned below (RM)
             best_effort=(i in be_idx),
+            device=device,
         ))
 
     # -- Rate Monotonic priorities, unique -----------------------------------
@@ -129,6 +137,7 @@ def generate_taskset(seed: int, p: GenParams = GenParams()) -> Taskset:
             cpu_segments_best=t.cpu_segments_best,
             gpu_segments=t.gpu_segments, period=t.period,
             deadline=t.deadline, cpu=t.cpu, priority=pr,
-            best_effort=t.best_effort)
+            best_effort=t.best_effort, device=t.device)
 
-    return Taskset(tasks=tasks, n_cpus=p.n_cpus, epsilon=p.epsilon)
+    return Taskset(tasks=tasks, n_cpus=p.n_cpus, epsilon=p.epsilon,
+                   n_devices=p.n_devices)

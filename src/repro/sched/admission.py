@@ -5,21 +5,32 @@ the current taskset and the paper's schedulability test decides.
 This is where the paper's analysis becomes an operational guarantee: jobs
 admitted here have analytically bounded response times under the chosen
 scheduling approach (kthread/ioctl x busy/suspend), including the measured
-runlist-update overhead epsilon."""
+runlist-update overhead epsilon.
+
+The analysis matching each approach lives in the policy registry
+(`core.policy.PolicySpec.rtas`), so the executor, the simulator, and the
+admission controller all resolve one policy name to one consistent
+(implementation, analysis) pair."""
 from __future__ import annotations
 
 from dataclasses import dataclass
 from typing import Callable, Dict, List, Optional
 
-from ..core import (GpuSegment, Task, Taskset, ioctl_busy_rta,
-                    ioctl_suspend_rta, kthread_busy_rta, schedulable)
+from ..core import GpuSegment, Task, Taskset, schedulable
 from ..core.audsley import assign_gpu_priorities
+from ..core.policy import policy_spec
 
-RTAS: Dict[str, Callable] = {
-    ("poll", "busy"): kthread_busy_rta,
-    ("notify", "busy"): ioctl_busy_rta,
-    ("notify", "suspend"): ioctl_suspend_rta,
-}
+
+def rta_for(policy: str, wait_mode: str) -> Callable:
+    """Resolve the RTA guaranteeing (approach, wait mode); accepts registry
+    names and the executor's legacy mode names ("notify"/"poll")."""
+    spec = policy_spec(policy)
+    try:
+        return spec.rtas[wait_mode]
+    except KeyError:
+        raise ValueError(
+            f"approach {spec.name!r} has no analysis for "
+            f"wait_mode={wait_mode!r} (available: {sorted(spec.rtas)})")
 
 
 @dataclass
@@ -52,6 +63,7 @@ class AdmissionController:
                  n_cpus: int = 4, epsilon_ms: float = 1.0,
                  try_gpu_priorities: bool = True):
         self.mode, self.wait_mode = mode, wait_mode
+        self.rta = rta_for(mode, wait_mode)
         self.n_cpus = n_cpus
         self.epsilon_ms = epsilon_ms
         self.try_gpu_priorities = try_gpu_priorities
@@ -69,7 +81,7 @@ class AdmissionController:
         if prof.best_effort:
             self.admitted.append(prof)
             return {"admitted": True, "via": "best_effort", "wcrt": {}}
-        rta = RTAS[(self.mode, self.wait_mode)]
+        rta = self.rta
         ts = self._taskset(prof)
         if schedulable(ts, rta):
             self.admitted.append(prof)

@@ -1,20 +1,28 @@
 """Preemptive priority-based device executor — the TPU-native realization
 of the paper's runlist control (see DESIGN.md §2).
 
-The device (or mesh slice) executes one XLA program at a time; the
-executor's admission state decides *whose* programs may dispatch.  Two
-modes realize the paper's two approaches:
+The device (or mesh slice) executes one XLA program at a time; a
+``SchedulingPolicy`` resolved from the `repro.core.policy` registry decides
+*whose* programs may dispatch.  The policy object is the very same class
+the simulator drives, so Algorithms 1 and 2 have exactly one
+implementation:
 
-  * ``notify`` (IOCTL approach): jobs bracket device segments with the
-    ``device_segment(job)`` context manager.  Admission follows Algorithm 2
-    verbatim over (task_running, task_pending); the runlist-update critical
-    section is guarded by a mutex (the rt_mutex analogue) and its measured
-    cost is the epsilon of the analysis (benchmarks/overhead.py).
+  * ``policy="ioctl"`` (legacy ``mode="notify"``): jobs bracket device
+    segments with the ``device_segment(job)`` context manager.  Admission
+    follows Algorithm 2 over the shared ``Alg2State``
+    (task_running/task_pending); the runlist-update critical section is
+    guarded by a mutex (the rt_mutex analogue) and its measured cost is
+    the epsilon of the analysis (benchmarks/overhead.py).
 
-  * ``poll`` (kernel-thread approach): a scheduler thread polls job states
-    every ``poll_interval`` and reserves the device for the
-    highest-priority active real-time job at *job* granularity — no job
-    code changes (opaque jobs).
+  * ``policy="kthread"`` (legacy ``mode="poll"``): a scheduler thread
+    polls job states every ``poll_interval`` and reserves the device for
+    the highest-priority active real-time job at *job* granularity via the
+    shared ``pick_reserved`` — no job code changes (opaque jobs).
+
+  * ``policy="unmanaged"``: every dispatch is admitted (default driver).
+
+Any other registered policy (e.g. ``sync_priority``) works the same way:
+the executor only ever talks to the runtime face of ``SchedulingPolicy``.
 
 Preemption takes effect at program boundaries: before each dispatch the
 executor re-checks that the calling job is still admitted (and otherwise
@@ -26,39 +34,68 @@ from __future__ import annotations
 
 import threading
 import time
-from typing import Callable, List, Optional
+from typing import Callable, List, Optional, Union
 
 import jax
 
+from ..core.policy import (LEGACY_MODES, SchedulingPolicy, make_policy)
 from .job import RTJob
 
 
 class DeviceExecutor:
-    def __init__(self, mode: str = "notify", wait_mode: str = "suspend",
-                 poll_interval: float = 0.001):
-        assert mode in ("notify", "poll", "unmanaged")
+    def __init__(self, mode: Optional[str] = None,
+                 wait_mode: str = "suspend",
+                 poll_interval: float = 0.001,
+                 policy: Union[str, SchedulingPolicy, None] = None):
+        """``policy`` is a registry name (or instance); the historical
+        ``mode`` argument ("notify"/"poll"/"unmanaged") keeps working and
+        maps onto the registry names."""
         assert wait_mode in ("busy", "suspend")
-        if mode == "poll" and wait_mode != "busy":
+        if policy is None:
+            policy = mode if mode is not None else "ioctl"
+        if isinstance(policy, str):
+            self.policy_name = LEGACY_MODES.get(policy, policy)
+            self.policy = make_policy(self.policy_name)
+        else:
+            self.policy = policy
+            self.policy_name = policy.name
+        if self.policy.requires_busy_wait and wait_mode != "busy":
             # Sec. V-A: self-suspension would be misread as a state change
             wait_mode = "busy"
-        self.mode = mode
+        # historic mode label (admission.py, benchmarks still read it)
+        _back = {v: k for k, v in LEGACY_MODES.items()}
+        self.mode = mode if mode is not None else _back.get(
+            self.policy_name, self.policy_name)
         self.wait_mode = wait_mode
         self.poll_interval = poll_interval
         self._mutex = threading.Lock()      # runlist-update rt_mutex
         self._cv = threading.Condition(self._mutex)
-        self.task_running: List[RTJob] = []  # Algorithm 2 state
-        self.task_pending: List[RTJob] = []
-        self.reserved: Optional[RTJob] = None  # poll mode reservation
         self._active: List[RTJob] = []       # jobs currently in a release
         self._device_lock = threading.Lock()  # serializes program dispatch
         self.update_times: List[float] = []   # measured epsilon samples
         self.dispatches = 0
         self._poller: Optional[threading.Thread] = None
         self._stop = threading.Event()
-        if mode == "poll":
+        self.policy.runtime_attach(self)
+        if self.policy.wants_poll_thread:
             self._poller = threading.Thread(target=self._poll_loop,
                                             daemon=True, name="kthread")
             self._poller.start()
+
+    # ------------------------------------------------------------------
+    # Algorithm 2 state views (API compatibility with the seed executor)
+    # ------------------------------------------------------------------
+    @property
+    def task_running(self) -> List[RTJob]:
+        return getattr(self.policy, "running", [])
+
+    @property
+    def task_pending(self) -> List[RTJob]:
+        return getattr(self.policy, "pending", [])
+
+    @property
+    def reserved(self) -> Optional[RTJob]:
+        return getattr(self.policy, "reserved", None)
 
     # ------------------------------------------------------------------
     # job lifecycle (state changes the polling scheduler watches)
@@ -66,17 +103,13 @@ class DeviceExecutor:
     def on_job_start(self, job: RTJob) -> None:
         with self._mutex:
             self._active.append(job)
+            self.policy.runtime_on_start(job)
 
     def on_job_complete(self, job: RTJob) -> None:
         with self._mutex:
             if job in self._active:
                 self._active.remove(job)
-            if job in self.task_running:
-                self.task_running.remove(job)
-            if job in self.task_pending:
-                self.task_pending.remove(job)
-            if self.reserved is job:
-                self.reserved = None
+            self.policy.runtime_on_complete(job)
             self._cv.notify_all()
 
     def shutdown(self) -> None:
@@ -85,57 +118,35 @@ class DeviceExecutor:
             self._poller.join(timeout=1.0)
 
     # ------------------------------------------------------------------
-    # poll mode: Algorithm 1 (job-granular reservation)
+    # poll mode: Algorithm 1 (job-granular reservation, shared rule)
     # ------------------------------------------------------------------
     def _poll_loop(self) -> None:
-        prev: Optional[RTJob] = None
         while not self._stop.is_set():
             with self._mutex:
                 rt = [j for j in self._active if j.is_rt]
-                new = max(rt, key=lambda j: j.device_priority, default=None)
-                if new is not prev:
-                    t0 = time.perf_counter()
-                    self.reserved = new          # runlist rewrite
+                decision = self.policy.runtime_pick(rt)
+                # time only the rewrite, not the job-list scan — the scan
+                # is the paper's negligible polling check (footnote 3)
+                t0 = time.perf_counter()
+                if self.policy.runtime_apply(decision):
                     self._cv.notify_all()
                     self.update_times.append(time.perf_counter() - t0)
-                    prev = new
             time.sleep(self.poll_interval)
 
     # ------------------------------------------------------------------
-    # notify mode: Algorithm 2 (segment-granular admission)
+    # notify mode: Algorithm 2 entry points (caller holds self._mutex).
+    # Thin shims over the shared policy state machine, kept for the seed
+    # executor's API; device_segment() is the public path.
     # ------------------------------------------------------------------
     def _ioctl_add(self, job: RTJob) -> None:
         t0 = time.perf_counter()
-        if not job.is_rt:
-            if not any(j.is_rt for j in self.task_running):
-                self.task_running.append(job)
-            else:
-                self.task_pending.append(job)
-        else:
-            tau_h = max(self.task_running,
-                        key=lambda j: j.device_priority, default=None)
-            if tau_h is None or job.device_priority > tau_h.device_priority:
-                self.task_running.append(job)
-                if tau_h is not None:
-                    self.task_running.remove(tau_h)
-                    self.task_pending.append(tau_h)
-            else:
-                self.task_pending.append(job)
+        self.policy.runtime_segment_begin(job)
         self.update_times.append(time.perf_counter() - t0)
         self._cv.notify_all()
 
     def _ioctl_remove(self, job: RTJob) -> None:
         t0 = time.perf_counter()
-        rt_pend = [j for j in self.task_pending if j.is_rt]
-        if rt_pend:
-            tau_k = max(rt_pend, key=lambda j: j.device_priority)
-            self.task_pending.remove(tau_k)
-            self.task_running.append(tau_k)
-        else:
-            self.task_running.extend(self.task_pending)
-            self.task_pending.clear()
-        if job in self.task_running:
-            self.task_running.remove(job)
+        self.policy.runtime_segment_end(job)
         self.update_times.append(time.perf_counter() - t0)
         self._cv.notify_all()
 
@@ -143,18 +154,7 @@ class DeviceExecutor:
     # admission check used at every program boundary
     # ------------------------------------------------------------------
     def _admitted(self, job: RTJob) -> bool:
-        if self.mode == "unmanaged":
-            return True
-        if self.mode == "poll":
-            return (self.reserved is job) or \
-                (self.reserved is None and not job.is_rt) or \
-                (self.reserved is None and job.is_rt)
-        if job not in self.task_running:
-            return False
-        rt = [j for j in self.task_running if j.is_rt]
-        if rt:
-            return job is max(rt, key=lambda j: j.device_priority)
-        return True
+        return self.policy.runtime_admitted(job)
 
     def _wait_admitted(self, job: RTJob) -> None:
         if self.wait_mode == "busy":
@@ -176,13 +176,13 @@ class DeviceExecutor:
             self.ex, self.job = ex, job
 
         def __enter__(self):
-            if self.ex.mode == "notify":
+            if self.ex.policy.needs_segment_hooks:
                 with self.ex._mutex:
                     self.ex._ioctl_add(self.job)
             return self
 
         def __exit__(self, *exc):
-            if self.ex.mode == "notify":
+            if self.ex.policy.needs_segment_hooks:
                 with self.ex._mutex:
                     self.ex._ioctl_remove(self.job)
             return False

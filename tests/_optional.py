@@ -1,0 +1,30 @@
+"""Optional-dependency shims for the test suite.
+
+``hypothesis`` is a test extra (``pip install .[test]``), not a runtime
+dependency.  Importing ``given``/``settings``/``st`` from here keeps
+modules collectable without it: property tests are skipped (not errored),
+and every non-property test in the same module still runs.
+"""
+try:
+    from hypothesis import given, settings  # noqa: F401
+    from hypothesis import strategies as st  # noqa: F401
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover - exercised only without the extra
+    import pytest
+
+    HAVE_HYPOTHESIS = False
+
+    class _AnyStrategy:
+        """Inert stand-in: any strategy constructor returns None."""
+
+        def __getattr__(self, name):
+            return lambda *a, **k: None
+
+    st = _AnyStrategy()
+
+    def given(*a, **k):
+        return pytest.mark.skip(
+            reason="hypothesis not installed (pip install .[test])")
+
+    def settings(*a, **k):
+        return lambda fn: fn

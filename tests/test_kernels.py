@@ -5,8 +5,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+
+from _optional import given, settings, st  # hypothesis or skip-shims
 
 from repro.kernels import ref
 from repro.kernels.decode_attention import flash_decode

@@ -1,0 +1,166 @@
+"""The policy registry (core/policy.py): one name space shared by the
+simulator, the benchmarks, and the runtime executor — and one Algorithm 2
+state machine behind both the simulated and the live IOCTL admission."""
+import pytest
+
+from repro.core import (Alg2State, GenParams, GpuSegment, SchedulingPolicy,
+                        Task, Taskset, available_policies, generate_taskset,
+                        make_policy, pick_reserved, policy_spec,
+                        register_policy, simulate)
+from repro.core import policy as policy_mod
+from repro.core.ioctl import IoctlPolicy
+
+
+def test_seed_policies_registered():
+    names = available_policies()
+    for name in ("unmanaged", "sync_priority", "sync_fifo", "kthread",
+                 "ioctl"):
+        assert name in names
+
+
+def test_legacy_executor_mode_names_resolve():
+    assert policy_spec("notify").name == "ioctl"
+    assert policy_spec("poll").name == "kthread"
+    assert policy_spec("unmanaged").name == "unmanaged"
+
+
+def test_unknown_policy_rejected():
+    with pytest.raises(ValueError, match="unknown scheduling approach"):
+        make_policy("nonesuch")
+
+
+def test_rtas_resolved_from_registry():
+    from repro.core import (ioctl_busy_rta, ioctl_suspend_rta,
+                            kthread_busy_rta)
+    from repro.sched.admission import rta_for
+    assert rta_for("ioctl", "busy") is ioctl_busy_rta
+    assert rta_for("notify", "suspend") is ioctl_suspend_rta
+    assert rta_for("poll", "busy") is kthread_busy_rta
+    with pytest.raises(ValueError, match="no analysis"):
+        rta_for("kthread", "suspend")
+
+
+# ---------------------------------------------------------------------------
+# a toy policy registered once shows up in all three consumers
+# ---------------------------------------------------------------------------
+
+class ToyPriorityPolicy(SchedulingPolicy):
+    """Idealized zero-overhead preemptive priority GPU (no runlist cost):
+    the highest-priority job wanting the device owns it, always."""
+
+    name = "toy_prio"
+
+    def gpu_owner(self):
+        want = [j for j in self.sim.active_jobs()
+                if j.wants_gpu() and j.task.device == self.device]
+        return max(want, key=lambda j: j.task.gpu_priority, default=None)
+
+
+@pytest.fixture
+def toy_registered():
+    register_policy("toy_prio", ToyPriorityPolicy, "test-only toy policy")
+    yield
+    policy_mod._REGISTRY.pop("toy_prio", None)
+
+
+def fig3_like_taskset():
+    t1 = Task("tau1", [2.5, 1.0], [GpuSegment(0.0, 2.0)], 100.0, 100.0, 0, 30)
+    t3 = Task("tau3", [0.5, 1.0], [GpuSegment(0.0, 4.0)], 100.0, 100.0, 1, 10)
+    return Taskset([t1, t3], n_cpus=2, epsilon=0.25)
+
+
+def test_toy_policy_in_simulator(toy_registered):
+    ts = fig3_like_taskset()
+    res = simulate(ts, "toy_prio", mode="busy", horizon=100.0)
+    # ideal preemption, zero epsilon: tau1 runs at its standalone time
+    assert res.mort["tau1"] == pytest.approx(2.5 + 2.0 + 1.0, abs=1e-6)
+
+
+def test_toy_policy_in_executor(toy_registered):
+    from repro.sched import DeviceExecutor, RTJob
+    ex = DeviceExecutor(policy="toy_prio")
+    assert ex.policy_name == "toy_prio"
+    job = RTJob("j", lambda job, it: None, period_s=1.0, priority=5)
+    with ex._mutex:
+        assert ex._admitted(job)  # base runtime face admits everything
+    ex.shutdown()
+
+
+def test_toy_policy_in_benchmarks(toy_registered):
+    from benchmarks.run import bench_policies
+    rows = bench_policies()
+    assert any(r["policy"] == "toy_prio" for r in rows)
+    assert any(r["policy"] == "ioctl" for r in rows)
+
+
+# ---------------------------------------------------------------------------
+# shared Algorithm 1 / 2 state machines
+# ---------------------------------------------------------------------------
+
+class FakeJob:
+    """Runtime-shaped job (no .task): the accessors' duck-typing path."""
+
+    def __init__(self, name, prio, rt=True):
+        self.name = name
+        self.priority = prio
+        self.device_priority = prio
+        self.is_rt = rt
+
+    def __repr__(self):
+        return self.name
+
+
+def test_alg2_preemption_and_promotion():
+    st = Alg2State()
+    lo, hi, mid = FakeJob("lo", 1), FakeJob("hi", 3), FakeJob("mid", 2)
+    assert st.add(lo) is True          # empty -> runlist rewrite
+    assert st.add(hi) is True          # preempts lo
+    assert st.running == [hi] and st.pending == [lo]
+    assert lo.gpu_pending and not hi.gpu_pending
+    assert st.add(mid) is False        # queued: cheap pending-only update
+    assert st.remove(hi) is True       # mid promoted over lo
+    assert st.running == [mid] and st.pending == [lo]
+    assert st.remove(mid) is True      # union fallback re-admits lo
+    assert st.running == [lo] and st.pending == []
+
+
+def test_alg2_best_effort_displacement():
+    st = Alg2State()
+    be1, be2 = FakeJob("be1", 0, rt=False), FakeJob("be2", 0, rt=False)
+    rt = FakeJob("rt", 5)
+    st.add(be1)
+    st.add(be2)
+    assert st.running == [be1, be2]    # no RT member: BE co-run
+    assert st.add(rt) is True          # displaces every best-effort TSG
+    assert st.running == [rt]
+    assert set(st.pending) == {be1, be2}
+    st.remove(rt)                      # no RT pending: union re-admits BE
+    assert set(st.running) == {be1, be2}
+
+
+def test_executor_and_simulator_share_alg2():
+    """The executor's task_running IS the policy's Alg2State list — the
+    very class the simulator's IoctlPolicy drives."""
+    from repro.sched import DeviceExecutor
+    ex = DeviceExecutor(policy="ioctl")
+    assert isinstance(ex.policy, IoctlPolicy)
+    assert isinstance(ex.policy.alg2, Alg2State)
+    assert ex.task_running is ex.policy.alg2.running
+    sim_side = IoctlPolicy()
+    assert type(sim_side.alg2) is type(ex.policy.alg2)
+    ex.shutdown()
+
+
+def test_pick_reserved_rule():
+    jobs = [FakeJob("a", 1), FakeJob("be", 9, rt=False), FakeJob("b", 2)]
+    assert pick_reserved(jobs).name == "b"     # highest-priority RT
+    assert pick_reserved([jobs[1]]) is None    # best-effort never reserved
+    assert pick_reserved([]) is None
+
+
+def test_multi_device_simulator_needs_policy_per_device():
+    from repro.core import Simulator, UnmanagedPolicy
+    p = GenParams(n_cpus=2, tasks_per_cpu=(2, 3), n_devices=2)
+    ts = generate_taskset(0, p)
+    with pytest.raises(ValueError, match="one policy per device"):
+        Simulator(ts, UnmanagedPolicy())

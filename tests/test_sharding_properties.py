@@ -8,9 +8,9 @@ import sys
 
 import jax
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
 from jax.sharding import PartitionSpec as P
+
+from _optional import given, settings, st  # hypothesis or skip-shims
 
 from repro.configs import SHAPES, get, names
 from repro.models import transformer

@@ -3,8 +3,8 @@ property tests on UUniFast."""
 import random
 
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+
+from _optional import given, settings, st  # hypothesis or skip-shims
 
 from repro.core import GenParams, generate_taskset, uunifast
 
