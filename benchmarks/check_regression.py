@@ -1,0 +1,100 @@
+"""CI gate: compare a schedulability-sweep result JSON against the
+committed baseline (benchmarks/results/ci_baseline.json).
+
+Fails (exit 1) when wall-clock regresses more than --max-regression
+(default 25%) over the baseline.  Acceptance-ratio drift is reported but
+does not gate here: the sweep seeds are fixed, so ratios only move when
+the analysis itself changes — which the soundness job and the golden
+vectors in tests/test_analysis.py adjudicate, not a perf gate.
+
+The baseline records the sweep configuration (n, workers); the CI job
+pins --workers to the baseline's value so the comparison is
+parallelism-for-parallelism.  Wall-clock still depends on host
+hardware: if runner hardware shifts the floor, regenerate the baseline
+from the job's uploaded artifact rather than widening the margin.
+
+Usage:
+    python benchmarks/schedulability.py --quick --json current.json
+    python benchmarks/check_regression.py current.json
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+
+def load(path: str) -> dict:
+    with open(path) as f:
+        return json.load(f)
+
+
+def drifted_rows(current: dict, baseline: dict) -> list[str]:
+    base_by_key = {
+        (r.get("sweep"), r.get("x")): r for r in baseline.get("rows", [])
+    }
+    drifts = []
+    for row in current.get("rows", []):
+        base = base_by_key.get((row.get("sweep"), row.get("x")))
+        if base is None:
+            continue
+        for method, value in row.items():
+            if method in ("sweep", "x") or method not in base:
+                continue
+            if abs(value - base[method]) > 1e-9:
+                drifts.append(
+                    f"{row['sweep']} x={row['x']} {method}: "
+                    f"{base[method]:.3f} -> {value:.3f}"
+                )
+    return drifts
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__.split("\n")[0])
+    ap.add_argument("current", help="result JSON from --json")
+    ap.add_argument(
+        "--baseline", default="benchmarks/results/ci_baseline.json"
+    )
+    ap.add_argument(
+        "--max-regression",
+        type=float,
+        default=0.25,
+        help="allowed fractional wall-clock slowdown (default 0.25)",
+    )
+    args = ap.parse_args()
+
+    current = load(args.current)
+    baseline = load(args.baseline)
+    cur_s = float(current["wall_clock_s"])
+    base_s = float(baseline["wall_clock_s"])
+    for key in ("n", "workers"):
+        if current.get(key) != baseline.get(key):
+            print(
+                f"note: sweep configs differ (current {key}="
+                f"{current.get(key)}, baseline {key}={baseline.get(key)}) "
+                "— wall-clock gate is apples-to-oranges",
+                file=sys.stderr,
+            )
+
+    for line in drifted_rows(current, baseline):
+        print(f"acceptance drift (informational): {line}")
+
+    limit = base_s * (1.0 + args.max_regression)
+    print(
+        f"wall-clock: current {cur_s:.1f}s vs baseline {base_s:.1f}s "
+        f"(limit {limit:.1f}s)"
+    )
+    if cur_s > limit:
+        print(
+            f"FAIL: sweep wall-clock regressed more than "
+            f"{args.max_regression:.0%} over baseline",
+            file=sys.stderr,
+        )
+        return 1
+    print("OK: within budget")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -2,7 +2,7 @@
 assignment and from the reduced-pessimism analysis."""
 from __future__ import annotations
 
-from typing import Dict, List
+from typing import List
 
 from repro.core import (GenParams, generate_taskset, ioctl_busy_improved_rta,
                         ioctl_busy_rta, ioctl_suspend_improved_rta,

@@ -13,6 +13,12 @@ Run as a script for the full sweep with a parallel per-taskset fan-out:
 
     PYTHONPATH=src python benchmarks/schedulability.py --quick
     PYTHONPATH=src python benchmarks/schedulability.py --n 200 --workers 8
+    PYTHONPATH=src python benchmarks/schedulability.py --n-devices 1 2 4
+
+The third form runs the multi-device axis instead: heuristic vs
+cross-device fixed-point acceptance under both busy-wait approaches
+(DESIGN.md §4).  ``--json PATH`` dumps rows + wall-clock for the CI
+benchmark-regression gate (benchmarks/check_regression.py).
 
 Each taskset is an independent unit of work, so the sweep parallelizes
 with ``multiprocessing`` (fork) across ``--workers`` processes; results
@@ -20,12 +26,14 @@ are bit-identical to the serial path (the per-taskset evaluation is
 deterministic and seeds are assigned before the fan-out)."""
 from __future__ import annotations
 
-import math
+import functools
 import os
+import warnings
 from typing import Callable, Dict, List, Optional
 
-from repro.core import (GenParams, fmlp_schedulable, generate_taskset,
-                        ioctl_busy_improved_rta, ioctl_suspend_improved_rta,
+from repro.core import (GenParams, SoundnessWarning, fmlp_schedulable,
+                        generate_taskset, ioctl_busy_improved_rta,
+                        ioctl_busy_rta, ioctl_suspend_improved_rta,
                         kthread_busy_rta, mpcp_schedulable, schedulable)
 from repro.core.audsley import assign_gpu_priorities
 
@@ -38,6 +46,22 @@ def _ours(rta) -> Callable:
     return test
 
 
+def _heuristic(rta) -> Callable:
+    """The pre-fixed-point constant-charge projection, for the heuristic
+    vs fixed-point comparison on the --n-devices axis.  The escape hatch
+    warns by design; the comparison is the one intended consumer.
+    ``functools.wraps`` keeps the base RTA's signature visible so the
+    early_exit / Audsley ``only=`` accelerations stay enabled for the
+    heuristic arms (apples-to-apples sweep cost)."""
+    @functools.wraps(rta)
+    def wrapped(ts, **kw):
+        kw.setdefault("method", "heuristic")
+        with warnings.catch_warnings():
+            warnings.simplefilter("ignore", SoundnessWarning)
+            return rta(ts, **kw)
+    return wrapped
+
+
 METHODS: Dict[str, Callable] = {
     "kthread_busy": _ours(kthread_busy_rta),
     "ioctl_busy": _ours(ioctl_busy_improved_rta),
@@ -46,13 +70,30 @@ METHODS: Dict[str, Callable] = {
     "fmlp+": fmlp_schedulable,
 }
 
+# heuristic vs joint-fixed-point acceptance on multi-device platforms
+# (the heuristic is *unsound* under busy-waiting — tests/test_cross_
+# soundness.py — so its higher acceptance is not a win; the axis shows
+# the price of soundness)
+DEVICE_METHODS: Dict[str, Callable] = {
+    "kthread_busy_fixed": _ours(kthread_busy_rta),
+    "kthread_busy_heur": _ours(_heuristic(kthread_busy_rta)),
+    "ioctl_busy_fixed": _ours(ioctl_busy_rta),
+    "ioctl_busy_heur": _ours(_heuristic(ioctl_busy_rta)),
+}
+
+METHOD_SETS: Dict[str, Dict[str, Callable]] = {
+    "default": METHODS,
+    "devices": DEVICE_METHODS,
+}
+
 
 def _eval_taskset(args) -> Dict[str, bool]:
     """One unit of parallel work: every method on one generated taskset."""
-    seed, params = args
+    seed, params, methods_key = args
+    methods = METHOD_SETS[methods_key]
     ts = generate_taskset(seed, params)
     ts.kthread_cpu = ts.n_cpus  # dedicated scheduler core
-    return {m: bool(fn(ts)) for m, fn in METHODS.items()}
+    return {m: bool(fn(ts)) for m, fn in methods.items()}
 
 
 def default_workers() -> int:
@@ -63,11 +104,15 @@ def default_workers() -> int:
 
 
 def acceptance(params: GenParams, n: int, seed0: int = 0,
-               workers: Optional[int] = None) -> Dict[str, float]:
+               workers: Optional[int] = None,
+               methods_key: str = "default") -> Dict[str, float]:
     """Acceptance ratio per method over n tasksets.  ``workers`` > 1 fans
     the tasksets out over a process pool; None keeps the serial path
-    (safe inside test processes that already hold accelerator runtimes)."""
-    jobs = [(seed0 + i, params) for i in range(n)]
+    (safe inside test processes that already hold accelerator runtimes).
+    ``methods_key`` selects a METHOD_SETS entry (module-level so the
+    forked workers resolve it by name — closures don't pickle)."""
+    methods = METHOD_SETS[methods_key]
+    jobs = [(seed0 + i, params, methods_key) for i in range(n)]
     if workers is not None and workers > 1:
         import multiprocessing as mp
         chunk = max(1, n // (workers * 4))
@@ -75,9 +120,9 @@ def acceptance(params: GenParams, n: int, seed0: int = 0,
             results = pool.map(_eval_taskset, jobs, chunksize=chunk)
     else:
         results = [_eval_taskset(j) for j in jobs]
-    wins = {m: 0 for m in METHODS}
+    wins = {m: 0 for m in methods}
     for r in results:
-        for m in METHODS:
+        for m in methods:
             if r[m]:
                 wins[m] += 1
     return {m: w / n for m, w in wins.items()}
@@ -91,15 +136,16 @@ def _sweep_seed(name: str) -> int:
 
 
 def sweep(name: str, param_list: List[tuple], n: int,
-          workers: Optional[int] = None) -> List[dict]:
+          workers: Optional[int] = None,
+          methods_key: str = "default") -> List[dict]:
     rows = []
     for label, params in param_list:
         row = {"sweep": name, "x": label,
                **acceptance(params, n, seed0=_sweep_seed(name),
-                            workers=workers)}
+                            workers=workers, methods_key=methods_key)}
         rows.append(row)
         print(f"  {name} x={label}: " + " ".join(
-            f"{m}={row[m]:.2f}" for m in METHODS))
+            f"{m}={row[m]:.2f}" for m in METHOD_SETS[methods_key]))
     return rows
 
 
@@ -148,6 +194,17 @@ def fig12_best_effort(n: int, workers: Optional[int] = None) -> List[dict]:
     return sweep("fig12_best_effort", pts, n, workers)
 
 
+def fig13_n_devices(n: int, workers: Optional[int] = None,
+                    device_counts=(1, 2, 4)) -> List[dict]:
+    """Multi-device axis: heuristic vs cross-device fixed-point acceptance
+    under both busy-wait approaches (DESIGN.md §4).  On one device the
+    two coincide; with more devices the (unsound) heuristic over-accepts
+    and the gap is the cross-device busy-wait coupling it ignores."""
+    pts = [(d, GenParams(n_devices=d, util_per_cpu=BAND))
+           for d in device_counts]
+    return sweep("fig13_n_devices", pts, n, workers, methods_key="devices")
+
+
 ALL = [fig7_n_tasks, fig8_n_cpus, fig9_util, fig10_gpu_ratio, fig11_g_to_c,
        fig12_best_effort]
 
@@ -161,6 +218,7 @@ def run(n: int = 200, workers: Optional[int] = None) -> List[dict]:
 
 def main() -> None:
     import argparse
+    import json
     import time
 
     ap = argparse.ArgumentParser(description=__doc__.split("\n")[0])
@@ -170,14 +228,31 @@ def main() -> None:
                     help="tasksets per sweep point (overrides --quick)")
     ap.add_argument("--workers", type=int, default=0,
                     help="process-pool size (0 = all cores, 1 = serial)")
+    ap.add_argument("--n-devices", type=int, nargs="+", default=None,
+                    metavar="D",
+                    help="run the multi-device axis over these device "
+                         "counts (heuristic vs fixed-point acceptance) "
+                         "instead of the paper sweeps")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="write rows + wall-clock to PATH (CI regression "
+                         "gate reads this)")
     args = ap.parse_args()
     n = args.n or (40 if args.quick else 200)
     workers = args.workers or default_workers()
     t0 = time.time()
-    rows = run(n, workers=workers)
+    if args.n_devices:
+        rows = fig13_n_devices(n, workers=workers,
+                               device_counts=tuple(args.n_devices))
+    else:
+        rows = run(n, workers=workers)
     dt = time.time() - t0
     print(f"schedulability sweep: {len(rows)} points x {n} tasksets, "
           f"{workers} workers, {dt:.1f}s wall-clock")
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump({"rows": rows, "n": n, "workers": workers,
+                       "wall_clock_s": round(dt, 3)}, f, indent=2)
+        print(f"wrote {args.json}")
 
 
 if __name__ == "__main__":

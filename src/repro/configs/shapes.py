@@ -6,7 +6,6 @@
   long_500k   : one token, context 524288, batch 1 (sub-quadratic archs only)
 """
 import dataclasses
-from typing import Optional
 
 
 @dataclasses.dataclass(frozen=True)

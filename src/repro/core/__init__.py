@@ -8,15 +8,19 @@ Public API:
   engine          : EventDrivenEngine (heap-based event queue)
   analyses        : kthread_busy_rta, ioctl_busy_rta, ioctl_suspend_rta,
                     ioctl_busy_improved_rta, ioctl_suspend_improved_rta,
-                    schedulable, fold_to_device
+                    schedulable, fold_to_device, cross_fixed_point
+                    (multi-device busy-wait; SoundnessWarning gates the
+                    heuristic escape hatch)
   baselines       : mpcp_schedulable, fmlp_schedulable (+ *_rta variants)
   priority assign : assign_gpu_priorities, schedulable_with_assignment
   generation      : GenParams, generate_taskset, uunifast
   simulation      : Simulator, simulate, SimResult
 """
-from .analysis import (fold_to_device, ioctl_busy_rta, ioctl_suspend_rta,
-                       kthread_busy_rta, kthread_K, schedulable)
+from .analysis import (SoundnessWarning, fold_to_device, ioctl_busy_rta,
+                       ioctl_suspend_rta, kthread_busy_rta, kthread_K,
+                       schedulable)
 from .audsley import assign_gpu_priorities, schedulable_with_assignment
+from .crossfix import busy_occupancy, cross_fixed_point, uncontended_occupancy
 from .baselines import (fmlp_busy_rta, fmlp_schedulable, fmlp_suspend_rta,
                         mpcp_busy_rta, mpcp_schedulable, mpcp_suspend_rta)
 from .engine import EventDrivenEngine
@@ -41,7 +45,8 @@ __all__ = [
     "EventDrivenEngine",
     "kthread_busy_rta", "ioctl_busy_rta", "ioctl_suspend_rta", "kthread_K",
     "ioctl_busy_improved_rta", "ioctl_suspend_improved_rta", "schedulable",
-    "fold_to_device",
+    "fold_to_device", "SoundnessWarning", "cross_fixed_point",
+    "busy_occupancy", "uncontended_occupancy",
     "mpcp_schedulable", "fmlp_schedulable", "mpcp_busy_rta",
     "mpcp_suspend_rta", "fmlp_busy_rta", "fmlp_suspend_rta",
     "assign_gpu_priorities", "schedulable_with_assignment",

@@ -26,16 +26,22 @@ result-preserving accelerations used by the schedulability sweeps:
 
 Multi-device tasksets (``ts.n_devices > 1``, DESIGN.md §4) are analyzed
 per device: tasks bound to other devices have their GPU segments folded
-into CPU demand ``G + (3*eta^g + 1)*eps`` — a stand-in for their
-worst-case core occupancy (executing/busy-waiting through their own
-device segments and runlist updates) — since distinct devices share cores
-but not runlists, driver locks, or GPU time.  This projection is
-validated against the simulator for the *self-suspension* mode (no
-busy-wait chains; tests/test_multi_device.py).  For busy-waiting modes it
-is a close heuristic, not a guaranteed bound: a core busy-waiting on
-device A while blocked behind device-A contention can occupy its core
-longer than the folded charge (cross-device busy-wait coupling — open
-item in ROADMAP.md).
+into an extra CPU charge standing in for their worst-case core occupancy
+(executing/busy-waiting through their own device segments and runlist
+updates) — since distinct devices share cores but not runlists, driver
+locks, or GPU time.  Two projection regimes:
+
+  * *self-suspension* (``per_device``): the folded charge is the
+    constant ``G + (3*eta^g + 1)*eps`` — an occupancy bound because a
+    suspending task yields its core while queued behind contention.
+    Validated against the simulator (tests/test_multi_device.py).
+  * *busy-waiting* (``cross_device``): a spinning task occupies its core
+    for as long as it is queued behind its own device's contention, so
+    the folded charge must itself be iterated — the joint cross-device
+    fixed point in `core/crossfix.py` (default ``method="fixed_point"``).
+    The pre-fixed-point constant-charge projection survives only as an
+    explicit ``method="heuristic"`` escape hatch, which emits a
+    ``SoundnessWarning`` (kept for benchmark comparisons).
 
 Conventions:
   G_i^*  = G_i   + 2*eps*eta_i^g       (Sec. VI-A.2)
@@ -49,12 +55,19 @@ from __future__ import annotations
 
 import functools
 import math
+import warnings
 from typing import Callable, Dict, Optional
 
 from .task_model import Task, Taskset
 
 MAX_ITERS = 4096
 _EPS = 1e-9
+
+
+class SoundnessWarning(UserWarning):
+    """An analysis path without a validated soundness guarantee was used
+    (e.g. the constant-charge multi-device projection under busy-waiting,
+    which under-counts cross-device busy-wait coupling)."""
 
 
 def ceil_pos(x: float, t: float) -> int:
@@ -135,20 +148,30 @@ def _rta_loop(ts: Taskset, make_f: Callable[[Task, Dict], Callable],
     return R
 
 
-def fold_to_device(ts: Taskset, device: int) -> Taskset:
+def fold_to_device(ts: Taskset, device: int,
+                   occupancy: Optional[Dict[str, float]] = None) -> Taskset:
     """Single-device projection: tasks on ``device`` keep their structure;
     GPU tasks on other devices become CPU-only with their device work
-    folded into an extra CPU segment (conservative core occupancy:
-    G + 2*eps*eta^g busy-wait stretch + (eta^g+1)*eps update blocking).
+    folded into an extra CPU segment.  The default charge is the
+    *uncontended* core occupancy G + 2*eps*eta^g busy-wait stretch +
+    (eta^g+1)*eps update blocking (sound under self-suspension);
+    ``occupancy`` overrides it per task name — the cross-device fixed
+    point (`core/crossfix.py`) passes its contention-aware iterate here.
     The folded segment's *best case* is 0: the overlap lemmas (Eqs. 5-9)
     read C_best as execution that is *guaranteed* to occur, and a
     suspended remote-device task may occupy its core arbitrarily little —
     inflating the best case would overstate guaranteed overlap and make
     the improved analyses optimistic."""
+    from .crossfix import uncontended_occupancy
     tasks = []
     for t in ts.tasks:
         if t.uses_gpu and t.device != device:
-            extra = t.G + (3 * t.eta_g + 1) * ts.epsilon
+            # single source of truth for the default charge: the fixed
+            # point's seed must equal the fold default (seed == heuristic
+            # == suspension-equivalent bound; see crossfix docstring)
+            extra = uncontended_occupancy(t, ts.epsilon)
+            if occupancy is not None and t.name in occupancy:
+                extra = occupancy[t.name]
             tasks.append(Task(
                 name=t.name,
                 cpu_segments=tuple(t.cpu_segments) + (extra,),
@@ -166,10 +189,26 @@ def fold_to_device(ts: Taskset, device: int) -> Taskset:
                    kthread_cpu=ts.kthread_cpu, n_devices=1)
 
 
+def _worse_bound(a: Optional[float], b: Optional[float]) -> bool:
+    """None-aware "``a`` is a worse (larger) WCRT bound than ``b``"
+    (None = best-effort, never worse); shared by the multi-device
+    projections here and in `core/crossfix.py`."""
+    if a is None:
+        return False
+    if b is None:
+        return True
+    return a > b
+
+
 def per_device(rta: Callable) -> Callable:
     """Lift a single-device RTA to multi-device tasksets (identity when
     ``n_devices == 1``).  Each GPU task takes its bound from its own
-    device's projection; CPU-only tasks take the max over projections."""
+    device's projection; CPU-only tasks take the max over projections.
+
+    The constant folded charge is an occupancy bound only when queued
+    tasks yield their cores, so this decorator is reserved for the
+    *self-suspension* analyses; busy-mode analyses go through
+    ``cross_device`` below."""
     @functools.wraps(rta)
     def wrapper(ts: Taskset, *args, **kw):
         if ts.n_devices <= 1:
@@ -185,18 +224,59 @@ def per_device(rta: Callable) -> Callable:
                 if name in own_device:
                     if own_device[name] == d:
                         out[name] = r
-                elif name not in out or _worse(r, out[name]):
+                elif name not in out or _worse_bound(r, out[name]):
                     out[name] = r
         return out
 
-    def _worse(a, b) -> bool:
-        if a is None:
-            return False
-        if b is None:
-            return True
-        return a > b
-
     return wrapper
+
+
+def cross_device(occ_kind: str) -> Callable:
+    """Lift a single-device *busy-mode* RTA to multi-device tasksets
+    (identity when ``n_devices == 1``).
+
+    Default ``method="fixed_point"`` runs the joint cross-device fixed
+    point (`core/crossfix.py`): per-task WCRT bounds are iterated jointly
+    across all devices, each task's busy-wait core occupancy re-derived
+    from the current iterate of its device's contention — sound against
+    the simulator (tests/test_cross_soundness.py).  The pre-fixed-point
+    constant-charge projection is kept as an explicit
+    ``method="heuristic"`` escape hatch for benchmark comparisons; it
+    emits a ``SoundnessWarning``.
+
+    ``occ_kind`` selects the per-rival device blocking model ("kthread":
+    job-granular reservation, "ioctl": segment-granular admission)."""
+    def deco(rta: Callable) -> Callable:
+        heuristic = per_device(rta)
+
+        @functools.wraps(rta)
+        def wrapper(ts: Taskset, *args, method: str = "fixed_point", **kw):
+            if args:  # tolerate legacy positional use_gpu_prio
+                if len(args) > 1:
+                    raise TypeError("pass analysis options by keyword")
+            if method not in ("fixed_point", "heuristic"):
+                # validate even on single-device tasksets (where the two
+                # methods coincide) so a typo can't pass unit tests and
+                # first surface on a multi-GPU platform
+                raise ValueError(f"unknown multi-device method {method!r}")
+            if ts.n_devices <= 1:
+                return rta(ts, *args, **kw)
+            if args:
+                kw["use_gpu_prio"] = args[0]
+            if method == "heuristic":
+                warnings.warn(
+                    "constant-charge per-device projection under "
+                    "busy-waiting is a heuristic, not a sound bound "
+                    "(cross-device busy-wait coupling); use the default "
+                    "method='fixed_point'", SoundnessWarning, stacklevel=2)
+                return heuristic(ts, **kw)
+            from .crossfix import cross_fixed_point
+            R, _ = cross_fixed_point(ts, rta, occ_kind, **kw)
+            return R
+
+        wrapper.occ_kind = occ_kind
+        return wrapper
+    return deco
 
 
 # --------------------------------------------------------------------------
@@ -235,7 +315,7 @@ def kthread_K(ts: Taskset, ti: Task, R_i: float, R: Dict[str, float],
     return total
 
 
-@per_device
+@cross_device("kthread")
 def kthread_busy_rta(ts: Taskset, use_gpu_prio: bool = False,
                      corrected: bool = True, early_exit: bool = False,
                      only: Optional[str] = None
@@ -286,7 +366,7 @@ def _gmstar(t: Task, eps: float) -> float:
     return t.Gm + 2.0 * eps * t.eta_g
 
 
-@per_device
+@cross_device("ioctl")
 def ioctl_busy_rta(ts: Taskset, use_gpu_prio: bool = False,
                    corrected: bool = True, early_exit: bool = False,
                    only: Optional[str] = None

@@ -29,8 +29,14 @@ from .task_model import Task, Taskset
 
 def _test_task(ts: Taskset, name: str, rta: Callable, **kw) -> bool:
     if supports_kwarg(rta, "only"):
-        # with use_gpu_prio the jitters are deadline-based (the OPA
-        # property), so the candidate's bound alone is enough
+        # With use_gpu_prio the jitters are deadline-based (the OPA
+        # property), so on single-device / suspend paths the candidate's
+        # bound alone is enough and ``only`` prunes the rest.  Under the
+        # multi-device busy fixed point (core/crossfix.py) a task's bound
+        # also depends on the other tasks' occupancy iterates, so the
+        # joint analysis ignores ``only`` and computes the full vector —
+        # the per-candidate test stays correct (we still only read the
+        # candidate's bound) and _full_test gates final acceptance.
         kw.setdefault("only", name)
     R = rta(ts, use_gpu_prio=True, **kw)
     t = next(t for t in ts.tasks if t.name == name)
@@ -63,7 +69,8 @@ def assign_gpu_priorities(ts: Taskset, rta: Callable,
     # Work on copies so the input taskset is untouched.
     pool = {t.name: dataclasses.replace(t) for t in ts.tasks}
     work = Taskset(tasks=list(pool.values()), n_cpus=ts.n_cpus,
-                   epsilon=ts.epsilon, kthread_cpu=ts.kthread_cpu)
+                   epsilon=ts.epsilon, kthread_cpu=ts.kthread_cpu,
+                   n_devices=ts.n_devices)
     unassigned = [pool[t.name] for t in gpu_tasks]
     # Unassigned tasks provisionally sit above every level (OPA invariant).
     top = max(levels) + 1

@@ -59,9 +59,10 @@ def _gpu_tasks(ts: Taskset) -> list[Task]:
 
 def _request_wait_mpcp(ts: Taskset, ti: Task) -> float:
     """Fixed point of the MPCP per-request wait W_i."""
-    lp_gpu = [l for l in _gpu_tasks(ts) if l.priority < ti.priority and l is not ti]
+    lp_gpu = [t for t in _gpu_tasks(ts)
+              if t.priority < ti.priority and t is not ti]
     hp_gpu = [h for h in _gpu_tasks(ts) if h.priority > ti.priority]
-    base = max((_maxg(l) for l in lp_gpu), default=0.0)
+    base = max((_maxg(t) for t in lp_gpu), default=0.0)
     W = base
     for _ in range(1024):
         W_new = base + sum((ceil_pos(W, h.period) + 1) * h.G for h in hp_gpu)
@@ -89,14 +90,14 @@ def _blocking(ts: Taskset, ti: Task, protocol: str) -> float:
 def _boost_blocking(ts: Taskset, ti: Task, R_i: float) -> float:
     """Local lower-priority boosted critical sections: up to one per each of
     tau_i's GPU requests (+1 for initial arrival), bounded by arrivals."""
-    lpp_gpu = [l for l in ts.tasks
-               if l is not ti and l.cpu == ti.cpu and l.priority < ti.priority
-               and l.uses_gpu]
+    lpp_gpu = [t for t in ts.tasks
+               if t is not ti and t.cpu == ti.cpu
+               and t.priority < ti.priority and t.uses_gpu]
     if not lpp_gpu:
         return 0.0
-    per_event = max(_maxg(l) for l in lpp_gpu)
+    per_event = max(_maxg(t) for t in lpp_gpu)
     events = ti.eta_g + 1
-    arrivals = sum(ceil_pos(R_i, l.period) + 1 for l in lpp_gpu)
+    arrivals = sum(ceil_pos(R_i, t.period) + 1 for t in lpp_gpu)
     return min(events, arrivals) * per_event
 
 

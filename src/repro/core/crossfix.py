@@ -1,0 +1,220 @@
+"""Cross-device busy-wait fixed point (DESIGN.md §4).
+
+Multi-device busy-wait analysis cannot be decomposed per device: a task
+busy-waiting on device A occupies its CPU core for as long as it is
+queued behind device-A contention, and that occupancy is CPU demand in
+*every other* device's projection.  The folded per-device constant
+``G + (3*eta^g + 1)*eps`` only covers the uncontended access (valid under
+self-suspension, where the core is yielded while queued) — under
+busy-waiting it silently under-charges, which is exactly the
+cross-resource coupling GCAPS (arXiv:2406.05221) warns about.
+
+This module closes the loop with a joint fixed point over all devices:
+
+  * **Iteration variables** — the per-task WCRT vector ``R`` and the
+    per-GPU-task *core-occupancy* vector ``occ`` (the CPU time a job
+    occupies its core beyond its plain CPU segments: executing GPU
+    segments, spinning behind same-device rivals, and runlist-update /
+    rt_mutex blocking).
+  * **Seed** — ``occ^0`` is the uncontended occupancy, i.e. exactly the
+    charge that is valid in suspension mode; ``R^0`` is therefore the
+    suspension-equivalent per-device bound.
+  * **Step** — ``R^{k+1}`` re-runs the single-device RTAs on projections
+    folded with ``occ^k``; ``occ^{k+1}`` re-derives each task's occupancy
+    from the *current iterate* ``R^{k+1}`` (the number of same-device
+    rival jobs that can hold the device while the task spins is windowed
+    by its own response time).
+  * **Monotonicity** — the inner RTAs are monotone in the folded charges
+    and ``occ`` is monotone in ``R`` (ceil terms), so the iteration
+    ascends from the suspension-mode seed to the least fixed point above
+    it; any fixed point reached upper-bounds the true WCRT by the
+    standard RTA argument.
+  * **Termination / divergence** — ``occ`` only moves through ceil jumps
+    and every inner bound is capped at its deadline, so the iteration
+    either converges in finitely many outer rounds or drives some task
+    past its deadline (``inf`` — the set is unschedulable).  A round cap
+    backstops both; hitting it reports divergence conservatively.
+
+The public entry point is :func:`cross_fixed_point`; `core.analysis`
+wires it behind the busy-mode RTAs via the ``cross_device`` decorator.
+"""
+from __future__ import annotations
+
+import math
+from typing import Callable, Dict, Optional, Tuple
+
+from .task_model import Task, Taskset
+
+MAX_OUTER = 64
+_EPS = 1e-9
+
+
+def device_rivals(
+    ts: Taskset, h: Task, use_gpu_prio: bool = False
+) -> list[Task]:
+    """GPU-using tasks that can hold ``h``'s device while ``h`` spins.
+
+    Device arbitration (Algorithm 1's reservation, Algorithm 2's
+    task_running) is governed by GPU-segment priorities; ``use_gpu_prio``
+    selects the Sec. VI-B ordering, matching ``_gpu_hp_remote``.
+    """
+    return [
+        k
+        for k in ts.hp(h, by_gpu=use_gpu_prio)
+        if k.uses_gpu and k.device == h.device
+    ]
+
+
+def uncontended_occupancy(h: Task, eps: float) -> float:
+    """Core occupancy of one job of ``h`` beyond ``C_h`` with an
+    uncontended device: ``G + 2*eps*eta^g`` eviction stretch plus
+    ``(eta^g + 1)*eps`` runlist-update blocking.  This is the suspension
+    -mode-valid charge — the seed of the busy-wait iteration."""
+    return h.G + (3 * h.eta_g + 1) * eps
+
+
+def busy_occupancy(
+    ts: Taskset,
+    h: Task,
+    window: float,
+    R: Dict[str, Optional[float]],
+    occ_kind: str,
+    use_gpu_prio: bool = False,
+) -> float:
+    """Worst-case core occupancy of one job of ``h`` beyond ``C_h`` under
+    busy-waiting, given the current WCRT iterate.
+
+    On top of the uncontended occupancy, every same-device rival job that
+    arrives in ``h``'s response window can hold the device while ``h``
+    spins on its core:
+
+      * ``occ_kind == "kthread"`` — Algorithm 1 reserves the device at
+        *job* granularity, so a rival job blocks for its whole job
+        ``C_k + G_k`` plus the 2*eps reservation rewrite (Lemma 2's
+        remote charge, with job jitter ``J_k``);
+      * ``occ_kind == "ioctl"`` — Algorithm 2 admits at *segment*
+        granularity, so a rival job blocks for its pure device time plus
+        eviction costs ``G_k^{e*} = G_k^e + 2*eps*eta_k^g`` (Lemma 3's
+        remote charge, with GPU jitter ``J_k^g``); rt_mutex /
+        runlist-update blocking of ``h``'s own accesses is inside the
+        seed's ``(eta^g + 1)*eps``.
+    """
+    from .analysis import _gestar, _jitter, ceil_pos
+
+    eps = ts.epsilon
+    occ = uncontended_occupancy(h, eps)
+    for k in device_rivals(ts, h, use_gpu_prio):
+        if occ_kind == "kthread":
+            J = _jitter(ts, k, "job", R, use_gpu_prio)
+            per_job = k.C + k.G + 2.0 * eps
+        elif occ_kind == "ioctl":
+            J = _jitter(ts, k, "gpu", R, use_gpu_prio)
+            per_job = _gestar(k, eps)
+        else:
+            raise ValueError(f"unknown occupancy kind {occ_kind!r}")
+        occ += ceil_pos(window + J, k.period) * per_job
+    return occ
+
+
+def cross_fixed_point(
+    ts: Taskset,
+    base_rta: Callable[..., Dict[str, Optional[float]]],
+    occ_kind: str,
+    use_gpu_prio: bool = False,
+    early_exit: bool = False,
+    only: Optional[str] = None,
+    max_outer: int = MAX_OUTER,
+    **inner_kw,
+) -> Tuple[Dict[str, Optional[float]], Dict]:
+    """Joint WCRT bounds for a multi-device busy-waiting taskset.
+
+    ``base_rta`` is the *single-device* recurrence (the undecorated RTA);
+    it is re-run on every device projection each outer round, folded with
+    the current occupancy iterate.  Returns ``(R, info)`` where ``info``
+    carries ``converged`` / ``diverged`` flags and the outer ``iterations``
+    count.
+
+    ``only`` is accepted for interface compatibility but cannot prune the
+    computation: under the joint fixed point a task's bound depends on
+    every other task's iterate, so the full vector is computed and
+    returned (Audsley's per-candidate independence property does *not*
+    hold here — see `core.audsley`).  ``early_exit`` stops the outer
+    iteration as soon as some real-time task diverges past its deadline:
+    the iteration is monotone, so the set is already unschedulable.  On
+    that path the result is *partial*, mirroring ``_rta_loop``: the
+    diverged tasks report ``inf`` and still-iterating finite bounds are
+    dropped (absent key == unschedulable to every caller), because a
+    non-converged iterate is not an upper bound; ``info`` carries
+    ``unschedulable=True`` with both flags False.
+    """
+    from .analysis import _worse_bound, fold_to_device
+
+    gpu_tasks = [t for t in ts.tasks if t.uses_gpu]
+    own = {t.name: t.device for t in gpu_tasks}
+    rt_names = {t.name for t in ts.rt_tasks}
+
+    def project(occ: Dict[str, float]) -> Dict[str, Optional[float]]:
+        out: Dict[str, Optional[float]] = {}
+        for d in range(ts.n_devices):
+            Rd = base_rta(
+                fold_to_device(ts, d, occupancy=occ),
+                use_gpu_prio=use_gpu_prio,
+                **inner_kw,
+            )
+            for name, r in Rd.items():
+                if name in own:
+                    if own[name] == d:
+                        out[name] = r
+                elif name not in out or _worse_bound(r, out[name]):
+                    out[name] = r
+        return out
+
+    def occupancies(R: Dict[str, Optional[float]]) -> Dict[str, float]:
+        occ: Dict[str, float] = {}
+        for h in gpu_tasks:
+            w = R.get(h.name)
+            # Past-deadline iterates are capped at the deadline: the task
+            # already reports inf, and the cap keeps the other tasks'
+            # numbers informative on the (rejected) set.
+            w = h.deadline if w is None or math.isinf(w) else min(
+                w, h.deadline
+            )
+            occ[h.name] = busy_occupancy(ts, h, w, R, occ_kind, use_gpu_prio)
+        return occ
+
+    eps = ts.epsilon
+    occ = {h.name: uncontended_occupancy(h, eps) for h in gpu_tasks}
+    R = project(occ)  # suspension-equivalent seed bound
+    info = {"converged": False, "diverged": False, "iterations": 1,
+            "unschedulable": False}
+    # the seed projection above counts as round 1, so at most
+    # max_outer - 1 further rounds keep iterations <= max_outer
+    for _ in range(max_outer - 1):
+        if early_exit and any(
+            R.get(n) is None or math.isinf(R[n]) for n in rt_names
+        ):
+            # Monotone iteration cannot rescue a diverged task; return a
+            # partial dict (see docstring) rather than mid-iteration
+            # finite values that are not upper bounds.
+            info["unschedulable"] = True
+            R = {
+                n: r
+                for n, r in R.items()
+                if n not in rt_names or r is None or math.isinf(r)
+            }
+            return R, info
+        occ_new = occupancies(R)
+        if all(abs(occ_new[n] - occ[n]) < _EPS for n in occ):
+            info["converged"] = True
+            break
+        occ = occ_new
+        R = project(occ)
+        info["iterations"] += 1
+    else:
+        # Round cap hit without convergence: a non-converged iterate is
+        # not an upper bound, so report divergence conservatively.
+        info["diverged"] = True
+        R = {
+            n: (math.inf if n in rt_names else r) for n, r in R.items()
+        }
+    return R, info

@@ -18,16 +18,15 @@ only / multi-device semantics identical to `core.analysis`).
 """
 from __future__ import annotations
 
-import math
 from typing import Callable, Dict, Optional
 
 from .analysis import (_gestar, _gmstar, _gstar, _gpu_hp_remote, _jitter,
-                       _rta_loop, ceil_pos, per_device)
+                       _rta_loop, ceil_pos, cross_device, per_device)
 from .overlap import overlap_cg, overlap_gc
 from .task_model import Task, Taskset
 
 
-@per_device
+@cross_device("ioctl")
 def ioctl_busy_improved_rta(ts: Taskset, use_gpu_prio: bool = False,
                             corrected: bool = True,
                             early_exit: bool = False,

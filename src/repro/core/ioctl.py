@@ -174,6 +174,10 @@ class IoctlPolicy(SchedulingPolicy):
         return True
 
 
+# Both wait modes carry their analytic guarantee on any platform: the
+# busy entry resolves to the cross-device fixed point on n_devices > 1
+# (core/crossfix.py); the suspend entry's per-device projection is sound
+# as-is (no busy-wait chains).
 register_policy("ioctl", IoctlPolicy,
                 "Algorithm 2: IOCTL segment-granular runlist control",
                 rtas={"busy": ioctl_busy_rta, "suspend": ioctl_suspend_rta})

@@ -196,6 +196,9 @@ class KernelThreadPolicy(SchedulingPolicy):
         return self.reserved is job or self.reserved is None
 
 
+# The busy-mode RTA is multi-device sound: on n_devices > 1 it resolves
+# to the cross-device fixed point (core/crossfix.py), so admission over
+# this registry entry carries the analytic guarantee on any platform.
 register_policy("kthread", KernelThreadPolicy,
                 "Algorithm 1: kernel-thread job-granular reservation",
                 rtas={"busy": kthread_busy_rta})

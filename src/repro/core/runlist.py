@@ -26,14 +26,14 @@ device executor can run them by name from the registry.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import TYPE_CHECKING, List, Optional
 
-from .policy import (BasePolicy, SchedulingPolicy, job_gpu_priority,
-                     job_priority, register_policy)
+from .policy import (BasePolicy, SchedulingPolicy, job_priority,
+                     register_policy)
 
 if TYPE_CHECKING:  # pragma: no cover
-    from .simulator import Job, Simulator
+    from .simulator import Job
 
 BOOST = 10_000_000  # priority boost for lock holders (global ceiling model)
 

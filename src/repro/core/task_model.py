@@ -16,7 +16,7 @@ All times are in milliseconds (float).
 from __future__ import annotations
 
 import dataclasses
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Optional, Sequence
 
 BEST_EFFORT_PRIORITY = -1_000_000  # below every real-time priority

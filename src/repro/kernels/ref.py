@@ -92,7 +92,7 @@ def attention_chunked(q: jax.Array, k: jax.Array, v: jax.Array, *,
     qi = jnp.arange(sq)[:, None] + q_offset
 
     def body(carry, xs):
-        m, l, acc = carry
+        m, lsum, acc = carry
         idx, kci, vci = xs
         s = jnp.einsum("bqhd,bkhd->bhqk", q, kci,
                        preferred_element_type=jnp.float32) * scale
@@ -106,11 +106,11 @@ def attention_chunked(q: jax.Array, k: jax.Array, v: jax.Array, *,
         m_new = jnp.maximum(m, jnp.max(s, axis=-1))
         p = jnp.exp(s - m_new[..., None])
         corr = jnp.exp(m - m_new)
-        l = l * corr + jnp.sum(p, axis=-1)
+        lsum = lsum * corr + jnp.sum(p, axis=-1)
         acc = acc * corr[..., None] + jnp.einsum(
             "bhqk,bkhd->bhqd", p.astype(vci.dtype), vci,
             preferred_element_type=jnp.float32)
-        return (m_new, l, acc), None
+        return (m_new, lsum, acc), None
 
     m0 = jnp.full((b, h, sq), NEG_INF, jnp.float32)
     l0 = jnp.zeros((b, h, sq), jnp.float32)
@@ -119,9 +119,9 @@ def attention_chunked(q: jax.Array, k: jax.Array, v: jax.Array, *,
     # instead of stacking per-chunk probabilities (flash-backward memory)
     body = jax.checkpoint(body,
                           policy=jax.checkpoint_policies.nothing_saveable)
-    (m, l, acc), _ = jax.lax.scan(
+    (m, lsum, acc), _ = jax.lax.scan(
         body, (m0, l0, a0), (jnp.arange(n_chunks), kc, vc))
-    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    out = acc / jnp.maximum(lsum, 1e-30)[..., None]
     return jnp.moveaxis(out, 1, 2).astype(q.dtype)
 
 

@@ -4,7 +4,7 @@ shardings; nothing here touches devices."""
 from __future__ import annotations
 
 import functools
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict
 
 import jax
 import jax.numpy as jnp
@@ -190,7 +190,7 @@ def jit_layer_group(cfg: ModelConfig, shape: ShapeSpec, mesh,
 
     pspecs = transformer.param_specs(cfg)
     group_specs = jax.tree.map(
-        lambda l: jax.ShapeDtypeStruct(l.shape[1:], l.dtype),
+        lambda leaf: jax.ShapeDtypeStruct(leaf.shape[1:], leaf.dtype),
         pspecs["blocks"])
     group_psh = jax.tree.map(
         lambda sp: P(*sp[1:]),
@@ -240,7 +240,7 @@ def jit_layer_group(cfg: ModelConfig, shape: ShapeSpec, mesh,
         from ..models import blocks as blk
         c_specs = cache_specs(cfg, shape)
         c_slice = jax.tree.map(
-            lambda l: jax.ShapeDtypeStruct(l.shape[1:], l.dtype), c_specs)
+            lambda leaf: jax.ShapeDtypeStruct(leaf.shape[1:], leaf.dtype), c_specs)
         c_psh = jax.tree.map(
             lambda sp: P(*sp[1:]),
             shd.cache_pspecs(cfg, mesh, c_specs, shape.global_batch),

@@ -13,7 +13,6 @@ import argparse
 import time
 
 import jax
-import numpy as np
 
 from ..configs import get
 from ..configs.shapes import ShapeSpec

@@ -80,7 +80,7 @@ def param_specs(cfg: ModelConfig) -> Dict[str, Any]:
 def param_count(cfg: ModelConfig) -> int:
     import numpy as np
     specs = param_specs(cfg)
-    return int(sum(np.prod(l.shape) for l in jax.tree.leaves(specs)))
+    return int(sum(np.prod(leaf.shape) for leaf in jax.tree.leaves(specs)))
 
 
 # --------------------------------------------------------------------------
@@ -278,7 +278,7 @@ def init_cache(cfg: ModelConfig, batch: int, max_len: int,
 
     return tuple(
         jax.tree.map(
-            lambda l: jnp.broadcast_to(l, (cfg.repeats,) + l.shape),
+            lambda leaf: jnp.broadcast_to(leaf, (cfg.repeats,) + leaf.shape),
             make_one(spec))
         for spec in cfg.pattern)
 

@@ -40,8 +40,8 @@ def _schedule(cfg: AdamWConfig, step: jax.Array) -> jax.Array:
 
 
 def global_norm(tree) -> jax.Array:
-    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
-                        for l in jax.tree.leaves(tree)))
+    return jnp.sqrt(sum(jnp.sum(jnp.square(leaf.astype(jnp.float32)))
+                        for leaf in jax.tree.leaves(tree)))
 
 
 def adamw_update(cfg: AdamWConfig, grads, opt_state, params

@@ -5,7 +5,10 @@ the current taskset and the paper's schedulability test decides.
 This is where the paper's analysis becomes an operational guarantee: jobs
 admitted here have analytically bounded response times under the chosen
 scheduling approach (kthread/ioctl x busy/suspend), including the measured
-runlist-update overhead epsilon.
+runlist-update overhead epsilon.  On multi-device platforms
+(``n_devices > 1``) the busy-wait RTAs resolve to the cross-device fixed
+point (core/crossfix.py), so busy-mode admission is sound — not the
+pre-fixed-point per-device heuristic.
 
 The analysis matching each approach lives in the policy registry
 (`core.policy.PolicySpec.rtas`), so the executor, the simulator, and the
@@ -14,7 +17,7 @@ admission controller all resolve one policy name to one consistent
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Callable, Dict, List, Optional
+from typing import Callable, List, Optional
 
 from ..core import GpuSegment, Task, Taskset, schedulable
 from ..core.audsley import assign_gpu_priorities
@@ -45,6 +48,7 @@ class JobProfile:
     cpu: int = 0
     deadline_ms: Optional[float] = None
     best_effort: bool = False
+    device: int = 0  # accelerator the device segments execute on
 
     def to_task(self) -> Task:
         return Task(
@@ -55,29 +59,38 @@ class JobProfile:
             period=self.period_ms,
             deadline=self.deadline_ms or self.period_ms,
             cpu=self.cpu, priority=self.priority,
-            best_effort=self.best_effort)
+            best_effort=self.best_effort, device=self.device)
 
 
 class AdmissionController:
     def __init__(self, mode: str = "notify", wait_mode: str = "suspend",
                  n_cpus: int = 4, epsilon_ms: float = 1.0,
-                 try_gpu_priorities: bool = True):
+                 try_gpu_priorities: bool = True, n_devices: int = 1):
         self.mode, self.wait_mode = mode, wait_mode
         self.rta = rta_for(mode, wait_mode)
         self.n_cpus = n_cpus
         self.epsilon_ms = epsilon_ms
         self.try_gpu_priorities = try_gpu_priorities
+        self.n_devices = n_devices
         self.admitted: List[JobProfile] = []
 
     def _taskset(self, extra: Optional[JobProfile] = None) -> Taskset:
         profs = self.admitted + ([extra] if extra else [])
         return Taskset([p.to_task() for p in profs], n_cpus=self.n_cpus,
                        epsilon=self.epsilon_ms,
-                       kthread_cpu=self.n_cpus)  # dedicated scheduler core
+                       kthread_cpu=self.n_cpus,  # dedicated scheduler core
+                       n_devices=self.n_devices)
 
     def try_admit(self, prof: JobProfile) -> dict:
         """Returns {admitted: bool, wcrt: {...}, via: "default"|"audsley"}.
         Best-effort jobs are always admitted (they have no guarantee)."""
+        if not (0 <= prof.device < self.n_devices):
+            # refuse, don't crash: a bad profile must not take down the
+            # admission path (Taskset validation would raise), nor may it
+            # be appended and poison every later _taskset() build
+            return {"admitted": False, "via": None, "wcrt": {},
+                    "error": f"device {prof.device} out of range for "
+                             f"{self.n_devices}-device platform"}
         if prof.best_effort:
             self.admitted.append(prof)
             return {"admitted": True, "via": "best_effort", "wcrt": {}}

@@ -7,7 +7,7 @@ functions of (config, mesh), rescaling is: save -> new mesh -> restore with
 the new NamedShardings -> recompile steps.  ``rescale`` packages that."""
 from __future__ import annotations
 
-from typing import Any, Callable, Tuple
+from typing import Any, Tuple
 
 import jax
 
@@ -37,6 +37,7 @@ def rescale(cfg: ModelConfig, ckpt_dir: str, state_like: Any,
     shards = state_shardings(cfg, new_mesh, jax.eval_shape(
         lambda: state_like) if not isinstance(state_like, dict)
         else jax.tree.map(
-            lambda l: jax.ShapeDtypeStruct(l.shape, l.dtype), state_like))
+            lambda leaf: jax.ShapeDtypeStruct(leaf.shape, leaf.dtype),
+            state_like))
     state = checkpointer.restore(ckpt_dir, state_like, shardings=shards)
     return state, shards

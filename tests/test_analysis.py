@@ -1,15 +1,21 @@
 """Unit tests for the response-time analyses (Lemmas 1-7) on hand-solvable
-tasksets, plus structural properties (monotonicity, improved <= baseline)."""
+tasksets, plus structural properties (monotonicity, improved <= baseline)
+and the cross-device busy-wait fixed point (core/crossfix.py): golden
+acceptance vectors, convergence/divergence reporting, and the
+SoundnessWarning contract of the heuristic escape hatch."""
 import math
+import warnings
 
 import pytest
 
-from repro.core import (GenParams, GpuSegment, Task, Taskset, bx_cpu_segment,
-                        bx_gpu_segment, generate_taskset,
+from repro.core import (GenParams, GpuSegment, SoundnessWarning, Task,
+                        Taskset, bx_cpu_segment, bx_gpu_segment,
+                        cross_fixed_point, generate_taskset,
                         ioctl_busy_improved_rta, ioctl_busy_rta,
                         ioctl_suspend_improved_rta, ioctl_suspend_rta,
                         kthread_busy_rta, kthread_K, overlap_cg, overlap_gc,
                         schedulable)
+from repro.core.crossfix import MAX_OUTER
 
 
 def two_task_set(eps=0.5):
@@ -121,3 +127,121 @@ def test_unschedulable_detection():
     R = ioctl_busy_rta(ts)
     assert math.isinf(R["b"])
     assert not schedulable(ts, ioctl_busy_rta)
+
+
+# --------------------------------------------------------------------------
+# cross-device busy-wait fixed point (core/crossfix.py)
+# --------------------------------------------------------------------------
+
+_GOLDEN_PARAMS = dict(n_cpus=2, tasks_per_cpu=(3, 5), epsilon=1.0,
+                      util_per_cpu=(0.5, 0.65))
+
+# Pinned acceptance vectors of the joint fixed point over seeds 0..15
+# (generate_taskset with _GOLDEN_PARAMS, kthread_cpu = n_cpus).  These
+# lock the analysis: any change to the occupancy model, the seed, or the
+# iteration moves at least one bit here.
+_GOLDEN_ACCEPT = {
+    (2, "kthread"): [1, 0, 1, 0, 0, 1, 0, 0, 0, 0, 1, 0, 0, 0, 0, 1],
+    (2, "ioctl"):   [1, 0, 1, 1, 0, 1, 1, 1, 0, 0, 1, 1, 1, 0, 1, 1],
+    (4, "kthread"): [1, 0, 1, 1, 0, 1, 0, 0, 0, 0, 1, 0, 0, 0, 0, 1],
+    (4, "ioctl"):   [1, 1, 1, 1, 0, 1, 1, 1, 1, 1, 1, 1, 1, 0, 1, 1],
+}
+
+
+def _golden_ts(seed, n_devices):
+    ts = generate_taskset(seed, GenParams(n_devices=n_devices,
+                                          **_GOLDEN_PARAMS))
+    ts.kthread_cpu = ts.n_cpus
+    return ts
+
+
+@pytest.mark.parametrize("n_devices", [2, 4])
+@pytest.mark.parametrize("approach,rta", [("kthread", kthread_busy_rta),
+                                          ("ioctl", ioctl_busy_rta)],
+                         ids=["kthread", "ioctl"])
+def test_fixed_point_acceptance_golden_vectors(n_devices, approach, rta):
+    got = [int(schedulable(_golden_ts(s, n_devices), rta))
+           for s in range(16)]
+    assert got == _GOLDEN_ACCEPT[(n_devices, approach)]
+
+
+@pytest.mark.parametrize("seed", range(8))
+def test_fixed_point_at_least_as_pessimistic_as_heuristic(seed):
+    """The iterate only ever adds same-device contention on top of the
+    heuristic's uncontended folded charge, so every joint bound is >= the
+    heuristic bound (and the fixed point accepts a subset)."""
+    ts = _golden_ts(seed, 2)
+    Rf = ioctl_busy_rta(ts)
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", SoundnessWarning)
+        Rh = ioctl_busy_rta(ts, method="heuristic")
+    for t in ts.rt_tasks:
+        if Rh[t.name] is None:
+            continue
+        assert Rf[t.name] >= Rh[t.name] - 1e-9
+
+
+def test_fixed_point_converges_on_feasible_set():
+    ts = _golden_ts(0, 2)  # accepted by both approaches (golden vector)
+    R, info = cross_fixed_point(ts, ioctl_busy_rta.__wrapped__, "ioctl")
+    assert info["converged"] and not info["diverged"]
+    assert 1 <= info["iterations"] <= MAX_OUTER
+    assert all(R[t.name] is not None and not math.isinf(R[t.name])
+               for t in ts.rt_tasks)
+
+
+def test_fixed_point_terminates_and_reports_overload():
+    """On an overloaded set the iteration must not spin: it either
+    converges with inf entries or reports divergence — never a silent
+    finite bound for a task past its deadline."""
+    p = GenParams(n_cpus=2, tasks_per_cpu=(3, 5), epsilon=1.0,
+                  util_per_cpu=(0.9, 0.95), n_devices=2)
+    ts = generate_taskset(1, p)
+    ts.kthread_cpu = ts.n_cpus
+    R, info = cross_fixed_point(ts, ioctl_busy_rta.__wrapped__, "ioctl")
+    assert info["iterations"] <= MAX_OUTER
+    assert info["converged"] or info["diverged"]
+    assert any(R[t.name] is not None and math.isinf(R[t.name])
+               for t in ts.rt_tasks)
+    assert not schedulable(ts, ioctl_busy_rta)
+
+
+def test_fixed_point_early_exit_returns_partial_dict():
+    """With early_exit the outer loop stops at the first diverged task;
+    mirroring _rta_loop, still-iterating finite bounds are dropped (they
+    are not fixed points, hence not upper bounds) and absent keys read
+    as unschedulable everywhere."""
+    p = GenParams(n_cpus=2, tasks_per_cpu=(3, 5), epsilon=1.0,
+                  util_per_cpu=(0.9, 0.95), n_devices=2)
+    ts = generate_taskset(1, p)
+    ts.kthread_cpu = ts.n_cpus
+    R, info = cross_fixed_point(ts, ioctl_busy_rta.__wrapped__, "ioctl",
+                                early_exit=True)
+    assert info["unschedulable"]
+    for t in ts.rt_tasks:
+        if t.name in R:
+            assert math.isinf(R[t.name])  # no mid-iteration finite bounds
+    assert not schedulable(ts, ioctl_busy_rta)
+
+
+def test_heuristic_escape_hatch_warns_fixed_point_does_not():
+    ts = _golden_ts(0, 2)
+    with pytest.warns(SoundnessWarning):
+        ioctl_busy_rta(ts, method="heuristic")
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", SoundnessWarning)
+        ioctl_busy_rta(ts)  # default path must stay silent
+        kthread_busy_rta(ts)
+    with pytest.raises(ValueError, match="unknown multi-device method"):
+        ioctl_busy_rta(ts, method="bogus")
+    # validated on single-device tasksets too, so typos can't hide until
+    # the code first meets a multi-GPU platform
+    single = generate_taskset(3, GenParams(n_cpus=2, tasks_per_cpu=(2, 4)))
+    with pytest.raises(ValueError, match="unknown multi-device method"):
+        ioctl_busy_rta(single, method="fixed-point")
+
+
+def test_single_device_ignores_method_and_matches_seed_semantics():
+    ts = generate_taskset(3, GenParams(n_cpus=2, tasks_per_cpu=(2, 4),
+                                       epsilon=0.5))
+    assert ioctl_busy_rta(ts) == ioctl_busy_rta(ts, method="heuristic")

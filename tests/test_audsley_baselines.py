@@ -6,7 +6,7 @@ import pytest
 
 from repro.core import (GenParams, GpuSegment, Task, Taskset,
                         assign_gpu_priorities, fmlp_busy_rta,
-                        fmlp_schedulable, fmlp_suspend_rta, generate_taskset,
+                        fmlp_schedulable, generate_taskset,
                         ioctl_busy_rta, mpcp_busy_rta, mpcp_schedulable,
                         schedulable, schedulable_with_assignment, simulate)
 

@@ -1,11 +1,16 @@
 """Multi-GPU platform model (DESIGN.md §4): taskgen -> simulator ->
-analysis for tasksets spanning >= 2 devices."""
+analysis for tasksets spanning >= 2 devices, in both wait modes (the
+busy-wait bounds come from the cross-device fixed point,
+core/crossfix.py; the larger randomized batch lives in
+tests/test_cross_soundness.py)."""
 import math
 
 import pytest
 
 from repro.core import (GenParams, GpuSegment, Task, Taskset,
-                        generate_taskset, ioctl_suspend_rta, simulate)
+                        assign_gpu_priorities, generate_taskset,
+                        ioctl_busy_rta, ioctl_suspend_rta,
+                        kthread_busy_rta, simulate)
 
 
 def two_device_pair(n_devices=2):
@@ -81,6 +86,45 @@ def test_multi_device_mort_bounded_suspend(seed):
         assert res.mort[t.name] <= bound + 1e-6, (
             f"{t.name}: MORT {res.mort[t.name]:.4f} > WCRT {bound:.4f}")
     assert checked > 0
+
+
+@pytest.mark.parametrize("seed", range(6))
+@pytest.mark.parametrize("approach,rta", [("kthread", kthread_busy_rta),
+                                          ("ioctl", ioctl_busy_rta)],
+                         ids=["kthread", "ioctl"])
+def test_multi_device_mort_bounded_busy(seed, approach, rta):
+    """Busy-wait companion of the suspend test above: the joint fixed
+    point's bounds hold against the simulator on a 2-GPU platform."""
+    p = GenParams(n_cpus=2, tasks_per_cpu=(2, 4), epsilon=0.5, n_devices=2)
+    ts = generate_taskset(seed, p)
+    ts.kthread_cpu = ts.n_cpus
+    horizon = 6 * max(t.period for t in ts.tasks)
+    R = rta(ts)
+    res = simulate(ts, approach, mode="busy", horizon=horizon)
+    checked = 0
+    for t in ts.rt_tasks:
+        bound = R[t.name]
+        if bound is None or math.isinf(bound):
+            continue
+        checked += 1
+        assert res.mort[t.name] <= bound + 1e-6, (
+            f"{t.name}: MORT {res.mort[t.name]:.4f} > WCRT {bound:.4f}")
+    assert checked > 0
+
+
+@pytest.mark.parametrize("seed", range(4))
+def test_audsley_preserves_n_devices(seed):
+    """Regression: assign_gpu_priorities used to rebuild its working
+    taskset without ``n_devices``, which made any multi-device call
+    crash in Taskset validation ("device 1 out of range")."""
+    p = GenParams(n_cpus=2, tasks_per_cpu=(2, 4), epsilon=0.5, n_devices=2)
+    ts = generate_taskset(seed, p)
+    ts.kthread_cpu = ts.n_cpus
+    assigned = assign_gpu_priorities(ts, ioctl_busy_rta)
+    if assigned is not None:
+        assert assigned.n_devices == ts.n_devices
+        assert {t.device for t in assigned.tasks} == \
+            {t.device for t in ts.tasks}
 
 
 def test_device_out_of_range_rejected():

@@ -7,7 +7,6 @@ import time
 
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.sched import (AdmissionController, DeviceExecutor,
                          FaultTolerantLoop, JobProfile, RTJob, restore,
@@ -219,3 +218,23 @@ def test_admission_controller_accepts_then_rejects():
                     priority=0, cpu=1, best_effort=True)
     r3 = ac.try_admit(be)
     assert r3["admitted"] and r3["via"] == "best_effort"
+
+
+def test_admission_controller_multi_device_busy_and_bad_device():
+    ac = AdmissionController(mode="ioctl", wait_mode="busy",
+                             n_cpus=2, epsilon_ms=0.5, n_devices=2)
+    a = JobProfile("a", host_segments_ms=[1.0],
+                   device_segments_ms=[(0.5, 4.0)], period_ms=50,
+                   priority=20, cpu=0, device=0)
+    b = JobProfile("b", host_segments_ms=[1.0],
+                   device_segments_ms=[(0.5, 4.0)], period_ms=50,
+                   priority=19, cpu=1, device=1)
+    assert ac.try_admit(a)["admitted"]
+    assert ac.try_admit(b)["admitted"]
+    # out-of-range device is refused, not a crash, and is not appended
+    bad = JobProfile("bad", host_segments_ms=[1.0],
+                     device_segments_ms=[(0.5, 4.0)], period_ms=50,
+                     priority=18, cpu=0, device=2)
+    r = ac.try_admit(bad)
+    assert not r["admitted"] and "out of range" in r["error"]
+    assert len(ac.admitted) == 2

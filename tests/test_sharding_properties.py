@@ -3,8 +3,6 @@ PartitionSpec must be valid for its tensor (rank, divisibility, no axis
 reuse) on both production meshes and for every architecture/profile —
 the invariant the dry-run depends on."""
 import os
-import subprocess
-import sys
 
 import jax
 import pytest
