@@ -1,21 +1,33 @@
 """CI gate: compare a schedulability-sweep result JSON against the
 committed baseline (benchmarks/results/ci_baseline.json).
 
-Fails (exit 1) when wall-clock regresses more than --max-regression
-(default 25%) over the baseline.  Acceptance-ratio drift is reported but
-does not gate here: the sweep seeds are fixed, so ratios only move when
-the analysis itself changes — which the soundness job and the golden
-vectors in tests/test_analysis.py adjudicate, not a perf gate.
+Two gates (exit 1 on either):
 
-The baseline records the sweep configuration (n, workers); the CI job
-pins --workers to the baseline's value so the comparison is
+  * **wall-clock** — fails when the sweep regresses more than
+    --max-regression (default 25%) over the baseline;
+  * **acceptance ratios** — fails on *any* drift from the baseline rows.
+    The sweep seeds are fixed and the batch backend is pinned
+    decision-identical to the scalar reference, so ratios only move when
+    the analysis itself changes — a silent result change from a backend
+    or analysis edit must show up as a named CI failure, not as a perf
+    footnote.  Intentional analysis changes regenerate the baseline
+    (and justify it in the PR).
+
+The baseline records the sweep configuration (n, workers, backend); the
+CI job pins --workers to the baseline's value so the comparison is
 parallelism-for-parallelism.  Wall-clock still depends on host
 hardware: if runner hardware shifts the floor, regenerate the baseline
 from the job's uploaded artifact rather than widening the margin.
 
+--emit-trajectory PATH writes a small perf-trajectory artifact
+(wall-clock, per-sweep wall-clocks, backend tag, sweep config) from the
+current result; CI uploads it as ``BENCH_sweep.json`` so every push
+leaves a comparable perf datapoint next to the full rows.
+
 Usage:
     python benchmarks/schedulability.py --quick --json current.json
-    python benchmarks/check_regression.py current.json
+    python benchmarks/check_regression.py current.json \
+        --emit-trajectory BENCH_sweep.json
 """
 
 from __future__ import annotations
@@ -31,23 +43,49 @@ def load(path: str) -> dict:
 
 
 def drifted_rows(current: dict, baseline: dict) -> list[str]:
-    base_by_key = {
-        (r.get("sweep"), r.get("x")): r for r in baseline.get("rows", [])
+    """Every baseline datapoint must reappear in the current result with
+    the same value — a row or method that *disappears* is a silent
+    result change too, so absences count as drift in both directions."""
+    cur_by_key = {
+        (r.get("sweep"), r.get("x")): r for r in current.get("rows", [])
     }
     drifts = []
-    for row in current.get("rows", []):
-        base = base_by_key.get((row.get("sweep"), row.get("x")))
-        if base is None:
+    for base in baseline.get("rows", []):
+        key = (base.get("sweep"), base.get("x"))
+        row = cur_by_key.get(key)
+        if row is None:
+            drifts.append(f"{key[0]} x={key[1]}: row missing from current")
             continue
-        for method, value in row.items():
-            if method in ("sweep", "x") or method not in base:
+        for method, expected in base.items():
+            if method in ("sweep", "x"):
                 continue
-            if abs(value - base[method]) > 1e-9:
+            if method not in row:
                 drifts.append(
-                    f"{row['sweep']} x={row['x']} {method}: "
-                    f"{base[method]:.3f} -> {value:.3f}"
+                    f"{key[0]} x={key[1]} {method}: missing from current"
                 )
+            elif abs(row[method] - expected) > 1e-9:
+                drifts.append(
+                    f"{key[0]} x={key[1]} {method}: "
+                    f"{expected:.3f} -> {row[method]:.3f}"
+                )
+        extra = set(row) - set(base) - {"sweep", "x"}
+        for method in sorted(extra):
+            drifts.append(
+                f"{key[0]} x={key[1]} {method}: not in baseline "
+                f"(-> {row[method]:.3f})"
+            )
     return drifts
+
+
+def trajectory(current: dict) -> dict:
+    """The perf-trajectory datapoint CI commits as an artifact."""
+    return {
+        "wall_clock_s": current.get("wall_clock_s"),
+        "sweep_wall_clock_s": current.get("sweep_wall_clock_s", {}),
+        "backend": current.get("backend", "scalar"),
+        "n": current.get("n"),
+        "workers": current.get("workers"),
+    }
 
 
 def main() -> int:
@@ -62,13 +100,20 @@ def main() -> int:
         default=0.25,
         help="allowed fractional wall-clock slowdown (default 0.25)",
     )
+    ap.add_argument(
+        "--emit-trajectory",
+        default=None,
+        metavar="PATH",
+        help="write the perf-trajectory artifact (wall-clock per sweep "
+        "+ backend tag) to PATH",
+    )
     args = ap.parse_args()
 
     current = load(args.current)
     baseline = load(args.baseline)
     cur_s = float(current["wall_clock_s"])
     base_s = float(baseline["wall_clock_s"])
-    for key in ("n", "workers"):
+    for key in ("n", "workers", "backend"):
         if current.get(key) != baseline.get(key):
             print(
                 f"note: sweep configs differ (current {key}="
@@ -77,8 +122,23 @@ def main() -> int:
                 file=sys.stderr,
             )
 
-    for line in drifted_rows(current, baseline):
-        print(f"acceptance drift (informational): {line}")
+    if args.emit_trajectory:
+        with open(args.emit_trajectory, "w") as f:
+            json.dump(trajectory(current), f, indent=2)
+        print(f"wrote trajectory {args.emit_trajectory}")
+
+    failed = False
+    drifts = drifted_rows(current, baseline)
+    for line in drifts:
+        print(f"acceptance drift: {line}", file=sys.stderr)
+    if drifts:
+        print(
+            f"FAIL: {len(drifts)} acceptance ratio(s) drifted from the "
+            "baseline — analysis results changed (regenerate the "
+            "baseline only for an intentional, justified change)",
+            file=sys.stderr,
+        )
+        failed = True
 
     limit = base_s * (1.0 + args.max_regression)
     print(
@@ -91,6 +151,8 @@ def main() -> int:
             f"{args.max_regression:.0%} over baseline",
             file=sys.stderr,
         )
+        failed = True
+    if failed:
         return 1
     print("OK: within budget")
     return 0

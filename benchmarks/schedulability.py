@@ -9,32 +9,47 @@ variants (see repro.core.analysis errata) are used throughout — they are
 sound against the simulator; epsilon = 1 ms for our approaches, zero
 overhead for prior work (as in the paper).
 
-Run as a script for the full sweep with a parallel per-taskset fan-out:
+Two analysis backends (select with ``--backend``, default ``batch``):
+
+  * ``batch`` — the vectorized backend (`repro.core.batch`, DESIGN.md §5):
+    each worker's chunk of tasksets is packed into arrays once and every
+    "ours" method runs as lockstep fixed points over the whole chunk,
+    with the Audsley retry batched across tasksets.  Decision-identical
+    to scalar (tests/test_batch_equivalence.py pins it).
+  * ``scalar`` — the reference per-taskset path, kept runnable for
+    differential timing and debugging.
+
+Run as a script for the full sweep with a parallel per-chunk fan-out:
 
     PYTHONPATH=src python benchmarks/schedulability.py --quick
     PYTHONPATH=src python benchmarks/schedulability.py --n 200 --workers 8
     PYTHONPATH=src python benchmarks/schedulability.py --n-devices 1 2 4
+    PYTHONPATH=src python benchmarks/schedulability.py --quick --backend scalar
 
 The third form runs the multi-device axis instead: heuristic vs
 cross-device fixed-point acceptance under both busy-wait approaches
-(DESIGN.md §4).  ``--json PATH`` dumps rows + wall-clock for the CI
-benchmark-regression gate (benchmarks/check_regression.py).
+(DESIGN.md §4).  ``--json PATH`` dumps rows + wall-clock (total and
+per-sweep) + backend tag for the CI benchmark-regression gate
+(benchmarks/check_regression.py).
 
-Each taskset is an independent unit of work, so the sweep parallelizes
-with ``multiprocessing`` (fork) across ``--workers`` processes; results
-are bit-identical to the serial path (the per-taskset evaluation is
-deterministic and seeds are assigned before the fan-out)."""
+Tasksets are deterministic in their seeds and seeds are assigned before
+the fan-out, so results are bit-identical across worker counts and
+across backends; the sweep parallelizes with ``multiprocessing`` (fork)
+over contiguous seed chunks (one chunk = one batch for the vectorized
+backend)."""
 from __future__ import annotations
 
 import functools
 import os
+import time
 import warnings
 from typing import Callable, Dict, List, Optional
 
-from repro.core import (GenParams, SoundnessWarning, fmlp_schedulable,
-                        generate_taskset, ioctl_busy_improved_rta,
-                        ioctl_busy_rta, ioctl_suspend_improved_rta,
-                        kthread_busy_rta, mpcp_schedulable, schedulable)
+from repro.core import (GenParams, SoundnessWarning, batch_accept_many,
+                        fmlp_schedulable, generate_taskset,
+                        ioctl_busy_improved_rta, ioctl_busy_rta,
+                        ioctl_suspend_improved_rta, kthread_busy_rta,
+                        mpcp_schedulable, schedulable)
 from repro.core.audsley import assign_gpu_priorities
 
 
@@ -86,40 +101,118 @@ METHOD_SETS: Dict[str, Dict[str, Callable]] = {
     "devices": DEVICE_METHODS,
 }
 
+# batch-backend routing: method name -> (batch kind, multi-device method);
+# methods without a vectorized kind (prior-work baselines) stay scalar.
+BATCH_SPECS: Dict[str, Dict[str, Optional[tuple]]] = {
+    "default": {
+        "kthread_busy": ("kthread_busy", "fixed_point"),
+        "ioctl_busy": ("ioctl_busy_improved", "fixed_point"),
+        "ioctl_suspend": ("ioctl_suspend_improved", "fixed_point"),
+        "mpcp": None,
+        "fmlp+": None,
+    },
+    "devices": {
+        "kthread_busy_fixed": ("kthread_busy", "fixed_point"),
+        "kthread_busy_heur": ("kthread_busy", "heuristic"),
+        "ioctl_busy_fixed": ("ioctl_busy", "fixed_point"),
+        "ioctl_busy_heur": ("ioctl_busy", "heuristic"),
+    },
+}
 
-def _eval_taskset(args) -> Dict[str, bool]:
-    """One unit of parallel work: every method on one generated taskset."""
-    seed, params, methods_key = args
+
+def _eval_chunk(args) -> List[Dict[str, bool]]:
+    """One unit of parallel work: every method on one contiguous chunk of
+    generated tasksets (the chunk is the vectorized backend's batch)."""
+    seeds, params, methods_key, backend = args
     methods = METHOD_SETS[methods_key]
-    ts = generate_taskset(seed, params)
-    ts.kthread_cpu = ts.n_cpus  # dedicated scheduler core
-    return {m: bool(fn(ts)) for m, fn in methods.items()}
+    tss = []
+    for seed in seeds:
+        ts = generate_taskset(seed, params)
+        ts.kthread_cpu = ts.n_cpus  # dedicated scheduler core
+        tss.append(ts)
+    out: List[Dict[str, bool]] = [{} for _ in tss]
+    if backend == "batch":
+        specs = {m: s for m, s in BATCH_SPECS[methods_key].items()
+                 if s is not None}
+        with warnings.catch_warnings():
+            # the heuristic arms of the --n-devices axis warn by design
+            warnings.simplefilter("ignore", SoundnessWarning)
+            acc = batch_accept_many(specs, tss)
+        for m, bits in acc.items():
+            for d, b in zip(out, bits):
+                d[m] = bool(b)
+        rest = [m for m in methods if m not in specs]
+    else:
+        rest = list(methods)
+    for m in rest:
+        fn = methods[m]
+        for d, ts in zip(out, tss):
+            d[m] = bool(fn(ts))
+    return out
 
 
 def default_workers() -> int:
     env = os.environ.get("REPRO_SWEEP_WORKERS")
     if env:
         return max(int(env), 1)
-    return os.cpu_count() or 1
+    # capped: the batch backend saturates cores with NumPy, and raw
+    # cpu_count() oversubscribes small CI runners
+    return min(os.cpu_count() or 1, 4)
+
+
+_POOL = None
+_POOL_WORKERS = 0
+
+
+def _get_pool(workers: int):
+    """One long-lived process pool for the whole sweep run — per-point
+    pool spawning used to dominate the parallel quick sweep's overhead.
+    Library callers of ``acceptance()`` need not manage it: a mismatched
+    worker count recycles the pool and an atexit hook reaps the last
+    one (``main()`` still closes eagerly)."""
+    global _POOL, _POOL_WORKERS
+    if _POOL is None or _POOL_WORKERS != workers:
+        if _POOL is None:  # first pool in this process: register the reaper
+            import atexit
+            atexit.register(close_pool)
+        close_pool()
+        import multiprocessing as mp
+        _POOL = mp.Pool(workers)
+        _POOL_WORKERS = workers
+    return _POOL
+
+
+def close_pool() -> None:
+    global _POOL, _POOL_WORKERS
+    if _POOL is not None:
+        _POOL.terminate()
+        _POOL.join()
+        _POOL = None
+        _POOL_WORKERS = 0
 
 
 def acceptance(params: GenParams, n: int, seed0: int = 0,
                workers: Optional[int] = None,
-               methods_key: str = "default") -> Dict[str, float]:
+               methods_key: str = "default",
+               backend: str = "batch") -> Dict[str, float]:
     """Acceptance ratio per method over n tasksets.  ``workers`` > 1 fans
-    the tasksets out over a process pool; None keeps the serial path
-    (safe inside test processes that already hold accelerator runtimes).
-    ``methods_key`` selects a METHOD_SETS entry (module-level so the
-    forked workers resolve it by name — closures don't pickle)."""
+    contiguous seed chunks out over a (long-lived) process pool; None
+    keeps the serial path (safe inside test processes that already hold
+    accelerator runtimes).  Results are bit-identical across worker
+    counts and backends (``methods_key``/``backend`` are plain values so
+    the forked workers resolve the method tables by name — closures
+    don't pickle)."""
     methods = METHOD_SETS[methods_key]
-    jobs = [(seed0 + i, params, methods_key) for i in range(n)]
+    seeds = [seed0 + i for i in range(n)]
     if workers is not None and workers > 1:
-        import multiprocessing as mp
-        chunk = max(1, n // (workers * 4))
-        with mp.Pool(workers) as pool:
-            results = pool.map(_eval_taskset, jobs, chunksize=chunk)
+        n_chunks = max(workers, 1)
+        size = max(1, (n + n_chunks - 1) // n_chunks)
+        jobs = [(tuple(seeds[i:i + size]), params, methods_key, backend)
+                for i in range(0, n, size)]
+        chunks = _get_pool(workers).map(_eval_chunk, jobs)
+        results = [r for c in chunks for r in c]
     else:
-        results = [_eval_taskset(j) for j in jobs]
+        results = _eval_chunk((tuple(seeds), params, methods_key, backend))
     wins = {m: 0 for m in methods}
     for r in results:
         for m in methods:
@@ -135,17 +228,24 @@ def _sweep_seed(name: str) -> int:
     return zlib.crc32(name.encode()) % 10_000
 
 
+SWEEP_TIMES: Dict[str, float] = {}  # per-sweep wall-clock of the last run
+
+
 def sweep(name: str, param_list: List[tuple], n: int,
           workers: Optional[int] = None,
-          methods_key: str = "default") -> List[dict]:
+          methods_key: str = "default",
+          backend: str = "batch") -> List[dict]:
     rows = []
+    t0 = time.time()
     for label, params in param_list:
         row = {"sweep": name, "x": label,
                **acceptance(params, n, seed0=_sweep_seed(name),
-                            workers=workers, methods_key=methods_key)}
+                            workers=workers, methods_key=methods_key,
+                            backend=backend)}
         rows.append(row)
         print(f"  {name} x={label}: " + " ".join(
             f"{m}={row[m]:.2f}" for m in METHOD_SETS[methods_key]))
+    SWEEP_TIMES[name] = round(time.time() - t0, 3)
     return rows
 
 
@@ -156,70 +256,78 @@ def sweep(name: str, param_list: List[tuple], n: int,
 BAND = (0.30, 0.40)
 
 
-def fig7_n_tasks(n: int, workers: Optional[int] = None) -> List[dict]:
+def fig7_n_tasks(n: int, workers: Optional[int] = None,
+                 backend: str = "batch") -> List[dict]:
     pts = [(k, GenParams(n_tasks_total=k, util_per_cpu=BAND))
            for k in (8, 12, 16, 20, 24)]
-    return sweep("fig7_n_tasks", pts, n, workers)
+    return sweep("fig7_n_tasks", pts, n, workers, backend=backend)
 
 
-def fig8_n_cpus(n: int, workers: Optional[int] = None) -> List[dict]:
+def fig8_n_cpus(n: int, workers: Optional[int] = None,
+                backend: str = "batch") -> List[dict]:
     pts = [(c, GenParams(n_cpus=c, util_per_cpu=BAND))
            for c in (2, 4, 6, 8)]
-    return sweep("fig8_n_cpus", pts, n, workers)
+    return sweep("fig8_n_cpus", pts, n, workers, backend=backend)
 
 
-def fig9_util(n: int, workers: Optional[int] = None) -> List[dict]:
+def fig9_util(n: int, workers: Optional[int] = None,
+              backend: str = "batch") -> List[dict]:
     pts = [(u, GenParams(util_per_cpu=(u - 0.05, u + 0.05)))
            for u in (0.25, 0.3, 0.35, 0.4, 0.45, 0.5)]
-    return sweep("fig9_util", pts, n, workers)
+    return sweep("fig9_util", pts, n, workers, backend=backend)
 
 
-def fig10_gpu_ratio(n: int, workers: Optional[int] = None) -> List[dict]:
+def fig10_gpu_ratio(n: int, workers: Optional[int] = None,
+                    backend: str = "batch") -> List[dict]:
     pts = [(r, GenParams(gpu_task_ratio=(r - 0.1, r + 0.1),
                          util_per_cpu=BAND))
            for r in (0.2, 0.4, 0.6, 0.8)]
-    return sweep("fig10_gpu_ratio", pts, n, workers)
+    return sweep("fig10_gpu_ratio", pts, n, workers, backend=backend)
 
 
-def fig11_g_to_c(n: int, workers: Optional[int] = None) -> List[dict]:
+def fig11_g_to_c(n: int, workers: Optional[int] = None,
+                 backend: str = "batch") -> List[dict]:
     pts = [(g, GenParams(g_to_c_ratio=(g * 0.5, g * 1.5),
                          util_per_cpu=BAND))
            for g in (0.2, 0.5, 1.0, 2.0, 4.0)]
-    return sweep("fig11_g_to_c", pts, n, workers)
+    return sweep("fig11_g_to_c", pts, n, workers, backend=backend)
 
 
-def fig12_best_effort(n: int, workers: Optional[int] = None) -> List[dict]:
+def fig12_best_effort(n: int, workers: Optional[int] = None,
+                      backend: str = "batch") -> List[dict]:
     pts = [(r, GenParams(best_effort_ratio=r, util_per_cpu=(0.4, 0.5)))
            for r in (0.0, 0.2, 0.4, 0.6)]
-    return sweep("fig12_best_effort", pts, n, workers)
+    return sweep("fig12_best_effort", pts, n, workers, backend=backend)
 
 
 def fig13_n_devices(n: int, workers: Optional[int] = None,
-                    device_counts=(1, 2, 4)) -> List[dict]:
+                    device_counts=(1, 2, 4),
+                    backend: str = "batch") -> List[dict]:
     """Multi-device axis: heuristic vs cross-device fixed-point acceptance
     under both busy-wait approaches (DESIGN.md §4).  On one device the
     two coincide; with more devices the (unsound) heuristic over-accepts
     and the gap is the cross-device busy-wait coupling it ignores."""
     pts = [(d, GenParams(n_devices=d, util_per_cpu=BAND))
            for d in device_counts]
-    return sweep("fig13_n_devices", pts, n, workers, methods_key="devices")
+    return sweep("fig13_n_devices", pts, n, workers, methods_key="devices",
+                 backend=backend)
 
 
 ALL = [fig7_n_tasks, fig8_n_cpus, fig9_util, fig10_gpu_ratio, fig11_g_to_c,
        fig12_best_effort]
 
 
-def run(n: int = 200, workers: Optional[int] = None) -> List[dict]:
+def run(n: int = 200, workers: Optional[int] = None,
+        backend: str = "batch") -> List[dict]:
     rows = []
     for fn in ALL:
-        rows.extend(fn(n, workers))
+        rows.extend(fn(n, workers, backend=backend))
     return rows
 
 
 def main() -> None:
     import argparse
     import json
-    import time
 
     ap = argparse.ArgumentParser(description=__doc__.split("\n")[0])
     ap.add_argument("--quick", action="store_true",
@@ -227,31 +335,44 @@ def main() -> None:
     ap.add_argument("--n", type=int, default=0,
                     help="tasksets per sweep point (overrides --quick)")
     ap.add_argument("--workers", type=int, default=0,
-                    help="process-pool size (0 = all cores, 1 = serial)")
+                    help="process-pool size (0 = default_workers(), "
+                         "1 = serial)")
+    ap.add_argument("--backend", choices=("batch", "scalar"),
+                    default="batch",
+                    help="analysis backend: vectorized batch (default) "
+                         "or the scalar reference path")
     ap.add_argument("--n-devices", type=int, nargs="+", default=None,
                     metavar="D",
                     help="run the multi-device axis over these device "
                          "counts (heuristic vs fixed-point acceptance) "
                          "instead of the paper sweeps")
     ap.add_argument("--json", default=None, metavar="PATH",
-                    help="write rows + wall-clock to PATH (CI regression "
-                         "gate reads this)")
+                    help="write rows + wall-clock + backend to PATH (CI "
+                         "regression gate reads this)")
     args = ap.parse_args()
     n = args.n or (40 if args.quick else 200)
     workers = args.workers or default_workers()
     t0 = time.time()
-    if args.n_devices:
-        rows = fig13_n_devices(n, workers=workers,
-                               device_counts=tuple(args.n_devices))
-    else:
-        rows = run(n, workers=workers)
+    try:
+        if args.n_devices:
+            rows = fig13_n_devices(n, workers=workers,
+                                   device_counts=tuple(args.n_devices),
+                                   backend=args.backend)
+        else:
+            rows = run(n, workers=workers, backend=args.backend)
+    finally:
+        close_pool()
     dt = time.time() - t0
     print(f"schedulability sweep: {len(rows)} points x {n} tasksets, "
-          f"{workers} workers, {dt:.1f}s wall-clock")
+          f"{workers} workers, backend={args.backend}, "
+          f"{dt:.1f}s wall-clock")
     if args.json:
         with open(args.json, "w") as f:
             json.dump({"rows": rows, "n": n, "workers": workers,
-                       "wall_clock_s": round(dt, 3)}, f, indent=2)
+                       "backend": args.backend,
+                       "wall_clock_s": round(dt, 3),
+                       "sweep_wall_clock_s": dict(SWEEP_TIMES)}, f,
+                      indent=2)
         print(f"wrote {args.json}")
 
 

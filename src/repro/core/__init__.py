@@ -11,6 +11,9 @@ Public API:
                     schedulable, fold_to_device, cross_fixed_point
                     (multi-device busy-wait; SoundnessWarning gates the
                     heuristic escape hatch)
+  batch backend   : schedulable_many, batch_rta, batch_schedulable,
+                    batch_schedulable_with_assignment, batch_accept_many
+                    (NumPy lockstep fixed points, DESIGN.md §5)
   baselines       : mpcp_schedulable, fmlp_schedulable (+ *_rta variants)
   priority assign : assign_gpu_priorities, schedulable_with_assignment
   generation      : GenParams, generate_taskset, uunifast
@@ -18,9 +21,12 @@ Public API:
 """
 from .analysis import (SoundnessWarning, fold_to_device, ioctl_busy_rta,
                        ioctl_suspend_rta, kthread_busy_rta, kthread_K,
-                       schedulable)
+                       schedulable, schedulable_many)
 from .audsley import assign_gpu_priorities, schedulable_with_assignment
-from .crossfix import busy_occupancy, cross_fixed_point, uncontended_occupancy
+from .batch import (batch_accept_many, batch_rta, batch_schedulable,
+                    batch_schedulable_with_assignment)
+from .crossfix import (busy_occupancy, cross_fixed_point, occupancy_vector,
+                       uncontended_occupancy)
 from .baselines import (fmlp_busy_rta, fmlp_schedulable, fmlp_suspend_rta,
                         mpcp_busy_rta, mpcp_schedulable, mpcp_suspend_rta)
 from .engine import EventDrivenEngine
@@ -45,8 +51,10 @@ __all__ = [
     "EventDrivenEngine",
     "kthread_busy_rta", "ioctl_busy_rta", "ioctl_suspend_rta", "kthread_K",
     "ioctl_busy_improved_rta", "ioctl_suspend_improved_rta", "schedulable",
+    "schedulable_many", "batch_rta", "batch_schedulable",
+    "batch_schedulable_with_assignment", "batch_accept_many",
     "fold_to_device", "SoundnessWarning", "cross_fixed_point",
-    "busy_occupancy", "uncontended_occupancy",
+    "busy_occupancy", "uncontended_occupancy", "occupancy_vector",
     "mpcp_schedulable", "fmlp_schedulable", "mpcp_busy_rta",
     "mpcp_suspend_rta", "fmlp_busy_rta", "fmlp_suspend_rta",
     "assign_gpu_priorities", "schedulable_with_assignment",

@@ -100,9 +100,19 @@ def ts_deadline(t: Task) -> float:
     return t.deadline
 
 
-def _iterate(ti: Task, f: Callable[[float], float]) -> float:
-    """Standard fixed-point iteration; inf if R exceeds the deadline."""
-    R = f(0.0)
+def _iterate(ti: Task, f: Callable[[float], float], seed: float = 0.0) -> float:
+    """Standard fixed-point iteration; inf if R exceeds the deadline.
+
+    ``seed`` warm-starts the ascent.  The caller must guarantee
+    ``seed <= lfp(f)``: for monotone ``f`` the Kleene iteration from any
+    point at or below the least fixed point is nondecreasing and converges
+    to the same least fixed point (Knaster–Tarski: ``f(s) < s`` would imply
+    ``lfp <= s``), so the result is identical to the cold start — only the
+    early iterations are skipped.  An ``inf`` seed means the caller already
+    proved a lower bound beyond the deadline."""
+    if math.isinf(seed):
+        return math.inf
+    R = f(max(seed, 0.0))
     for _ in range(MAX_ITERS):
         R_new = f(R)
         if R_new > ti.deadline + _EPS:
@@ -126,19 +136,25 @@ def _gpu_hp_remote(ts: Taskset, ti: Task, use_gpu_prio: bool) -> list[Task]:
 
 def _rta_loop(ts: Taskset, make_f: Callable[[Task, Dict], Callable],
               early_exit: bool = False, only: Optional[str] = None,
-              r_independent: bool = False) -> Dict[str, Optional[float]]:
+              r_independent: bool = False,
+              seeds: Optional[Dict[str, float]] = None
+              ) -> Dict[str, Optional[float]]:
     """Run the per-task fixed points in decreasing priority order.
 
     ``make_f(ti, R)`` builds the recurrence for ``ti`` given the WCRTs of
     the higher-priority tasks computed so far.  ``r_independent`` declares
     that the recurrences never read ``R`` (deadline-based jitters), which
-    lets ``only`` skip every other task outright."""
+    lets ``only`` skip every other task outright.  ``seeds`` maps task
+    names to warm-start values for the per-task iteration (must be lower
+    bounds of the respective fixed points — see ``_iterate``; used by the
+    warm-started Audsley assignment in `core/audsley.py`)."""
     R: Dict[str, Optional[float]] = {}
     for ti in ts.by_priority():
         if only is not None and r_independent and ti.name != only:
             continue
         if ti.is_rt:
-            R[ti.name] = _iterate(ti, make_f(ti, R))
+            seed = seeds.get(ti.name, 0.0) if seeds else 0.0
+            R[ti.name] = _iterate(ti, make_f(ti, R), seed=seed)
         else:
             R[ti.name] = None
         if only is not None and ti.name == only:
@@ -200,6 +216,21 @@ def _worse_bound(a: Optional[float], b: Optional[float]) -> bool:
     return a > b
 
 
+def merge_device_bounds(out: Dict[str, Optional[float]],
+                        Rd: Dict[str, Optional[float]],
+                        own_dev: Dict[str, int], d: int) -> None:
+    """The per-device combination rule, shared by ``per_device``,
+    `core/crossfix.py` and `core/batch.py`: a GPU task takes its bound
+    from its own device's projection only; device-agnostic tasks keep
+    the worst bound over projections."""
+    for name, r in Rd.items():
+        if name in own_dev:
+            if own_dev[name] == d:
+                out[name] = r
+        elif name not in out or _worse_bound(r, out[name]):
+            out[name] = r
+
+
 def per_device(rta: Callable) -> Callable:
     """Lift a single-device RTA to multi-device tasksets (identity when
     ``n_devices == 1``).  Each GPU task takes its bound from its own
@@ -220,12 +251,7 @@ def per_device(rta: Callable) -> Callable:
             if only is not None and own_device.get(only, d) != d:
                 continue  # a GPU task's bound comes from its device only
             Rd = rta(fold_to_device(ts, d), *args, **kw)
-            for name, r in Rd.items():
-                if name in own_device:
-                    if own_device[name] == d:
-                        out[name] = r
-                elif name not in out or _worse_bound(r, out[name]):
-                    out[name] = r
+            merge_device_bounds(out, Rd, own_device, d)
         return out
 
     return wrapper
@@ -270,6 +296,12 @@ def cross_device(occ_kind: str) -> Callable:
                     "(cross-device busy-wait coupling); use the default "
                     "method='fixed_point'", SoundnessWarning, stacklevel=2)
                 return heuristic(ts, **kw)
+            # Warm-start seeds are defined against the single-device
+            # recurrence; under the joint fixed point the folded occupancy
+            # charges shift with GPU priorities, so a seed proved for one
+            # assignment is not a lower bound for another.  Drop them
+            # (seeds only accelerate — correctness is unaffected).
+            kw.pop("seeds", None)
             from .crossfix import cross_fixed_point
             R, _ = cross_fixed_point(ts, rta, occ_kind, **kw)
             return R
@@ -318,7 +350,8 @@ def kthread_K(ts: Taskset, ti: Task, R_i: float, R: Dict[str, float],
 @cross_device("kthread")
 def kthread_busy_rta(ts: Taskset, use_gpu_prio: bool = False,
                      corrected: bool = True, early_exit: bool = False,
-                     only: Optional[str] = None
+                     only: Optional[str] = None,
+                     seeds: Optional[Dict[str, float]] = None
                      ) -> Dict[str, Optional[float]]:
     """Lemma 2: WCRT under the kernel-thread approach.
 
@@ -347,7 +380,7 @@ def kthread_busy_rta(ts: Taskset, use_gpu_prio: bool = False,
         return f
 
     return _rta_loop(ts, make_f, early_exit=early_exit, only=only,
-                     r_independent=use_gpu_prio)
+                     r_independent=use_gpu_prio, seeds=seeds)
 
 
 # --------------------------------------------------------------------------
@@ -369,7 +402,8 @@ def _gmstar(t: Task, eps: float) -> float:
 @cross_device("ioctl")
 def ioctl_busy_rta(ts: Taskset, use_gpu_prio: bool = False,
                    corrected: bool = True, early_exit: bool = False,
-                   only: Optional[str] = None
+                   only: Optional[str] = None,
+                   seeds: Optional[Dict[str, float]] = None
                    ) -> Dict[str, Optional[float]]:
     """Lemma 3: WCRT under the IOCTL-based approach with busy-waiting.
 
@@ -405,7 +439,7 @@ def ioctl_busy_rta(ts: Taskset, use_gpu_prio: bool = False,
         return f
 
     return _rta_loop(ts, make_f, early_exit=early_exit, only=only,
-                     r_independent=use_gpu_prio)
+                     r_independent=use_gpu_prio, seeds=seeds)
 
 
 # --------------------------------------------------------------------------
@@ -414,7 +448,8 @@ def ioctl_busy_rta(ts: Taskset, use_gpu_prio: bool = False,
 
 @per_device
 def ioctl_suspend_rta(ts: Taskset, use_gpu_prio: bool = False,
-                      early_exit: bool = False, only: Optional[str] = None
+                      early_exit: bool = False, only: Optional[str] = None,
+                      seeds: Optional[Dict[str, float]] = None
                       ) -> Dict[str, Optional[float]]:
     """Lemma 4: WCRT under the IOCTL-based approach with self-suspension.
 
@@ -455,7 +490,7 @@ def ioctl_suspend_rta(ts: Taskset, use_gpu_prio: bool = False,
         return f
 
     return _rta_loop(ts, make_f, early_exit=early_exit, only=only,
-                     r_independent=use_gpu_prio)
+                     r_independent=use_gpu_prio, seeds=seeds)
 
 
 # --------------------------------------------------------------------------
@@ -483,3 +518,42 @@ def schedulable(ts: Taskset, rta: Callable[..., Dict[str, Optional[float]]],
         if r is None or math.isinf(r) or r > t.deadline + _EPS:
             return False
     return True
+
+
+# `core/batch.py` resolves scalar RTA callables to its vectorized kinds
+# through this tag (the improved variants tag themselves in
+# `core/improved.py`).
+kthread_busy_rta.batch_kind = "kthread_busy"
+ioctl_busy_rta.batch_kind = "ioctl_busy"
+ioctl_suspend_rta.batch_kind = "ioctl_suspend"
+
+
+def schedulable_many(tasksets, rta, backend: str = "batch",
+                     **kw) -> list[bool]:
+    """Schedulability of a whole batch of tasksets under one analysis.
+
+    ``backend="batch"`` routes RTAs that declare a vectorized equivalent
+    (``rta.batch_kind``, or ``rta`` given directly as a kind string) to
+    the NumPy backend in `core/batch.py`, which runs every task of every
+    taskset in one masked lockstep fixed point — decision-identical to
+    the scalar path (tests/test_batch_equivalence.py).
+    ``backend="scalar"`` (or an untagged external RTA) evaluates
+    ``schedulable`` per taskset — the reference implementation."""
+    if backend not in ("batch", "scalar"):
+        raise ValueError(f"unknown analysis backend {backend!r}")
+    tasksets = list(tasksets)
+    if backend == "batch":
+        kind = rta if isinstance(rta, str) else getattr(
+            rta, "batch_kind", None)
+        # scalar-only kwargs: ``early_exit`` is a pure acceleration hint
+        # (decisions unchanged — drop it); ``only``/``seeds`` change what
+        # the scalar RTA computes, so they force the scalar path rather
+        # than raising on an otherwise drop-in call.
+        if kind is not None and not ("only" in kw or "seeds" in kw):
+            kw.pop("early_exit", None)
+            from .batch import batch_schedulable
+            return batch_schedulable(kind, tasksets, **kw)
+    if isinstance(rta, str):
+        raise ValueError(
+            f"kind string {rta!r} requires backend='batch'")
+    return [schedulable(ts, rta, **kw) for ts in tasksets]

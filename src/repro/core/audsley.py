@@ -16,18 +16,43 @@ priority levels from lowest to highest.  Constraints from the paper:
 The GPU priority *values* are the sorted CPU-priority values of the GPU-using
 real-time tasks, so they remain comparable with the (unchanged) gpu_priority
 of CPU-only and best-effort tasks.
+
+Warm-started assignment (DESIGN.md §5): a candidate that fails a level is
+re-tested at every subsequent level, and each test historically restarted
+its fixed point from zero.  Since the recurrences are monotone, iterating
+from any seed *at or below* the least fixed point is result-identical and
+skips the early ascent.  Note the direction: as levels rise the candidate's
+interference set *shrinks*, so the converged bound from a previous level
+sits at or ABOVE the new fixed point and is NOT a sound seed.  Instead we
+seed every test of a candidate with its *floor bound* — the converged
+response time with an empty remote-interference set (candidate provisionally
+above every GPU priority) and, for the overlap-improved analyses, the
+all-GPU-tasks overlap superset (``overlap_floor=True``), whose larger
+deduction keeps the floor recurrence a pointwise lower bound of the
+recurrence at any level.  The floor is level- and state-independent, is
+computed once per candidate (lazily, on its first test), prunes candidates
+whose floor already misses the deadline, and — because under deadline-based
+jitters a task's recurrence depends only on the *set* of tasks above it —
+each placed candidate's converged bound equals its bound under the final
+assignment, so the closing full-set test is seeded with the placement
+bounds.  Warm-starting applies on single-device tasksets only: under the
+multi-device busy fixed point (`core/crossfix.py`) the folded occupancy
+charges shift with GPU priorities and no per-candidate floor is available.
 """
 from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Callable, Dict, Optional
+from typing import Callable, Dict, Optional, Tuple
 
 from .analysis import supports_kwarg
 from .task_model import Task, Taskset
 
 
-def _test_task(ts: Taskset, name: str, rta: Callable, **kw) -> bool:
+def _test_task(ts: Taskset, name: str, rta: Callable,
+               seeds: Optional[Dict[str, float]] = None,
+               **kw) -> Tuple[bool, Optional[float]]:
+    """Test one task's bound; returns (passes, converged bound)."""
     if supports_kwarg(rta, "only"):
         # With use_gpu_prio the jitters are deadline-based (the OPA
         # property), so on single-device / suspend paths the candidate's
@@ -38,27 +63,36 @@ def _test_task(ts: Taskset, name: str, rta: Callable, **kw) -> bool:
         # the per-candidate test stays correct (we still only read the
         # candidate's bound) and _full_test gates final acceptance.
         kw.setdefault("only", name)
+    if seeds and supports_kwarg(rta, "seeds"):
+        kw.setdefault("seeds", seeds)
     R = rta(ts, use_gpu_prio=True, **kw)
     t = next(t for t in ts.tasks if t.name == name)
     r = R[name]
-    return r is not None and not math.isinf(r) and r <= t.deadline + 1e-9
+    ok = r is not None and not math.isinf(r) and r <= t.deadline + 1e-9
+    return ok, r
 
 
-def _full_test(ts: Taskset, rta: Callable, **kw) -> bool:
+def _full_test(ts: Taskset, rta: Callable,
+               seeds: Optional[Dict[str, float]] = None, **kw) -> bool:
     if supports_kwarg(rta, "early_exit"):
         kw.setdefault("early_exit", True)
+    if seeds and supports_kwarg(rta, "seeds"):
+        kw.setdefault("seeds", seeds)
     R = rta(ts, use_gpu_prio=True, **kw)
     return all(not math.isinf(R.get(t.name, math.inf))
                and R[t.name] <= t.deadline + 1e-9 for t in ts.rt_tasks)
 
 
 def assign_gpu_priorities(ts: Taskset, rta: Callable,
-                          ) -> Optional[Taskset]:
+                          warm_start: bool = True) -> Optional[Taskset]:
     """Audsley assignment of GPU-segment priorities.
 
     Returns a new Taskset with gpu_priority fields set if one is found under
     which every real-time task passes ``rta`` (with use_gpu_prio=True), else
-    None.
+    None.  ``warm_start`` enables the result-identical floor-seeded
+    candidate tests (module docstring); disable it to run every fixed
+    point from zero (the reference behaviour, kept for differential
+    testing).
     """
     gpu_tasks = sorted([t for t in ts.rt_tasks if t.uses_gpu],
                        key=lambda t: t.priority)
@@ -77,6 +111,27 @@ def assign_gpu_priorities(ts: Taskset, rta: Callable,
     for t in unassigned:
         t.gpu_priority = top + t.priority  # unique, above all levels
 
+    warm = (warm_start and ts.n_devices == 1
+            and supports_kwarg(rta, "seeds"))
+    ceiling = top + max(t.priority for t in gpu_tasks) + 1
+    floors: Dict[str, float] = {}    # candidate -> floor bound (seed)
+    placed_R: Dict[str, float] = {}  # candidate -> bound at placement
+
+    def candidate_floor(cand: Task) -> float:
+        """Converged bound with an empty remote set (candidate above every
+        GPU priority) and, where supported, the overlap floor — a lower
+        bound of the candidate's fixed point at every level."""
+        kw = {}
+        if supports_kwarg(rta, "overlap_floor"):
+            kw["overlap_floor"] = True
+        old = cand.gpu_priority
+        cand.gpu_priority = ceiling
+        try:
+            _, r = _test_task(work, cand.name, rta, **kw)
+        finally:
+            cand.gpu_priority = old
+        return math.inf if r is None else r
+
     for level in levels:  # lowest first
         # Eligible: lowest-CPU-priority unassigned GPU task per core.
         lowest_per_core: Dict[int, Task] = {}
@@ -84,10 +139,19 @@ def assign_gpu_priorities(ts: Taskset, rta: Callable,
             lowest_per_core.setdefault(t.cpu, t)
         placed = None
         for cand in sorted(lowest_per_core.values(), key=lambda t: t.priority):
+            seeds = None
+            if warm:
+                if cand.name not in floors:
+                    floors[cand.name] = candidate_floor(cand)
+                if math.isinf(floors[cand.name]):
+                    continue  # floor already misses: fails at every level
+                seeds = {cand.name: floors[cand.name]}
             old = cand.gpu_priority
             cand.gpu_priority = level
-            if _test_task(work, cand.name, rta):
+            ok, r = _test_task(work, cand.name, rta, seeds=seeds)
+            if ok:
                 placed = cand
+                placed_R[cand.name] = r
                 break
             cand.gpu_priority = old
         if placed is None:
@@ -95,8 +159,11 @@ def assign_gpu_priorities(ts: Taskset, rta: Callable,
         unassigned.remove(placed)
 
     # CPU-only tasks' schedulability can also shift with GPU priorities
-    # (busy-wait chains); verify the whole set before accepting.
-    if _full_test(work, rta):
+    # (busy-wait chains); verify the whole set before accepting.  Each
+    # placed candidate's final-assignment bound equals its placement bound
+    # (set-identical interference under deadline jitters), so those seed
+    # the full test.
+    if _full_test(work, rta, seeds=placed_R if warm else None):
         return work
     return None
 

@@ -1,0 +1,960 @@
+"""NumPy-vectorized batch RTA backend (DESIGN.md §5).
+
+The schedulability sweeps (paper Figs. 7-12) evaluate thousands of random
+tasksets through the Lemma 1-4/6-7 recurrences.  The scalar path in
+`core/analysis.py` / `core/improved.py` walks them one task at a time,
+re-deriving every interference term per fixed-point step.  This module
+packs a whole *batch* of tasksets into padded ``(S, N)`` arrays (S
+tasksets, N = max real-time tasks) and iterates **all tasks of all
+tasksets in lockstep**: one masked array fixed point with per-element
+divergence freezing replaces thousands of Python ``_iterate`` calls.
+
+Why lockstep (Jacobi) iteration is decision- and value-identical to the
+scalar (priority-ordered, Gauss-Seidel-style) reference:
+
+  * Within one taskset the recurrences form a *triangular* monotone
+    system — task i's recurrence reads only the response times of
+    strictly higher-priority tasks (through the release jitters), never
+    the other way around.  The scalar loop solves it exactly by
+    substitution; the least fixed point of the joint system is that same
+    solution.
+  * Every term is monotone in the iterate vector, and the jitter
+    fallback for a diverged task (``R_h -> D_h``) matches the scalar
+    fallback.  Jacobi iteration from the zero vector (or any per-task
+    seed at or below the task's fixed point) therefore ascends to the
+    least fixed point — the scalar answer.
+  * The recurrences are piecewise constant in the iterate (all
+    dependence goes through ``ceil`` terms), so the ascent terminates
+    *exactly* in finitely many rounds; a task whose iterate exceeds its
+    deadline is frozen at ``inf`` immediately, exactly like
+    ``_iterate``.
+
+Multi-device tasksets are composed exactly like the scalar
+decorators: the suspend-mode analyses (and the busy-mode
+``method="heuristic"`` escape hatch) run every per-device projection of
+every taskset in one batched solve and recombine (``per_device``
+semantics), while the busy-mode default drives the `core/crossfix.py`
+outer occupancy loop in lockstep across the batch — each outer round
+folds all still-active tasksets with their current occupancy iterate
+(``fold_to_device``), solves every projection in one batched inner
+fixed point, and re-derives occupancies with the shared
+``crossfix.occupancy_vector`` step.
+
+``_audsley_lockstep`` additionally batches the Audsley GPU-priority
+search: every still-active taskset's current candidate test is one
+element of a shared single-task vector fixed point, warm-started from
+the per-candidate floor bound (see `core/audsley.py` for the soundness
+argument; the floor is computed here in one vectorized pre-solve).
+
+The scalar path remains the reference implementation; differential and
+golden equivalence is pinned in tests/test_batch_equivalence.py.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+import warnings
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from .analysis import (MAX_ITERS, SoundnessWarning, fold_to_device,
+                       merge_device_bounds)
+from .audsley import assign_gpu_priorities
+from .task_model import Taskset
+
+_EPS = 1e-9
+
+SUSPEND_KINDS = ("ioctl_suspend", "ioctl_suspend_improved")
+BUSY_KINDS = ("kthread_busy", "ioctl_busy", "ioctl_busy_improved")
+KINDS = BUSY_KINDS + SUSPEND_KINDS
+_IMPROVED = frozenset(("ioctl_busy_improved", "ioctl_suspend_improved"))
+_OCC_KIND = {"kthread_busy": "kthread", "ioctl_busy": "ioctl",
+             "ioctl_busy_improved": "ioctl"}
+
+
+def scalar_rta(kind: str, method: str = "fixed_point"):
+    """The scalar reference callable for a batch kind (used for fallback
+    paths — e.g. multi-device Audsley — and by the differential tests)."""
+    from . import analysis as _a
+    from . import improved as _i
+    base = {
+        "kthread_busy": _a.kthread_busy_rta,
+        "ioctl_busy": _a.ioctl_busy_rta,
+        "ioctl_suspend": _a.ioctl_suspend_rta,
+        "ioctl_busy_improved": _i.ioctl_busy_improved_rta,
+        "ioctl_suspend_improved": _i.ioctl_suspend_improved_rta,
+    }[kind]
+    if method == "heuristic" and kind in BUSY_KINDS:
+        @functools.wraps(base)
+        def wrapped(ts, **kw):
+            kw.setdefault("method", "heuristic")
+            return base(ts, **kw)
+        return wrapped
+    return base
+
+
+# --------------------------------------------------------------------------
+# array packing
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class _Pack:
+    """Padded arrays over the real-time tasks of S single-device tasksets.
+
+    Index convention for pair matrices built from these: ``M[s, i, h]``
+    with ``i`` the analyzed task and ``h`` the interferer.  Best-effort
+    tasks are never interference sources for real-time tasks (their
+    priorities sit below every real-time priority by construction) and
+    are never analyzed, so they are left out of the arrays entirely and
+    only reappear as ``None`` entries in the result dicts.
+    """
+
+    S: int
+    N: int
+    valid: np.ndarray      # (S,N) bool: a real-time task occupies the slot
+    uses_gpu: np.ndarray   # (S,N) bool
+    C: np.ndarray          # (S,N) cumulative WCETs / per-task constants
+    G: np.ndarray
+    Gm: np.ndarray
+    Ge: np.ndarray
+    C_best: np.ndarray
+    Ge_best: np.ndarray
+    eta_g: np.ndarray      # (S,N) float (exact small ints)
+    T: np.ndarray          # (S,N) period, pad 1.0
+    D: np.ndarray          # (S,N) deadline, pad +inf
+    prio: np.ndarray       # (S,N) CPU priority, pad -inf
+    gpu_prio: np.ndarray   # (S,N) GPU priority, pad -inf
+    cpu: np.ndarray        # (S,N) int, pad -1
+    eps: np.ndarray        # (S,) per-taskset epsilon
+    kcpu: np.ndarray       # (S,) kernel-thread core
+    cseg: np.ndarray       # (S,N,Kc) best-case CPU segments, pad 0
+    cseg_m: np.ndarray     # (S,N,Kc) bool
+    gseg: np.ndarray       # (S,N,Kg) best-case pure-GPU segments, pad 0
+    gseg_m: np.ndarray     # (S,N,Kg) bool
+    names: List[List[str]]
+    be_names: List[List[str]]
+    # memo for priority-independent overlap matrices ("ogc", "ocg_cpu",
+    # "ocg_full", "ocg_gpu0") — they are reused across the RM solve, the
+    # Audsley floor solve and the closing full tests
+    cache: Dict[str, np.ndarray] = dataclasses.field(default_factory=dict)
+
+    def take(self, rows: Sequence[int]) -> "_Pack":
+        """Row-subset copy (cached overlaps slice right along) — used by
+        the Audsley lockstep to batch only the rejected tasksets."""
+        r = np.asarray(rows)
+        kw = {}
+        for f in dataclasses.fields(self):
+            v = getattr(self, f.name)
+            if isinstance(v, np.ndarray):
+                kw[f.name] = v[r]
+            elif isinstance(v, list):
+                kw[f.name] = [v[i] for i in rows]
+            elif isinstance(v, dict):
+                kw[f.name] = {k: a[r] for k, a in v.items()}
+            else:
+                kw[f.name] = v
+        kw["S"] = len(rows)
+        return _Pack(**kw)
+
+
+def _pack(tasksets: Sequence[Taskset]) -> _Pack:
+    for ts in tasksets:
+        if ts.n_devices > 1:
+            raise ValueError(
+                "_pack expects single-device problems; multi-device "
+                "tasksets are composed by batch_rta")
+    rts = [ts.rt_tasks for ts in tasksets]
+    S = len(tasksets)
+    N = max([1] + [len(r) for r in rts])
+    Kc = max([1] + [t.eta_c for r in rts for t in r])
+    Kg = max([1] + [t.eta_g for r in rts for t in r])
+
+    def z(*shape):
+        return np.zeros(shape, dtype=np.float64)
+
+    p = _Pack(
+        S=S, N=N,
+        valid=np.zeros((S, N), dtype=bool),
+        uses_gpu=np.zeros((S, N), dtype=bool),
+        C=z(S, N), G=z(S, N), Gm=z(S, N), Ge=z(S, N),
+        C_best=z(S, N), Ge_best=z(S, N), eta_g=z(S, N),
+        T=np.ones((S, N)), D=np.full((S, N), np.inf),
+        prio=np.full((S, N), -np.inf), gpu_prio=np.full((S, N), -np.inf),
+        cpu=np.full((S, N), -1, dtype=np.int64),
+        eps=z(S), kcpu=z(S),
+        cseg=z(S, N, Kc), cseg_m=np.zeros((S, N, Kc), dtype=bool),
+        gseg=z(S, N, Kg), gseg_m=np.zeros((S, N, Kg), dtype=bool),
+        names=[], be_names=[],
+    )
+    for s, ts in enumerate(tasksets):
+        p.eps[s] = ts.epsilon
+        p.kcpu[s] = ts.kthread_cpu
+        p.names.append([t.name for t in rts[s]])
+        p.be_names.append([t.name for t in ts.tasks if not t.is_rt])
+        for j, t in enumerate(rts[s]):
+            p.valid[s, j] = True
+            p.uses_gpu[s, j] = t.uses_gpu
+            p.C[s, j] = t.C
+            p.G[s, j] = t.G
+            p.Gm[s, j] = t.Gm
+            p.Ge[s, j] = t.Ge
+            p.C_best[s, j] = t.C_best
+            p.Ge_best[s, j] = t.Ge_best
+            p.eta_g[s, j] = t.eta_g
+            p.T[s, j] = t.period
+            p.D[s, j] = t.deadline
+            p.prio[s, j] = t.priority
+            p.gpu_prio[s, j] = t.gpu_priority
+            p.cpu[s, j] = t.cpu
+            nc = t.eta_c
+            p.cseg[s, j, :nc] = t.cpu_segments_best
+            p.cseg_m[s, j, :nc] = True
+            ng = t.eta_g
+            if ng:
+                p.gseg[s, j, :ng] = [g.exec_best for g in t.gpu_segments]
+                p.gseg_m[s, j, :ng] = True
+    return p
+
+
+# --------------------------------------------------------------------------
+# vectorized primitives (exact twins of the scalar helpers)
+# --------------------------------------------------------------------------
+
+def _ceil_pos(x: np.ndarray, T: np.ndarray) -> np.ndarray:
+    """Vector twin of analysis.ceil_pos / overlap._ceil.  All call sites
+    pass x >= 0 (iterates and jitters are non-negative), where clamping
+    the ceiling at zero is exactly the scalar x <= 0 guard."""
+    return np.maximum(np.ceil(x / T - _EPS), 0.0)
+
+
+def _floor_pos(x: np.ndarray, T: np.ndarray) -> np.ndarray:
+    """Vector twin of overlap._floor (x >= 0 at every call site)."""
+    return np.maximum(np.floor(x / T + _EPS), 0.0)
+
+
+def _bx_lfp(init: np.ndarray, w: np.ndarray, T: np.ndarray,
+            live0: np.ndarray) -> np.ndarray:
+    """Smallest fixed point of BX = init + sum_h max(ceil(BX/T_h)-1, 0)*w_h
+    per element, ascending from ``init`` — the vector twin of
+    overlap._best_fixed_point (including its return-previous-iterate
+    convergence convention and 4096-step cap)."""
+    bx = np.where(live0, init, 0.0)
+    live = live0.copy()
+    for _ in range(4096):
+        if not live.any():
+            break
+        n = np.maximum(_ceil_pos(bx[..., None], T) - 1.0, 0.0)
+        nxt = init + (n * w).sum(axis=-1)
+        step = live & (nxt > bx + _EPS)
+        bx = np.where(step, nxt, bx)
+        live = step
+    return bx
+
+
+def _masks(p: _Pack, gpu_prio: np.ndarray):
+    """hp / hpp / hp-by-GPU pair masks, [s, i, h]."""
+    pv = p.valid[:, :, None] & p.valid[:, None, :]
+    HP = pv & (p.prio[:, None, :] > p.prio[:, :, None])
+    HPP = HP & (p.cpu[:, None, :] == p.cpu[:, :, None])
+    HPg = pv & (gpu_prio[:, None, :] > gpu_prio[:, :, None])
+    return HP, HPP, HPg
+
+
+def _overlaps(p: _Pack, use_gpu_prio: bool, HP, HPP, HPg,
+              floor_mode: bool, gpu_prio_default: bool
+              ) -> Tuple[np.ndarray, np.ndarray]:
+    """O^cg / O^gc matrices (S,N,N) — Eqs. (5)-(9) via the vectorized
+    best-case segment fixed points.  ``floor_mode`` switches the O^cg
+    interference set to the all-GPU-tasks superset (overlap.full_hp).
+    O^gc never depends on GPU priorities and O^cg only through its hp
+    set, so everything except the O^cg of an overridden assignment is
+    memoized on the pack."""
+    T4 = p.T[:, None, None, :]
+
+    # BX^g_{i,j} then O^cg_{i,h} = sum_j max(floor(BX/T_h)-1, 0) * C_best_h
+    if floor_mode:
+        key = "ocg_full"
+    elif not use_gpu_prio:
+        key = "ocg_cpu"
+    elif gpu_prio_default:
+        key = "ocg_gpu0"
+    else:
+        key = None  # overridden assignment (Audsley full test)
+    Ocg = p.cache.get(key) if key else None
+    if Ocg is None:
+        ug_h = p.uses_gpu[:, None, :]
+        if floor_mode:
+            eye = np.eye(p.N, dtype=bool)[None]
+            mgpu = p.valid[:, :, None] & p.valid[:, None, :] & ug_h & ~eye
+        else:
+            mgpu = (HPg if use_gpu_prio else HP) & ug_h
+        w_g = np.where(mgpu, p.Ge_best[:, None, :], 0.0)[:, :, None, :]
+        live_g = p.gseg_m & p.valid[:, :, None]
+        bxg = _bx_lfp(p.gseg, w_g, T4, live_g)
+        fl = np.maximum(_floor_pos(bxg[..., None], T4) - 1.0, 0.0)
+        fl = np.where(live_g[..., None], fl, 0.0)
+        Ocg = (fl * p.C_best[:, None, None, :]).sum(axis=2)
+        if key:
+            p.cache[key] = Ocg
+
+    # BX^c_{i,j} (hpp interference) then O^gc_{i,h}
+    Ogc = p.cache.get("ogc")
+    if Ogc is None:
+        w_c = np.where(HPP, p.C_best[:, None, :], 0.0)[:, :, None, :]
+        live_c = p.cseg_m & p.valid[:, :, None]
+        bxc = _bx_lfp(p.cseg, w_c, T4, live_c)
+        flc = np.maximum(_floor_pos(bxc[..., None], T4) - 1.0, 0.0)
+        flc = np.where(live_c[..., None], flc, 0.0)
+        Ogc = (flc * p.Ge_best[:, None, None, :]).sum(axis=2)
+        p.cache["ogc"] = Ogc
+    return Ocg, Ogc
+
+
+# --------------------------------------------------------------------------
+# recurrence term groups
+# --------------------------------------------------------------------------
+#
+# Every analysis is expressed as
+#     R_i = const_i + sum_groups sum_h [ ceil((R_i + J_h)/T_h) * W_ih ]_O
+# where each group carries per-pair weights W (zero = inactive pair), a
+# jitter kind (None / "job" / "gpu" / "cpu"), and an optional per-pair
+# overlap deduction O with the term clamped at >= 0 (Lemmas 6/7).
+
+def _build2d(p: _Pack, kind: str, use_gpu_prio: bool, corrected: bool,
+             gpu_prio: Optional[np.ndarray] = None,
+             floor_mode: bool = False):
+    if kind not in KINDS:
+        raise ValueError(f"unknown batch RTA kind {kind!r}")
+    gpu_prio_default = gpu_prio is None
+    if gpu_prio is None:
+        gpu_prio = p.gpu_prio
+    HP, HPP, HPg = _masks(p, gpu_prio)
+    ug_h = p.uses_gpu[:, None, :]
+    ug_i = p.uses_gpu[:, :, None]
+    eps1 = p.eps[:, None]
+    epsh = p.eps[:, None, None]
+    Ch = p.C[:, None, :]
+    Gh = p.G[:, None, :]
+    remote = (HPg if use_gpu_prio else HP) & ug_h & ~HPP
+    if floor_mode:
+        remote = np.zeros_like(remote)
+
+    if kind == "kthread_busy":
+        # Lemma 2 with the Lemma 1 K_i term folded in: x_i*2eps goes into
+        # the constant, the per-GPU-hp 2eps updates form a "job"-jitter
+        # group gated by x_i.
+        x = p.uses_gpu | (p.cpu == p.kcpu[:, None].astype(np.int64))
+        if corrected:
+            x = x | (HPP & ug_h).any(axis=-1)
+        x = x & p.valid
+        const = p.C + p.G + np.where(x, 2.0 * eps1, 0.0)
+        kmask = (HPg if use_gpu_prio else HP) & ug_h
+        if floor_mode:
+            kmask = np.zeros_like(kmask)
+        groups = [
+            (np.where(kmask & x[:, :, None], 2.0 * epsh, 0.0), "job", None),
+            (np.where(HPP, Ch + Gh, 0.0), None, None),
+            (np.where(remote, Ch + Gh, 0.0), "job", None),
+        ]
+        return const, groups
+
+    gstar = p.G + 2.0 * eps1 * p.eta_g
+    const = p.C + gstar + (p.eta_g + 1.0) * eps1
+    gstar_h = gstar[:, None, :]
+    gestar_h = (p.Ge + 2.0 * eps1 * p.eta_g)[:, None, :]
+    gmstar_h = (p.Gm + 2.0 * eps1 * p.eta_g)[:, None, :]
+    HPPc = HPP & ~ug_h
+    HPPg = HPP & ug_h
+    improved = kind in _IMPROVED
+    Ocg = Ogc = None
+    if improved:
+        Ocg, Ogc = _overlaps(p, use_gpu_prio, HP, HPP, HPg, floor_mode,
+                             gpu_prio_default)
+
+    if kind in ("ioctl_busy", "ioctl_busy_improved"):
+        stretch = (p.eta_g[:, None, :] + 1.0) * epsh if corrected else 0.0
+        groups = [
+            (np.where(HPPc, Ch, 0.0), None, Ocg),
+            (np.where(HPPg, Ch + gstar_h + stretch, 0.0), None,
+             Ocg + Ogc if improved else None),
+            (np.where(remote, gestar_h, 0.0), "gpu", Ogc),
+        ]
+    else:  # ioctl_suspend / ioctl_suspend_improved (Lemmas 4 / 7)
+        groups = [
+            (np.where(HPPc, Ch, 0.0), None, Ocg),
+            (np.where(HPPg, Ch + gmstar_h, 0.0), "cpu", Ocg),
+            (np.where(HPPg & ug_i, p.Ge[:, None, :], 0.0), "gpu", Ogc),
+            (np.where(remote & ug_i, gestar_h, 0.0), "gpu", Ogc),
+        ]
+    return const, groups
+
+
+# --------------------------------------------------------------------------
+# the lockstep fixed point
+# --------------------------------------------------------------------------
+
+def _solve2d(p: _Pack, const: np.ndarray, groups, use_gpu_prio: bool,
+             analyzed: np.ndarray, seeds: Optional[np.ndarray] = None,
+             max_rounds: Optional[int] = None) -> np.ndarray:
+    """Masked Jacobi ascent of all ``analyzed`` elements; returns (S,N)
+    bounds with ``inf`` for diverged elements.  With R-dependent jitters
+    (``use_gpu_prio=False``) every valid element must be analyzed — the
+    interferers' iterates feed the jitters.
+
+    Rows whose every element has stabilized are compacted out of the
+    working set (tasksets converge at very different speeds, so the tail
+    of the ascent runs on a small fraction of the batch), and each
+    round computes one ceiling per *jitter kind* shared by all groups
+    using it."""
+    if not use_gpu_prio:
+        assert bool((analyzed == p.valid).all()), \
+            "R-dependent jitters need the full task vector"
+    if max_rounds is None:
+        # lockstep propagates one priority level per round, so a chain of
+        # N tasks may legitimately need up to the *sum* of the per-task
+        # iteration budgets; the scalar budget is MAX_ITERS per task.
+        # (Unreachable in practice: the ascent moves on a finite ceil
+        # lattice, which also bounds the scalar path.)
+        max_rounds = MAX_ITERS * max(p.N, 1)
+    S = const.shape[0]
+    offs = {"job": p.C + p.G, "gpu": p.Ge, "cpu": p.C + p.Gm}
+    used = sorted({jit for _, jit, _ in groups if jit is not None})
+    valid = p.valid
+    T_h = p.T[:, :, None].transpose(0, 2, 1)  # (S,1,N) view of periods
+    D = p.D
+    R = np.zeros_like(const)
+    if seeds is not None:
+        R = np.where(analyzed, seeds, 0.0)
+    act = analyzed & np.isfinite(R)
+    R_out = np.where(analyzed & ~act, np.inf, R)  # inf seed: diverged
+    rows = np.arange(S)  # original row index of each working row
+    R = R_out.copy()
+    offs = {k: offs[k] for k in used}
+    J_const = None
+    if use_gpu_prio:
+        base = np.where(valid, np.where(np.isinf(D), 0.0, D), 0.0)
+        J_const = {k: np.maximum(base - offs[k], 0.0) for k in used}
+    converged = False
+    for _ in range(max_rounds):
+        live = act.any(axis=1)
+        n_live = int(np.count_nonzero(live))
+        if n_live == 0:
+            converged = True
+            break
+        if n_live * 2 <= len(rows):  # compact: drop stabilized rows
+            R_out[rows] = R
+            rows = rows[live]
+            R, act, const, D, T_h, valid = (
+                R[live], act[live], const[live], D[live], T_h[live],
+                valid[live])
+            groups = [(W[live], jit, None if O is None else O[live])
+                      for W, jit, O in groups]
+            offs = {k: v[live] for k, v in offs.items()}
+            if J_const is not None:
+                J_const = {k: v[live] for k, v in J_const.items()}
+        if use_gpu_prio:
+            J = J_const
+        else:
+            base = np.where(valid, np.where(np.isinf(R), D, R), 0.0)
+            J = {k: np.maximum(base - offs[k], 0.0) for k in used}
+        Rsafe = np.where(np.isfinite(R), R, 0.0)
+        Ri = Rsafe[:, :, None]
+        n_jit = {k: _ceil_pos(Ri + J[k][:, None, :], T_h) for k in used}
+        n_none = _ceil_pos(Ri, T_h)
+        total = const.copy()
+        for W, jit, O in groups:
+            term = (n_none if jit is None else n_jit[jit]) * W
+            if O is not None:
+                term = np.maximum(term - O, 0.0)
+            total += term.sum(axis=-1)
+        Rnew = np.where(act, total, R)
+        newinf = act & (Rnew > D + _EPS)
+        # frozen rows hold inf on both sides; mask before the diff
+        delta = np.abs(np.where(act, Rnew, 0.0) - np.where(act, R, 0.0))
+        moved = act & ~newinf & (delta >= _EPS)
+        R = np.where(newinf, np.inf, Rnew)
+        # a row (taskset) with no movement and no fresh divergence is at
+        # its joint fixed point — rows are independent problems, so
+        # retire the whole row (individual elements cannot be frozen
+        # under R-dependent jitters: an interferer's base may still grow)
+        quiet = ~(moved | newinf).any(axis=1)
+        act = act & ~newinf & ~quiet[:, None]
+        if not act.any():
+            converged = True
+            break
+    if not converged:
+        # round cap without stabilization: conservative, like _iterate's
+        # MAX_ITERS exhaustion
+        R = np.where(act, np.inf, R)
+    R_out[rows] = R
+    return R_out
+
+
+def _unpack_dicts(p: _Pack, R: np.ndarray) -> List[Dict[str, Optional[float]]]:
+    out: List[Dict[str, Optional[float]]] = []
+    for s in range(p.S):
+        d: Dict[str, Optional[float]] = {}
+        for j, name in enumerate(p.names[s]):
+            d[name] = float(R[s, j])
+        for name in p.be_names[s]:
+            d[name] = None
+        out.append(d)
+    return out
+
+
+def _solve_problems(problems: Sequence[Taskset], kind: str,
+                    use_gpu_prio: bool, corrected: bool
+                    ) -> List[Dict[str, Optional[float]]]:
+    """Batched full-vector solve of single-device problems."""
+    p = _pack(problems)
+    const, groups = _build2d(p, kind, use_gpu_prio, corrected)
+    R = _solve2d(p, const, groups, use_gpu_prio, analyzed=p.valid)
+    return _unpack_dicts(p, R)
+
+
+# --------------------------------------------------------------------------
+# public entry points
+# --------------------------------------------------------------------------
+
+def batch_rta(kind: str, tasksets: Sequence[Taskset],
+              use_gpu_prio: bool = False, corrected: bool = True,
+              method: str = "fixed_point"
+              ) -> List[Dict[str, Optional[float]]]:
+    """Vectorized WCRT vectors for a batch of tasksets (any device
+    counts), value-equivalent to the scalar RTA of the same kind with
+    ``early_exit=False``."""
+    if kind not in KINDS:
+        raise ValueError(f"unknown batch RTA kind {kind!r}")
+    if method not in ("fixed_point", "heuristic"):
+        raise ValueError(f"unknown multi-device method {method!r}")
+    if method == "heuristic" and kind in SUSPEND_KINDS:
+        raise ValueError("method='heuristic' applies to busy-mode kinds")
+    tasksets = list(tasksets)
+    out: List[Optional[Dict[str, Optional[float]]]] = [None] * len(tasksets)
+    simple: List[Tuple[int, Taskset]] = []
+    folded: List[Tuple[int, int, Taskset]] = []
+    cross: List[int] = []
+    for i, ts in enumerate(tasksets):
+        if ts.n_devices <= 1:
+            simple.append((i, ts))
+        elif kind in SUSPEND_KINDS or method == "heuristic":
+            for d in range(ts.n_devices):
+                folded.append((i, d, fold_to_device(ts, d)))
+        else:
+            cross.append(i)
+    if method == "heuristic" and any(
+            ts.n_devices > 1 for ts in tasksets):
+        warnings.warn(
+            "constant-charge per-device projection under busy-waiting is "
+            "a heuristic, not a sound bound (cross-device busy-wait "
+            "coupling); use the default method='fixed_point'",
+            SoundnessWarning, stacklevel=2)
+    probs = [ts for _, ts in simple] + [f for _, _, f in folded]
+    if probs:
+        dicts = _solve_problems(probs, kind, use_gpu_prio, corrected)
+        for (i, _), d in zip(simple, dicts[:len(simple)]):
+            out[i] = d
+        for (i, dev, _), Rd in zip(folded, dicts[len(simple):]):
+            if out[i] is None:
+                out[i] = {}
+            own_dev = {t.name: t.device
+                       for t in tasksets[i].tasks if t.uses_gpu}
+            merge_device_bounds(out[i], Rd, own_dev, dev)
+    if cross:
+        for i, d in zip(cross, _crossfix_lockstep(
+                kind, [tasksets[i] for i in cross], use_gpu_prio,
+                corrected)):
+            out[i] = d
+    return out  # type: ignore[return-value]
+
+
+def _crossfix_lockstep(kind: str, tasksets: List[Taskset],
+                       use_gpu_prio: bool, corrected: bool
+                       ) -> List[Dict[str, Optional[float]]]:
+    """The `core/crossfix.py` outer occupancy iteration, run in lockstep
+    across a batch of multi-device busy-mode tasksets: each outer round
+    batches *every* still-active taskset's per-device projections into
+    one inner array fixed point.  Per-taskset trajectories are identical
+    to ``cross_fixed_point(..., early_exit=False)`` — the occupancy step
+    is the shared ``occupancy_vector`` and tasksets iterate
+    independently."""
+    from .crossfix import MAX_OUTER, occupancy_vector, uncontended_occupancy
+    occ_kind = _OCC_KIND[kind]
+    n = len(tasksets)
+    occ = [{h.name: uncontended_occupancy(h, ts.epsilon)
+            for h in ts.tasks if h.uses_gpu} for ts in tasksets]
+    R: List[Dict[str, Optional[float]]] = [{} for _ in range(n)]
+
+    def project(idxs: List[int]) -> None:
+        probs, owner = [], []
+        for i in idxs:
+            for d in range(tasksets[i].n_devices):
+                probs.append(fold_to_device(tasksets[i], d,
+                                            occupancy=occ[i]))
+                owner.append((i, d))
+        dicts = _solve_problems(probs, kind, use_gpu_prio, corrected)
+        for i in idxs:
+            R[i] = {}
+        for (i, d), Rd in zip(owner, dicts):
+            own_dev = {t.name: t.device
+                       for t in tasksets[i].tasks if t.uses_gpu}
+            merge_device_bounds(R[i], Rd, own_dev, d)
+
+    active = list(range(n))
+    project(active)
+    for _ in range(MAX_OUTER - 1):
+        if not active:
+            break
+        still = []
+        for i in active:
+            occ_new = occupancy_vector(tasksets[i], R[i], occ_kind,
+                                       use_gpu_prio)
+            if all(abs(occ_new[k] - occ[i][k]) < _EPS for k in occ[i]):
+                continue  # converged: R[i] is the joint bound
+            occ[i] = occ_new
+            still.append(i)
+        active = still
+        if active:
+            project(active)
+    for i in active:  # outer cap hit: conservative divergence
+        rt = {t.name for t in tasksets[i].rt_tasks}
+        R[i] = {k: (math.inf if k in rt else v) for k, v in R[i].items()}
+    return R
+
+
+def batch_schedulable(kind: str, tasksets: Sequence[Taskset],
+                      use_gpu_prio: bool = False, corrected: bool = True,
+                      method: str = "fixed_point") -> List[bool]:
+    """Decision twin of ``analysis.schedulable`` over a batch."""
+    tasksets = list(tasksets)
+    dicts = batch_rta(kind, tasksets, use_gpu_prio=use_gpu_prio,
+                      corrected=corrected, method=method)
+    out = []
+    for ts, R in zip(tasksets, dicts):
+        ok = True
+        for t in ts.rt_tasks:
+            r = R.get(t.name, math.inf)
+            if r is None or math.isinf(r) or r > t.deadline + _EPS:
+                ok = False
+                break
+        out.append(ok)
+    return out
+
+
+# --------------------------------------------------------------------------
+# lockstep Audsley assignment
+# --------------------------------------------------------------------------
+
+def _build_rows(p: _Pack, rows: np.ndarray, cands: np.ndarray,
+                kind: str, corrected: bool, gp_rows: np.ndarray):
+    """Single-task recurrences (GPU-priority jitters) for one candidate
+    column per row — the Audsley candidate test collapsed to (M, N)
+    arrays over the interferer axis only.  (Floor recurrences go through
+    ``_build2d(floor_mode=True)``; there is deliberately no second
+    floor-construction here.)
+
+    KEEP IN SYNC with ``_build2d``: this is a deliberate perf
+    specialization of the same Lemma 2/3/4/6/7 term tables (rebuilding
+    the (S,N,N) matrices every Audsley round would dominate the
+    search); any recurrence change must land in both builders — the
+    differential suite's pipeline tests exercise this path for every
+    kind."""
+    m = np.arange(len(rows))
+    V = p.valid[rows]
+    prio = p.prio[rows]
+    cpu = p.cpu[rows]
+    ug = p.uses_gpu[rows]
+    T = p.T[rows]
+    eps = p.eps[rows]
+    C = p.C[rows]
+    G = p.G[rows]
+    Gm = p.Gm[rows]
+    Ge = p.Ge[rows]
+    C_best = p.C_best[rows]
+    Ge_best = p.Ge_best[rows]
+    eta_g = p.eta_g[rows]
+    kcpu = p.kcpu[rows]
+
+    prio_i = prio[m, cands][:, None]
+    cpu_i = cpu[m, cands][:, None]
+    gp_i = gp_rows[m, cands][:, None]
+    ug_i = ug[m, cands]
+    HPP = V & (cpu == cpu_i) & (prio > prio_i)
+    HPg = V & (gp_rows > gp_i)
+    remote = HPg & ug & ~HPP
+
+    D_i = p.D[rows][m, cands]
+    eps_i = eps
+    C_i = C[m, cands]
+    G_i = G[m, cands]
+    eta_i = eta_g[m, cands]
+
+    if kind == "kthread_busy":
+        x = ug_i | (cpu_i[:, 0] == kcpu.astype(np.int64))
+        if corrected:
+            x = x | (HPP & ug).any(axis=-1)
+        const = C_i + G_i + np.where(x, 2.0 * eps_i, 0.0)
+        kmask = HPg & ug
+        groups = [
+            (np.where(kmask & x[:, None], 2.0 * eps[:, None], 0.0),
+             "job", None),
+            (np.where(HPP, C + G, 0.0), None, None),
+            (np.where(remote, C + G, 0.0), "job", None),
+        ]
+        return const, groups, T, D_i
+
+    gstar_i = G_i + 2.0 * eps_i * eta_i
+    const = C_i + gstar_i + (eta_i + 1.0) * eps_i
+    gstar_h = G + 2.0 * eps[:, None] * eta_g
+    gestar_h = Ge + 2.0 * eps[:, None] * eta_g
+    gmstar_h = Gm + 2.0 * eps[:, None] * eta_g
+    HPPc = HPP & ~ug
+    HPPg = HPP & ug
+    improved = kind in _IMPROVED
+    Ocg = Ogc = None
+    if improved:
+        T3 = T[:, None, :]
+        mgpu = HPg & ug
+        w_g = np.where(mgpu, Ge_best, 0.0)[:, None, :]
+        live_g = p.gseg_m[rows][m, cands]
+        bxg = _bx_lfp(p.gseg[rows][m, cands], w_g, T3, live_g)
+        fl = np.maximum(_floor_pos(bxg[..., None], T3) - 1.0, 0.0)
+        fl = np.where(live_g[..., None], fl, 0.0)
+        Ocg = (fl * C_best[:, None, :]).sum(axis=1)
+        w_c = np.where(HPP, C_best, 0.0)[:, None, :]
+        live_c = p.cseg_m[rows][m, cands]
+        bxc = _bx_lfp(p.cseg[rows][m, cands], w_c, T3, live_c)
+        flc = np.maximum(_floor_pos(bxc[..., None], T3) - 1.0, 0.0)
+        flc = np.where(live_c[..., None], flc, 0.0)
+        Ogc = (flc * Ge_best[:, None, :]).sum(axis=1)
+
+    if kind in ("ioctl_busy", "ioctl_busy_improved"):
+        stretch = (eta_g + 1.0) * eps[:, None] if corrected else 0.0
+        groups = [
+            (np.where(HPPc, C, 0.0), None, Ocg),
+            (np.where(HPPg, C + gstar_h + stretch, 0.0), None,
+             Ocg + Ogc if improved else None),
+            (np.where(remote, gestar_h, 0.0), "gpu", Ogc),
+        ]
+    else:
+        ug_col = ug_i[:, None]
+        groups = [
+            (np.where(HPPc, C, 0.0), None, Ocg),
+            (np.where(HPPg, C + gmstar_h, 0.0), "cpu", Ocg),
+            (np.where(HPPg & ug_col, Ge, 0.0), "gpu", Ogc),
+            (np.where(remote & ug_col, gestar_h, 0.0), "gpu", Ogc),
+        ]
+    return const, groups, T, D_i
+
+
+def _solve_rows(p: _Pack, rows: np.ndarray, const, groups, T, D_i,
+                seeds: Optional[np.ndarray] = None) -> np.ndarray:
+    """(M,)-vector fixed point for the single-task recurrences of
+    ``_build_rows`` (deadline jitters — elements are independent)."""
+    V = p.valid[rows]
+    D_h = np.where(V, np.where(np.isinf(p.D[rows]), 0.0, p.D[rows]), 0.0)
+    offs = {"job": p.C[rows] + p.G[rows], "gpu": p.Ge[rows],
+            "cpu": p.C[rows] + p.Gm[rows]}
+    used = {jit for _, jit, _ in groups if jit is not None}
+    J = {k: np.maximum(D_h - offs[k], 0.0) for k in used}
+    R = np.zeros_like(const)
+    if seeds is not None:
+        R = seeds.copy()
+    act = np.isfinite(R)
+    R = np.where(act, R, np.inf)
+    for _ in range(MAX_ITERS + 1):
+        if not act.any():
+            break
+        Rsafe = np.where(np.isfinite(R), R, 0.0)
+        total = const.copy()
+        for W, jit, O in groups:
+            X = Rsafe[:, None] + (J[jit] if jit is not None else 0.0)
+            term = _ceil_pos(X, T) * W
+            if O is not None:
+                term = np.maximum(term - O, 0.0)
+            total += term.sum(axis=-1)
+        Rnew = np.where(act, total, R)
+        newinf = act & (Rnew > D_i + _EPS)
+        delta = np.abs(np.where(act, Rnew, 0.0) - np.where(act, R, 0.0))
+        moved = act & ~newinf & (delta >= _EPS)
+        R = np.where(newinf, np.inf, Rnew)
+        act = act & ~newinf & moved
+    else:
+        R = np.where(act, np.inf, R)
+    return R
+
+
+class _AudState:
+    """Per-taskset Audsley progress for the lockstep search (decision
+    flow identical to audsley.assign_gpu_priorities)."""
+
+    def __init__(self, s: int, p: _Pack):
+        self.s = s
+        self.result: Optional[bool] = None
+        self.need_full = False
+        self.trial: Optional[int] = None
+        self.old_gp = 0.0
+        self.placedR: Dict[int, float] = {}
+        prio = p.prio[s]
+        gpu_cols = [j for j in range(p.N)
+                    if p.valid[s, j] and p.uses_gpu[s, j]]
+        if not gpu_cols:
+            self.result = False  # scalar: no GPU tasks -> None -> reject
+            return
+        self.levels = sorted(float(prio[j]) for j in gpu_cols)
+        self.top = max(self.levels) + 1.0
+        self.gp = p.gpu_prio[s].copy()
+        for j in gpu_cols:
+            self.gp[j] = self.top + prio[j]  # provisional: above all levels
+        self.unassigned = set(gpu_cols)
+        self.level_idx = 0
+        self.queue = self._eligible(p)
+
+    def _eligible(self, p: _Pack) -> List[int]:
+        """Lowest-CPU-priority unassigned GPU task per core, by priority."""
+        prio = p.prio[self.s]
+        cpu = p.cpu[self.s]
+        lowest: Dict[int, int] = {}
+        for j in sorted(self.unassigned, key=lambda j: prio[j]):
+            lowest.setdefault(int(cpu[j]), j)
+        return sorted(lowest.values(), key=lambda j: prio[j])
+
+
+def _audsley_lockstep(kind: str, p: _Pack, corrected: bool) -> List[bool]:
+    """Audsley GPU-priority assignment for a pack of single-device
+    tasksets, with every active taskset's current candidate test batched
+    into one vector fixed point per round, floor-seeded (DESIGN.md §5).
+    The closing full-set tests are independent of the level search, so
+    they are deferred and run as one batched solve at the end."""
+    states = [_AudState(s, p) for s in range(p.S)]
+
+    # Floor bounds: one vectorized pre-solve of every candidate's
+    # empty-remote / overlap-superset recurrence (use_gpu_prio jitters).
+    # Valid seed at every level; an inf floor proves the candidate can
+    # never pass (its tests are skipped, like the scalar warm start).
+    cand_mask = p.valid & p.uses_gpu
+    const, groups = _build2d(p, kind, True, corrected, floor_mode=True)
+    floor = _solve2d(p, const, groups, True, analyzed=cand_mask)
+
+    while True:
+        trials: List[_AudState] = []
+        for st in states:
+            if st.result is not None or st.need_full:
+                continue
+            while st.result is None and st.trial is None:
+                if not st.queue:
+                    st.result = False
+                    break
+                cand = st.queue[0]
+                if math.isinf(floor[st.s, cand]):
+                    st.queue.pop(0)  # cannot pass at any level
+                    continue
+                st.trial = cand
+                st.old_gp = st.gp[cand]
+                st.gp[cand] = st.levels[st.level_idx]
+            if st.trial is not None:
+                trials.append(st)
+        if not trials:
+            break
+        rows = np.array([st.s for st in trials])
+        cands = np.array([st.trial for st in trials])
+        gp_rows = np.stack([st.gp for st in trials])
+        seeds = floor[rows, cands]
+        cg = _build_rows(p, rows, cands, kind, corrected, gp_rows)
+        R = _solve_rows(p, rows, *cg, seeds=seeds)
+        for st, r in zip(trials, R):
+            cand = st.trial
+            st.trial = None
+            if math.isfinite(r):
+                st.placedR[cand] = float(r)
+                st.unassigned.remove(cand)
+                st.level_idx += 1
+                if st.level_idx >= len(st.levels):
+                    st.need_full = True
+                else:
+                    st.queue = st._eligible(p)
+            else:
+                st.gp[cand] = st.old_gp
+                st.queue.pop(0)
+                if not st.queue:
+                    st.result = False
+
+    full = [st for st in states if st.need_full]
+    if full:
+        sub = p.take([st.s for st in full])
+        gp = np.stack([st.gp for st in full])
+        seeds = np.zeros((len(full), p.N))
+        for k, st in enumerate(full):
+            for col, r in st.placedR.items():
+                seeds[k, col] = r  # placement bound == final bound
+        const, groups = _build2d(sub, kind, True, corrected, gpu_prio=gp)
+        R = _solve2d(sub, const, groups, True, analyzed=sub.valid,
+                     seeds=seeds)
+        for k, st in enumerate(full):
+            st.result = bool(np.isfinite(R[k][sub.valid[k]]).all())
+    return [bool(st.result) for st in states]
+
+
+def batch_schedulable_with_assignment(
+        kind: str, tasksets: Sequence[Taskset],
+        method: str = "fixed_point", corrected: bool = True) -> List[bool]:
+    """The Sec. VII-A evaluation pipeline over a batch: RM-priority test
+    first, Audsley GPU-priority retry for the rejected sets.  Single-
+    device retries run the lockstep Audsley; multi-device retries fall
+    back to the scalar search (the joint busy fixed point has no
+    per-candidate independence to batch over — core/audsley.py)."""
+    return batch_accept_many({"_": (kind, method)}, tasksets,
+                             corrected=corrected)["_"]
+
+
+def batch_accept_many(specs: Dict[str, Tuple[str, str]],
+                      tasksets: Sequence[Taskset],
+                      corrected: bool = True) -> Dict[str, List[bool]]:
+    """Run several named ``(kind, method)`` evaluation pipelines over one
+    batch, sharing the packed arrays across methods (the sweep driver's
+    entry point: packing is per-batch Python work, everything after is
+    array code)."""
+    tasksets = list(tasksets)
+    for name, (kind, method) in specs.items():
+        # eager, even when every taskset is single-device (where method
+        # is moot) — a typo'd spec must not first surface on a
+        # multi-GPU platform (same contract as the cross_device wrapper)
+        if kind not in KINDS:
+            raise ValueError(f"unknown batch RTA kind {kind!r}")
+        if method not in ("fixed_point", "heuristic"):
+            raise ValueError(f"unknown multi-device method {method!r}")
+        if method == "heuristic" and kind in SUSPEND_KINDS:
+            raise ValueError(
+                "method='heuristic' applies to busy-mode kinds")
+    single = [i for i, ts in enumerate(tasksets) if ts.n_devices <= 1]
+    multi = [i for i, ts in enumerate(tasksets) if ts.n_devices > 1]
+    pack = _pack([tasksets[i] for i in single]) if single else None
+    out: Dict[str, List[bool]] = {}
+    for name, (kind, method) in specs.items():
+        acc = [False] * len(tasksets)
+        if single:
+            const, groups = _build2d(pack, kind, False, corrected)
+            R = _solve2d(pack, const, groups, False, analyzed=pack.valid)
+            ok = np.isfinite(np.where(pack.valid, R, 0.0)).all(axis=1)
+            rej = [k for k in range(pack.S) if not ok[k]]
+            if rej:
+                res = _audsley_lockstep(kind, pack.take(rej), corrected)
+                for k, r in zip(rej, res):
+                    ok[k] = r
+            for k, i in enumerate(single):
+                acc[i] = bool(ok[k])
+        if multi:
+            # one batched RM test for the whole multi-device subset (the
+            # crossfix lockstep batches their projections); only the
+            # Audsley retries fall back to the scalar search
+            ok_multi = batch_schedulable(
+                kind, [tasksets[i] for i in multi], use_gpu_prio=False,
+                corrected=corrected, method=method)
+            rta = scalar_rta(kind, method)
+            for i, ok in zip(multi, ok_multi):
+                acc[i] = bool(ok) or (
+                    assign_gpu_priorities(tasksets[i], rta) is not None)
+        out[name] = acc
+    return out

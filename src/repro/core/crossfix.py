@@ -116,6 +116,33 @@ def busy_occupancy(
     return occ
 
 
+def occupancy_vector(
+    ts: Taskset,
+    R: Dict[str, Optional[float]],
+    occ_kind: str,
+    use_gpu_prio: bool = False,
+) -> Dict[str, float]:
+    """One occupancy step of the outer iteration: re-derive every GPU
+    task's busy-wait core occupancy from the current WCRT iterate ``R``.
+
+    Past-deadline iterates are capped at the deadline: the task already
+    reports ``inf``, and the cap keeps the other tasks' numbers
+    informative on the (rejected) set.  Module-level (rather than a
+    closure inside :func:`cross_fixed_point`) so the vectorized batch
+    backend (`core/batch.py`, DESIGN.md §5) can drive the same outer
+    loop in lockstep across a whole batch of tasksets with the inner
+    per-device bounds computed by its array fixed point.
+    """
+    occ: Dict[str, float] = {}
+    for h in ts.tasks:
+        if not h.uses_gpu:
+            continue
+        w = R.get(h.name)
+        w = h.deadline if w is None or math.isinf(w) else min(w, h.deadline)
+        occ[h.name] = busy_occupancy(ts, h, w, R, occ_kind, use_gpu_prio)
+    return occ
+
+
 def cross_fixed_point(
     ts: Taskset,
     base_rta: Callable[..., Dict[str, Optional[float]]],
@@ -147,7 +174,7 @@ def cross_fixed_point(
     non-converged iterate is not an upper bound; ``info`` carries
     ``unschedulable=True`` with both flags False.
     """
-    from .analysis import _worse_bound, fold_to_device
+    from .analysis import fold_to_device, merge_device_bounds
 
     gpu_tasks = [t for t in ts.tasks if t.uses_gpu]
     own = {t.name: t.device for t in gpu_tasks}
@@ -161,26 +188,8 @@ def cross_fixed_point(
                 use_gpu_prio=use_gpu_prio,
                 **inner_kw,
             )
-            for name, r in Rd.items():
-                if name in own:
-                    if own[name] == d:
-                        out[name] = r
-                elif name not in out or _worse_bound(r, out[name]):
-                    out[name] = r
+            merge_device_bounds(out, Rd, own, d)
         return out
-
-    def occupancies(R: Dict[str, Optional[float]]) -> Dict[str, float]:
-        occ: Dict[str, float] = {}
-        for h in gpu_tasks:
-            w = R.get(h.name)
-            # Past-deadline iterates are capped at the deadline: the task
-            # already reports inf, and the cap keeps the other tasks'
-            # numbers informative on the (rejected) set.
-            w = h.deadline if w is None or math.isinf(w) else min(
-                w, h.deadline
-            )
-            occ[h.name] = busy_occupancy(ts, h, w, R, occ_kind, use_gpu_prio)
-        return occ
 
     eps = ts.epsilon
     occ = {h.name: uncontended_occupancy(h, eps) for h in gpu_tasks}
@@ -203,7 +212,7 @@ def cross_fixed_point(
                 if n not in rt_names or r is None or math.isinf(r)
             }
             return R, info
-        occ_new = occupancies(R)
+        occ_new = occupancy_vector(ts, R, occ_kind, use_gpu_prio)
         if all(abs(occ_new[n] - occ[n]) < _EPS for n in occ):
             info["converged"] = True
             break

@@ -30,7 +30,9 @@ from .task_model import Task, Taskset
 def ioctl_busy_improved_rta(ts: Taskset, use_gpu_prio: bool = False,
                             corrected: bool = True,
                             early_exit: bool = False,
-                            only: Optional[str] = None
+                            only: Optional[str] = None,
+                            seeds: Optional[Dict[str, float]] = None,
+                            overlap_floor: bool = False
                             ) -> Dict[str, Optional[float]]:
     """Lemma 6: IOCTL busy-waiting WCRT with overlap deduction.
 
@@ -40,6 +42,12 @@ def ioctl_busy_improved_rta(ts: Taskset, use_gpu_prio: bool = False,
                                         - (O^cg_{i,h} + O^gc_{i,h}), 0)
         + sum_{h in hp\\hpp, eta_h^g>0}
               max(ceil((R_i+J_h^g)/T_h)*G_h^{e*} - O^gc_{i,h}, 0)
+
+    ``overlap_floor`` computes O^cg with the all-GPU-tasks interference
+    superset (``overlap_cg(..., full_hp=True)``), which can only enlarge
+    the deduction — it turns the recurrence into a pointwise lower bound
+    of the recurrence at *any* GPU-priority assignment.  Only the
+    warm-started Audsley seed (`core/audsley.py`) should set it.
     """
     eps = ts.epsilon
 
@@ -47,7 +55,8 @@ def ioctl_busy_improved_rta(ts: Taskset, use_gpu_prio: bool = False,
         hpp_cpu = [h for h in ts.hpp(ti) if not h.uses_gpu]
         hpp_gpu = [h for h in ts.hpp(ti) if h.uses_gpu]
         remote = _gpu_hp_remote(ts, ti, use_gpu_prio)
-        Ocg = {h.name: overlap_cg(ts, ti, h, use_gpu_prio)
+        Ocg = {h.name: overlap_cg(ts, ti, h, use_gpu_prio,
+                                  full_hp=overlap_floor)
                for h in hpp_cpu + hpp_gpu}
         Ogc = {h.name: overlap_gc(ts, ti, h) for h in hpp_gpu + remote}
 
@@ -68,18 +77,21 @@ def ioctl_busy_improved_rta(ts: Taskset, use_gpu_prio: bool = False,
         return f
 
     return _rta_loop(ts, make_f, early_exit=early_exit, only=only,
-                     r_independent=use_gpu_prio)
+                     r_independent=use_gpu_prio, seeds=seeds)
 
 
 @per_device
 def ioctl_suspend_improved_rta(ts: Taskset, use_gpu_prio: bool = False,
                                early_exit: bool = False,
-                               only: Optional[str] = None
+                               only: Optional[str] = None,
+                               seeds: Optional[Dict[str, float]] = None,
+                               overlap_floor: bool = False
                                ) -> Dict[str, Optional[float]]:
     """Lemma 7: IOCTL self-suspension WCRT with overlap deduction.
 
     Follows Lemma 4 term-by-term, deducting O^cg from CPU-side interference
-    and O^gc from GPU-side interference.
+    and O^gc from GPU-side interference.  ``overlap_floor`` as in
+    ``ioctl_busy_improved_rta`` (Audsley floor seed only).
     """
     eps = ts.epsilon
 
@@ -87,7 +99,8 @@ def ioctl_suspend_improved_rta(ts: Taskset, use_gpu_prio: bool = False,
         hpp_cpu = [h for h in ts.hpp(ti) if not h.uses_gpu]
         hpp_gpu = [h for h in ts.hpp(ti) if h.uses_gpu]
         remote = _gpu_hp_remote(ts, ti, use_gpu_prio)
-        Ocg = {h.name: overlap_cg(ts, ti, h, use_gpu_prio)
+        Ocg = {h.name: overlap_cg(ts, ti, h, use_gpu_prio,
+                                  full_hp=overlap_floor)
                for h in hpp_cpu + hpp_gpu}
         Ogc = {h.name: overlap_gc(ts, ti, h) for h in hpp_gpu + remote}
 
@@ -112,4 +125,8 @@ def ioctl_suspend_improved_rta(ts: Taskset, use_gpu_prio: bool = False,
         return f
 
     return _rta_loop(ts, make_f, early_exit=early_exit, only=only,
-                     r_independent=use_gpu_prio)
+                     r_independent=use_gpu_prio, seeds=seeds)
+
+
+ioctl_busy_improved_rta.batch_kind = "ioctl_busy_improved"
+ioctl_suspend_improved_rta.batch_kind = "ioctl_suspend_improved"

@@ -59,11 +59,21 @@ def _best_fixed_point(init: float, contrib) -> float:
     return bx  # conservative: larger BX only if non-convergent (bounded use)
 
 
-def bx_gpu_segment(ts: Taskset, ti: Task, j: int, use_gpu_prio: bool = False
-                   ) -> float:
-    """Eq. (6): best-case completion time BX^g_{i,j} of the j-th pure GPU seg."""
+def bx_gpu_segment(ts: Taskset, ti: Task, j: int, use_gpu_prio: bool = False,
+                   full_hp: bool = False) -> float:
+    """Eq. (6): best-case completion time BX^g_{i,j} of the j-th pure GPU seg.
+
+    ``full_hp`` replaces the priority-ordered interference set with *every*
+    GPU-using task (a superset of the set at any GPU-priority assignment).
+    A larger set can only raise BX, hence raise the overlap deduction and
+    lower the WCRT recurrence — the pessimistic-floor direction needed by
+    the warm-started Audsley seed (core/audsley.py, DESIGN.md §5).
+    """
     ge_best = ti.gpu_segments[j].exec_best
-    hps = [h for h in ts.hp(ti, by_gpu=use_gpu_prio) if h.uses_gpu]
+    if full_hp:
+        hps = [h for h in ts.tasks if h is not ti and h.uses_gpu]
+    else:
+        hps = [h for h in ts.hp(ti, by_gpu=use_gpu_prio) if h.uses_gpu]
 
     def contrib(bx: float) -> float:
         return sum((_ceil(bx, h.period) - 1) * h.Ge_best
@@ -84,15 +94,16 @@ def bx_cpu_segment(ts: Taskset, ti: Task, j: int) -> float:
     return _best_fixed_point(c_best, contrib)
 
 
-def overlap_cg(ts: Taskset, ti: Task, th: Task, use_gpu_prio: bool = False
-               ) -> float:
+def overlap_cg(ts: Taskset, ti: Task, th: Task, use_gpu_prio: bool = False,
+               full_hp: bool = False) -> float:
     """Eqs. (5)+(7): minimum CPU execution of tau_h fully overlapped with
-    tau_i's pure GPU segments, summed over all GPU segments of tau_i."""
+    tau_i's pure GPU segments, summed over all GPU segments of tau_i.
+    ``full_hp`` is the Audsley-floor superset (see ``bx_gpu_segment``)."""
     if th.C_best <= 0:
         return 0.0
     total = 0.0
     for j in range(ti.eta_g):
-        bx = bx_gpu_segment(ts, ti, j, use_gpu_prio)
+        bx = bx_gpu_segment(ts, ti, j, use_gpu_prio, full_hp=full_hp)
         total += max((_floor(bx, th.period) - 1) * th.C_best, 0.0)
     return total
 

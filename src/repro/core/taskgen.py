@@ -84,7 +84,13 @@ def generate_taskset(seed: int, p: GenParams = GenParams()) -> Taskset:
     n_be = round(p.best_effort_ratio * n)
     be_idx = set(rng.sample(range(n), min(n_be, n)))
 
-    tasks = []
+    # Sample every task's parameters first (the rng stream is the golden
+    # contract — construction order must not disturb it), assign Rate
+    # Monotonic priorities from the sampled periods, then construct each
+    # Task exactly once.  The historical construct-then-rebuild pass ran
+    # __post_init__ (tuple conversion + cached sums) twice per task and
+    # showed up in sweep profiles.
+    drafts = []
     n_gpu_seen = 0  # device assignment: GPU tasks round-robin over devices
     for i, (cpu, util) in enumerate(specs):
         period = rng.uniform(*p.period_ms)
@@ -114,30 +120,26 @@ def generate_taskset(seed: int, p: GenParams = GenParams()) -> Taskset:
             n_c = 1
             gsegs = []
         c_parts = _split(rng, C_total, n_c)
+        drafts.append((period, cpu, device, c_parts, gsegs))
+
+    # -- Rate Monotonic priorities, unique -----------------------------------
+    order = sorted(range(n), key=lambda k: (drafts[k][0], k))
+    prio = [0] * n
+    for rank, k in enumerate(order):
+        prio[k] = (n - rank) * 10  # larger = higher priority
+
+    tasks = []
+    for i, (period, cpu, device, c_parts, gsegs) in enumerate(drafts):
         tasks.append(Task(
             name=f"tau{i}",
             cpu_segments=c_parts,
             cpu_segments_best=[c * p.bcet_ratio for c in c_parts],
             gpu_segments=gsegs,
             period=period, deadline=period, cpu=cpu,
-            priority=0,  # assigned below (RM)
+            priority=prio[i],
             best_effort=(i in be_idx),
             device=device,
         ))
-
-    # -- Rate Monotonic priorities, unique -----------------------------------
-    order = sorted(range(n), key=lambda k: (tasks[k].period, k))
-    for rank, k in enumerate(order):
-        pr = (n - rank) * 10  # larger = higher priority
-        t = tasks[k]
-        # rebuild task to re-run __post_init__ with the final priority
-        # (best-effort tasks are shifted below all RT priorities there)
-        tasks[k] = Task(
-            name=t.name, cpu_segments=t.cpu_segments,
-            cpu_segments_best=t.cpu_segments_best,
-            gpu_segments=t.gpu_segments, period=t.period,
-            deadline=t.deadline, cpu=t.cpu, priority=pr,
-            best_effort=t.best_effort, device=t.device)
 
     return Taskset(tasks=tasks, n_cpus=p.n_cpus, epsilon=p.epsilon,
                    n_devices=p.n_devices)

@@ -1,0 +1,260 @@
+"""Differential equivalence: scalar reference RTAs vs the vectorized
+batch backend (`repro.core.batch`, DESIGN.md §5).
+
+Three layers of protection:
+
+  * **WCRT differential** — for every analysis kind, across 1/2/4-device
+    tasksets, both busy modes plus the suspend analyses, with and
+    without GPU-priority jitters: the batch WCRT vectors must agree
+    with the scalar vectors on accept/reject (inf-for-inf) and on every
+    finite bound to 1e-6.
+  * **Pipeline differential** — the full Sec. VII-A evaluation (RM test
+    + Audsley retry) must make identical decisions through
+    ``batch_accept_many`` and the scalar ``schedulable`` +
+    ``assign_gpu_priorities`` path, and the warm-started Audsley must
+    return the exact assignment of the cold-started search.
+  * **Pinned golden batch** — 120 tasksets across six generator
+    configurations with hard-coded accept/reject bits for all three
+    sweep methods, so a simultaneous drift of both backends (or a
+    generator change) cannot slip through as "still equivalent".
+
+``REPRO_BATCH_N`` widens the differential seed range in CI's soundness
+job; the default keeps tier-1 fast.  The hypothesis property test rides
+along when the extra is installed (tests/_optional.py).
+"""
+import math
+import os
+
+import pytest
+
+from repro.core import (GenParams, generate_taskset, schedulable,
+                        schedulable_many)
+from repro.core.audsley import assign_gpu_priorities
+from repro.core.batch import (BUSY_KINDS, KINDS, batch_accept_many,
+                              batch_rta, batch_schedulable, scalar_rta)
+
+from _optional import HAVE_HYPOTHESIS, given, settings, st
+
+N_DIFF = int(os.environ.get("REPRO_BATCH_N", "24"))
+
+
+def _gen(seed, **kw):
+    ts = generate_taskset(seed, GenParams(**kw))
+    ts.kthread_cpu = ts.n_cpus
+    return ts
+
+
+def _assert_vectors_match(sc, ba, ctx):
+    assert set(sc) == set(ba), ctx
+    for name, r_s in sc.items():
+        r_b = ba[name]
+        if r_s is None or r_b is None:
+            assert r_s is r_b, (ctx, name, r_s, r_b)
+        elif math.isinf(r_s) or math.isinf(r_b):
+            assert math.isinf(r_s) and math.isinf(r_b), (ctx, name, r_s, r_b)
+        else:
+            assert abs(r_s - r_b) <= 1e-6 * max(1.0, abs(r_s)), \
+                (ctx, name, r_s, r_b)
+
+
+# --------------------------------------------------------------------------
+# WCRT differential
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("kind", KINDS)
+@pytest.mark.parametrize("n_devices", [1, 2, 4])
+@pytest.mark.parametrize("use_gpu_prio", [False, True])
+def test_wcrt_differential(kind, n_devices, use_gpu_prio):
+    seeds = range(N_DIFF // 3)
+    tss = [_gen(s, n_devices=n_devices) for s in seeds]
+    rta = scalar_rta(kind)
+    batch = batch_rta(kind, tss, use_gpu_prio=use_gpu_prio)
+    for s, (ts, ba) in enumerate(zip(tss, batch)):
+        sc = rta(ts, use_gpu_prio=use_gpu_prio)
+        _assert_vectors_match(sc, ba, (kind, n_devices, use_gpu_prio, s))
+
+
+@pytest.mark.parametrize("kind", BUSY_KINDS)
+def test_wcrt_differential_heuristic(kind):
+    """The method='heuristic' escape hatch projects identically (and both
+    sides warn on multi-device tasksets)."""
+    from repro.core import SoundnessWarning
+    tss = [_gen(s, n_devices=2) for s in range(4)]
+    with pytest.warns(SoundnessWarning):
+        batch = batch_rta(kind, tss, method="heuristic")
+    rta = scalar_rta(kind)
+    for s, (ts, ba) in enumerate(zip(tss, batch)):
+        with pytest.warns(SoundnessWarning):
+            sc = rta(ts, method="heuristic")
+        _assert_vectors_match(sc, ba, (kind, "heuristic", s))
+
+
+def test_schedulable_many_dispatch():
+    """analysis.schedulable_many routes tagged RTAs through the batch
+    backend and falls back to the scalar loop, with equal decisions."""
+    from repro.core import ioctl_busy_improved_rta
+    tss = [_gen(s, util_per_cpu=(0.35, 0.45)) for s in range(10)]
+    via_batch = schedulable_many(tss, ioctl_busy_improved_rta)
+    via_scalar = schedulable_many(tss, ioctl_busy_improved_rta,
+                                  backend="scalar")
+    via_kind = schedulable_many(tss, "ioctl_busy_improved")
+    assert via_batch == via_scalar == via_kind
+    # scalar-only kwargs stay call-compatible on the batch default:
+    # early_exit is an acceleration hint (dropped), seeds/only force the
+    # scalar path instead of raising
+    assert schedulable_many(tss, ioctl_busy_improved_rta,
+                            early_exit=True) == via_batch
+    assert schedulable_many(tss, ioctl_busy_improved_rta,
+                            seeds={}) == via_batch
+    with pytest.raises(ValueError):
+        schedulable_many(tss, ioctl_busy_improved_rta, backend="turbo")
+    with pytest.raises(ValueError):
+        schedulable_many(tss, "ioctl_busy_improved", backend="scalar")
+
+
+def test_spec_validation_is_eager():
+    """Typos in sweep specs must fail loudly even when every taskset is
+    single-device (the cross_device wrapper's contract)."""
+    tss = [_gen(0)]
+    with pytest.raises(ValueError):
+        batch_accept_many({"m": ("kthread_busy", "heuristik")}, tss)
+    with pytest.raises(ValueError):
+        batch_accept_many({"m": ("ioctl_suspend_improved", "heuristic")},
+                          tss)
+    with pytest.raises(ValueError):
+        batch_accept_many({"m": ("no_such_kind", "fixed_point")}, tss)
+    with pytest.raises(ValueError):
+        batch_rta("kthread_busy", tss, method="heuristik")
+
+
+# --------------------------------------------------------------------------
+# pipeline differential (RM test + Audsley retry)
+# --------------------------------------------------------------------------
+
+PIPELINE_KINDS = ("kthread_busy", "ioctl_busy_improved",
+                  "ioctl_suspend_improved")
+
+
+def _scalar_pipeline(ts, rta):
+    if schedulable(ts, rta):
+        return True
+    return assign_gpu_priorities(ts, rta) is not None
+
+
+@pytest.mark.parametrize("kind", PIPELINE_KINDS)
+def test_pipeline_differential(kind):
+    tss = [_gen(s, util_per_cpu=(0.32, 0.42)) for s in range(N_DIFF)]
+    batch = batch_accept_many({kind: (kind, "fixed_point")}, tss)[kind]
+    rta = scalar_rta(kind)
+    scalar = [_scalar_pipeline(ts, rta) for ts in tss]
+    assert batch == scalar
+
+
+@pytest.mark.parametrize("kind", PIPELINE_KINDS)
+def test_pipeline_differential_multi_device(kind):
+    """n_devices > 1 routes the RM test through the lockstep crossfix /
+    folded projections and the retry through the scalar fallback."""
+    tss = [_gen(s, n_devices=2, util_per_cpu=(0.32, 0.42))
+           for s in range(max(6, N_DIFF // 4))]
+    batch = batch_accept_many({kind: (kind, "fixed_point")}, tss)[kind]
+    rta = scalar_rta(kind)
+    scalar = [_scalar_pipeline(ts, rta) for ts in tss]
+    assert batch == scalar
+
+
+@pytest.mark.parametrize("kind", PIPELINE_KINDS)
+def test_warm_start_identical(kind):
+    """Floor-seeded Audsley returns the cold search's exact result —
+    same accept/reject and the same GPU-priority assignment."""
+    rta = scalar_rta(kind)
+    checked = 0
+    for seed in range(N_DIFF):
+        ts = _gen(seed, util_per_cpu=(0.35, 0.45))
+        if schedulable(ts, rta):
+            continue  # Audsley never runs on RM-accepted sets
+        warm = assign_gpu_priorities(ts, rta, warm_start=True)
+        cold = assign_gpu_priorities(ts, rta, warm_start=False)
+        assert (warm is None) == (cold is None), (kind, seed)
+        if warm is not None:
+            gw = {t.name: t.gpu_priority for t in warm.tasks}
+            gc = {t.name: t.gpu_priority for t in cold.tasks}
+            assert gw == gc, (kind, seed)
+        checked += 1
+    assert checked > 0  # the band must actually exercise the retry
+
+
+# --------------------------------------------------------------------------
+# pinned golden batch (120 tasksets, 6 generator configurations)
+# --------------------------------------------------------------------------
+
+def golden_tasksets():
+    cfgs = [GenParams(util_per_cpu=(0.30, 0.40)),
+            GenParams(util_per_cpu=(0.40, 0.50)),
+            GenParams(n_tasks_total=20, util_per_cpu=(0.30, 0.40)),
+            GenParams(gpu_task_ratio=(0.6, 0.8), util_per_cpu=(0.30, 0.40)),
+            GenParams(best_effort_ratio=0.3, util_per_cpu=(0.35, 0.45)),
+            GenParams(n_cpus=6, util_per_cpu=(0.30, 0.40))]
+    return [_gen(1000 * c + seed, **vars(p))
+            for c, p in enumerate(cfgs) for seed in range(20)]
+
+
+GOLDEN_ACCEPT = {
+    "kthread_busy":
+        "000010010001000010000000000000000000000000100000000000000000"
+        "000000000000000000000100001000110101100000000000000000000000",
+    "ioctl_busy_improved":
+        "011010010000001110100000000000000000000010011111001100100001"
+        "000000000000000000000101111110111101111100000000000000000000",
+    "ioctl_suspend_improved":
+        "011010110001001110100000000000000000000010001111001100101001"
+        "000000000100000000001101111110111101111100000000000000000000",
+}
+
+
+def test_golden_batch_pinned():
+    tss = golden_tasksets()
+    assert len(tss) >= 100
+    acc = batch_accept_many(
+        {k: (k, "fixed_point") for k in GOLDEN_ACCEPT}, tss)
+    for kind, bits in GOLDEN_ACCEPT.items():
+        got = "".join("1" if b else "0" for b in acc[kind])
+        assert got == bits, f"{kind}: golden acceptance drifted"
+
+
+def test_golden_batch_matches_scalar():
+    """The same 120 tasksets through the scalar pipeline — so the golden
+    bits pin *both* backends, not just the batch one."""
+    tss = golden_tasksets()
+    stride = max(1, len(tss) // max(N_DIFF, 1))
+    for kind, bits in GOLDEN_ACCEPT.items():
+        rta = scalar_rta(kind)
+        for i in range(0, len(tss), stride):
+            assert _scalar_pipeline(tss[i], rta) == (bits[i] == "1"), \
+                (kind, i)
+
+
+# --------------------------------------------------------------------------
+# property test (hypothesis-optional)
+# --------------------------------------------------------------------------
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 10_000),
+       n_devices=st.sampled_from([1, 2, 4]),
+       kind=st.sampled_from(list(KINDS)),
+       use_gpu_prio=st.booleans())
+def test_property_wcrt_differential(seed, n_devices, kind, use_gpu_prio):
+    ts = _gen(seed, n_devices=n_devices)
+    sc = scalar_rta(kind)(ts, use_gpu_prio=use_gpu_prio)
+    ba = batch_rta(kind, [ts], use_gpu_prio=use_gpu_prio)[0]
+    _assert_vectors_match(sc, ba, (seed, n_devices, kind, use_gpu_prio))
+
+
+if HAVE_HYPOTHESIS:
+    # batch_schedulable must agree with analysis.schedulable decisions
+    @settings(max_examples=15, deadline=None)
+    @given(seed=st.integers(0, 10_000))
+    def test_property_decisions(seed):
+        ts = _gen(seed)
+        for kind in PIPELINE_KINDS:
+            assert batch_schedulable(kind, [ts]) == \
+                [schedulable(ts, scalar_rta(kind))]
