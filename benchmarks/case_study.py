@@ -204,7 +204,10 @@ def run_case_study(duration_s: float = 8.0, modes=None) -> List[dict]:
         for j in jobs:
             rows.append({
                 "mode": label, "task": j.name, "rt": j.is_rt,
-                "mort_ms": round(j.stats.mort * 1e3, 2),
+                # mort is None until the first completion — report NaN so
+                # an idle job can't read as meeting its deadline at 0.0ms
+                "mort_ms": round(j.stats.mort * 1e3, 2)
+                if j.stats.mort is not None else float("nan"),
                 "wcrt_ms": round(wcrt.get(j.name, float("nan")), 2)
                 if wcrt.get(j.name) is not None else float("nan"),
                 "jobs": j.stats.completions,

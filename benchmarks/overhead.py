@@ -1,17 +1,35 @@
-"""Runlist-update overhead epsilon (paper Table V / Fig. 18).
+"""Runtime overhead microbenchmarks (paper Table V / Fig. 18).
 
-Microbenchmark of the executor's admission updates (the IOCTL-analogue
-add/remove under the mutex, and the polling scheduler's reservation
-rewrite), reported in microseconds: max / min / avg / median — the shape of
-the paper's Table V.  The measured distribution feeds the epsilon used by
-admission control (sched/admission.py)."""
+Three measurements:
+
+  * **ioctl_update / poll_rewrite** — the runlist-update cost under the
+    admission mutex (the epsilon of the analysis), max/min/avg/median in
+    microseconds — the shape of the paper's Table V;
+  * **preemption latency** — wall time from a high-priority release to its
+    first device program starting while a best-effort job streams sliced
+    device work through ``run_sliced``.  The paper's claim, on the sliced
+    API: the observed latency is bounded by one slice duration + epsilon,
+    not by the lower-priority job's whole program.
+
+``--json PATH`` writes the ``BENCH_overhead.json`` perf-trajectory
+artifact (the runtime counterpart of check_regression.py's
+``BENCH_sweep.json``); CI uploads it on every push so runtime-overhead
+history is a comparable series rather than an empty trajectory.
+
+Usage:
+    PYTHONPATH=src python benchmarks/overhead.py --quick \
+        --json BENCH_overhead.json
+"""
 from __future__ import annotations
 
+import argparse
+import json
 import time
 from typing import Dict, List
 
 import numpy as np
 
+from repro.core.segments import SlicedOp
 from repro.sched import DeviceExecutor, RTJob
 
 
@@ -49,10 +67,65 @@ def measure_poll_rewrites(n: int = 5_000) -> np.ndarray:
     return out
 
 
-def run() -> List[Dict]:
+def measure_preemption_latency(n_releases: int = 20,
+                               slice_s: float = 0.01) -> Dict:
+    """Release a high-priority job ``n_releases`` times against a
+    best-effort job streaming ``slice_s``-long sliced dispatches; return
+    the release→first-program latency distribution (ms) and the analytic
+    bound (one slice + measured epsilon)."""
+    ex = DeviceExecutor(mode="notify", wait_mode="suspend")
+    latencies: List[float] = []
+    stop = []
+
+    def be_body(job, it):
+        def step(carry, i):
+            if not stop:
+                time.sleep(slice_s)  # device residency of one slice
+            return carry
+
+        with ex.device_segment(job):
+            ex.run_sliced(job, SlicedOp(50, lambda: None, step,
+                                        lambda c: c, label="be_slice"))
+
+    def rt_body(job, it):
+        t_req = time.perf_counter()
+        with ex.device_segment(job):
+            ex.run(job, lambda: latencies.append(
+                (time.perf_counter() - t_req) * 1e3))
+
+    be = RTJob("be", be_body, period_s=0.001, priority=0,
+               best_effort=True, n_iterations=10_000)
+    rt = RTJob("rt", rt_body, period_s=3 * slice_s, priority=50,
+               n_iterations=n_releases)
+    be.start(ex, stop_after_s=n_releases * 3 * slice_s + 2.0)
+    time.sleep(2 * slice_s)  # let the BE stream get going
+    rt.start(ex)
+    rt.join(n_releases * 3 * slice_s + 30)
+    stop.append(True)
+    be.stop()
+    be.join(10)
+    ex.shutdown()
+    eps_ms = (max(ex.update_times) * 1e3) if ex.update_times else 0.0
+    # an absent measurement must not read as perfect latency (same rule
+    # as JobStats.mort): NaN, never 0.0
+    lat = np.array(latencies) if latencies else np.full(1, np.nan)
+    return {
+        "n": len(latencies),
+        "slice_ms": slice_s * 1e3,
+        "epsilon_ms": round(eps_ms, 4),
+        "bound_ms": round(slice_s * 1e3 + eps_ms, 3),
+        "max_ms": round(float(np.max(lat)), 3),
+        "avg_ms": round(float(np.mean(lat)), 3),
+        "median_ms": round(float(np.median(lat)), 3),
+        "be_slices": len(be.stats.slice_times),
+    }
+
+
+def run(quick: bool = False) -> List[Dict]:
     rows = []
-    for name, samples in [("ioctl_update", measure_ioctl_updates()),
-                          ("poll_rewrite", measure_poll_rewrites())]:
+    n_ioctl, n_poll = (2_000, 1_000) if quick else (20_000, 5_000)
+    for name, samples in [("ioctl_update", measure_ioctl_updates(n_ioctl)),
+                          ("poll_rewrite", measure_poll_rewrites(n_poll))]:
         rows.append({
             "name": name, "n": len(samples),
             "max_us": round(float(np.max(samples)), 2),
@@ -64,3 +137,27 @@ def run() -> List[Dict]:
         print(f"  overhead[{name}]: " + " ".join(
             f"{k}={v}" for k, v in rows[-1].items() if k != "name"))
     return rows
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__.split("\n")[0])
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="write the BENCH_overhead.json artifact")
+    ap.add_argument("--quick", action="store_true",
+                    help="CI-sized sample counts")
+    args = ap.parse_args()
+
+    rows = run(quick=args.quick)
+    preempt = measure_preemption_latency(
+        n_releases=10 if args.quick else 30)
+    print("  preemption_latency: " + " ".join(
+        f"{k}={v}" for k, v in preempt.items()))
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump({"rows": rows, "preemption_latency": preempt}, f,
+                      indent=2)
+        print(f"wrote {args.json}")
+
+
+if __name__ == "__main__":
+    main()

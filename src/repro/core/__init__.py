@@ -3,6 +3,10 @@ Scheduling for Real-Time GPU Tasks' (Wang, Liu, Wong, Kim, 2024).
 
 Public API:
   task model      : Task, GpuSegment, Taskset
+  segments        : SlicedOp, SegmentedWorkload, SliceProfile,
+                    WorkloadProfile, measure_sliced, segment_layout
+                    (the one GPU-access-segment abstraction shared by
+                    analysis, simulator, and runtime — DESIGN.md §6)
   policy registry : SchedulingPolicy, register_policy, make_policy,
                     available_policies, policy_spec, Alg2State, pick_reserved
   engine          : EventDrivenEngine (heap-based event queue)
@@ -39,12 +43,17 @@ from .policy import (Alg2State, BasePolicy, SchedulingPolicy,
                      make_policy, pick_reserved, policy_spec,
                      register_policy)
 from .runlist import Platform, Runlist, SyncPolicy, TSG, UnmanagedPolicy
+from .segments import (GpuSegment, SegmentedWorkload, SlicedOp,
+                       SliceProfile, WorkloadProfile, measure_sliced,
+                       n_slices_for, segment_layout)
 from .simulator import SimResult, Simulator, build_pieces, simulate
-from .task_model import GpuSegment, Task, Taskset
+from .task_model import Task, Taskset
 from .taskgen import GenParams, generate_taskset, uunifast
 
 __all__ = [
     "Task", "GpuSegment", "Taskset",
+    "SlicedOp", "SegmentedWorkload", "SliceProfile", "WorkloadProfile",
+    "measure_sliced", "n_slices_for", "segment_layout",
     "SchedulingPolicy", "BasePolicy", "register_policy", "make_policy",
     "available_policies", "policy_spec", "Alg2State", "pick_reserved",
     "job_is_rt", "job_gpu_priority",

@@ -39,6 +39,7 @@ from typing import Dict, List, Optional, Sequence, Union
 
 from .engine import EventDrivenEngine
 from .policy import SchedulingPolicy, make_policy
+from .segments import segment_layout
 from .task_model import Task, Taskset
 
 _TIME_EPS = 1e-9
@@ -142,28 +143,32 @@ def build_pieces(task: Task, with_ioctl: bool, epsilon: float,
     if frac is None and rng is None:
         raise ValueError("frac=None (randomized durations) requires an rng")
 
+    # The piece *structure* (where the segment boundaries and the IOCTL
+    # runlist updates sit) is the shared definition in core/segments.py;
+    # this function only samples durations onto it.  IOCTL placement
+    # rationale: the begin() update admits the TSG when *pure* GPU work
+    # starts — G^m (async launch/driver work) is CPU-side and co-schedules
+    # with other tasks' GPU execution, matching Lemma 3 where remote
+    # interference is G_h^{e*} (not G_h^m + G_h^{e*}).  The end() update
+    # runs in driver completion context ("upde"): it needs no CPU core, so
+    # the runlist is released promptly after the kernel finishes (the
+    # promptness assumption behind the G^{e*} terms) without blocking
+    # CPU-only tasks.
     pieces: List[Piece] = []
-    nc, ng = task.eta_c, task.eta_g
-    for j in range(max(nc, ng)):
-        if j < nc:
+    for kind, j in segment_layout(task, with_ioctl):
+        if kind == "cpu":
             pieces.append(Piece("cpu", dur(task.cpu_segments[j],
                                            task.cpu_segments_best[j])))
-        if j < ng:
+        elif kind == "gm":
             g = task.gpu_segments[j]
-            # IOCTL: the begin() update admits the TSG when *pure* GPU work
-            # starts: G^m (async launch/driver work) is CPU-side and
-            # co-schedules with other tasks' GPU execution, matching Lemma 3
-            # where remote interference is G_h^{e*} (not G_h^m + G_h^{e*}).
-            # The end() update runs in driver completion context ("upde"):
-            # it needs no CPU core, so the runlist is released promptly
-            # after the kernel finishes (the promptness assumption behind
-            # the G^{e*} terms) without blocking CPU-only tasks.
             pieces.append(Piece("gm", dur(g.misc, g.misc_best), seg=j))
-            if with_ioctl:
-                pieces.append(Piece("upd", epsilon, seg=j, which="begin"))
+        elif kind == "ge":
+            g = task.gpu_segments[j]
             pieces.append(Piece("ge", dur(g.exec, g.exec_best), seg=j))
-            if with_ioctl:
-                pieces.append(Piece("upde", epsilon, seg=j, which="end"))
+        elif kind == "upd":
+            pieces.append(Piece("upd", epsilon, seg=j, which="begin"))
+        else:  # upde
+            pieces.append(Piece("upde", epsilon, seg=j, which="end"))
     return pieces
 
 

@@ -19,32 +19,13 @@ import dataclasses
 from dataclasses import dataclass
 from typing import Optional, Sequence
 
+# The G_{i,j} = (G^m, G^e) segment pair is shared with the simulator and
+# runtime layers and lives in core/segments.py (DESIGN.md §6); it is
+# re-exported here because the analysis vocabulary historically imported
+# it from the task model.
+from .segments import GpuSegment as GpuSegment
+
 BEST_EFFORT_PRIORITY = -1_000_000  # below every real-time priority
-
-
-@dataclass(frozen=True)
-class GpuSegment:
-    """One GPU segment G_{i,j} = (G^m_{i,j}, G^e_{i,j})."""
-
-    misc: float  # G^m_{i,j}: CPU-side launch/driver work (WCET)
-    exec: float  # G^e_{i,j}: pure GPU execution (WCET)
-    misc_best: Optional[float] = None
-    exec_best: Optional[float] = None
-
-    def __post_init__(self):
-        if self.misc < 0 or self.exec < 0:
-            raise ValueError("segment times must be non-negative")
-        if self.misc_best is None:
-            object.__setattr__(self, "misc_best", self.misc)
-        if self.exec_best is None:
-            object.__setattr__(self, "exec_best", self.exec)
-        if self.misc_best > self.misc or self.exec_best > self.exec:
-            raise ValueError("best-case must not exceed WCET")
-
-    @property
-    def total(self) -> float:
-        """G_{i,j} <= G^m + G^e (we use the conservative sum)."""
-        return self.misc + self.exec
 
 
 @dataclass

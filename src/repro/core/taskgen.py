@@ -19,7 +19,8 @@ import dataclasses
 import random
 from typing import Optional
 
-from .task_model import GpuSegment, Task, Taskset
+from .segments import GpuSegment
+from .task_model import Task, Taskset
 
 
 @dataclasses.dataclass

@@ -20,27 +20,23 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from ..core.segments import SlicedOp, n_slices_for
+
 NEG_INF = -1e30
 
 
-def _kernel(len_ref, q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
-            scale: float, window: Optional[int], block_k: int, n_kv: int,
-            n_heads: int, n_kv_heads: int):
-    ki = pl.program_id(1)
+def _block_update(len_ref, q_ref, k_ref, v_ref, m_scr, l_scr, acc_scr, *,
+                  scale: float, window: Optional[int], cols_base,
+                  block_k: int, n_heads: int, n_kv_heads: int):
+    """One online-softmax KV-block merge on the VMEM carry — shared by the
+    whole-grid kernel and the sliced (resumable) kernel."""
     g = n_heads // n_kv_heads
-
-    @pl.when(ki == 0)
-    def _init():
-        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
-        l_scr[...] = jnp.zeros_like(l_scr)
-        acc_scr[...] = jnp.zeros_like(acc_scr)
-
     q = q_ref[0].astype(jnp.float32)              # (H, D)
     k = k_ref[0].astype(jnp.float32)              # (bk, Hkv, D)
     v = v_ref[0].astype(jnp.float32)
     cache_len = len_ref[0]
 
-    cols = ki * block_k + jax.lax.iota(jnp.int32, block_k)
+    cols = cols_base + jax.lax.iota(jnp.int32, block_k)
     valid = cols < cache_len
     if window is not None:
         valid &= cols >= cache_len - window
@@ -68,10 +64,53 @@ def _kernel(len_ref, q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
         + pv.reshape(n_heads, -1)
     m_scr[...] = m_new
 
+
+def _kernel(len_ref, q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+            scale: float, window: Optional[int], block_k: int, n_kv: int,
+            n_heads: int, n_kv_heads: int):
+    ki = pl.program_id(1)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    _block_update(len_ref, q_ref, k_ref, v_ref, m_scr, l_scr, acc_scr,
+                  scale=scale, window=window, cols_base=ki * block_k,
+                  block_k=block_k, n_heads=n_heads, n_kv_heads=n_kv_heads)
+
     @pl.when(ki == n_kv - 1)
     def _flush():
         denom = jnp.maximum(l_scr[...], 1e-30)
         o_ref[0] = (acc_scr[...] / denom[:, None]).astype(o_ref.dtype)
+
+
+def _carry_kernel(len_ref, q_ref, k_ref, v_ref, m0_ref, l0_ref, acc0_ref,
+                  m_ref, l_ref, acc_ref, m_scr, l_scr, acc_scr, *,
+                  scale: float, window: Optional[int], kv_offset: int,
+                  block_k: int, n_kv: int, n_heads: int, n_kv_heads: int):
+    """Resumable slice over ``n_kv`` cache blocks starting at absolute
+    position ``kv_offset``; the (m, l, acc) merge state is an explicit
+    carry instead of being normalized away at the last block."""
+    ki = pl.program_id(1)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = m0_ref[0]
+        l_scr[...] = l0_ref[0]
+        acc_scr[...] = acc0_ref[0]
+
+    _block_update(len_ref, q_ref, k_ref, v_ref, m_scr, l_scr, acc_scr,
+                  scale=scale, window=window,
+                  cols_base=kv_offset + ki * block_k,
+                  block_k=block_k, n_heads=n_heads, n_kv_heads=n_kv_heads)
+
+    @pl.when(ki == n_kv - 1)
+    def _flush():
+        m_ref[0] = m_scr[...]
+        l_ref[0] = l_scr[...]
+        acc_ref[0] = acc_scr[...]
 
 
 def flash_decode(q, k_cache, v_cache, cache_len, *,
@@ -108,3 +147,72 @@ def flash_decode(q, k_cache, v_cache, cache_len, *,
         ],
         interpret=interpret,
     )(lens, q, k_cache, v_cache)
+
+
+def flash_decode_sliced(q, k_cache, v_cache, cache_len, *,
+                        window: Optional[int] = None, block_k: int = 512,
+                        kv_slice: int = 1,
+                        interpret: bool = False) -> SlicedOp:
+    """Sliced, resumable flash decode: each slice merges ``kv_slice``
+    cache blocks into the explicit (m, l, acc) carry — fp32 (B,H) /
+    (B,H) / (B,H,D) — visiting blocks in the same order as
+    :func:`flash_decode`, so the result is value-identical (pinned in
+    tests/test_sliced_kernels.py)."""
+    b, h, d = q.shape
+    smax, hkv = k_cache.shape[1], k_cache.shape[2]
+    block_k = min(block_k, smax)
+    assert smax % block_k == 0, (smax, block_k)
+    n_kv = smax // block_k
+    n_slices = n_slices_for(n_kv, kv_slice)
+    lens = jnp.broadcast_to(jnp.asarray(cache_len, jnp.int32), (b,))
+    scale = d ** -0.5
+
+    def init():
+        return (jnp.full((b, h), NEG_INF, jnp.float32),
+                jnp.zeros((b, h), jnp.float32),
+                jnp.zeros((b, h, d), jnp.float32))
+
+    def step(carry, i):
+        m0, l0, acc0 = carry
+        k0 = i * kv_slice
+        nk = min(kv_slice, n_kv - k0)
+        ks = k_cache[:, k0 * block_k:(k0 + nk) * block_k]
+        vs = v_cache[:, k0 * block_k:(k0 + nk) * block_k]
+        kernel = functools.partial(
+            _carry_kernel, scale=scale, window=window,
+            kv_offset=k0 * block_k, block_k=block_k, n_kv=nk,
+            n_heads=h, n_kv_heads=hkv)
+        carry_spec_1d = pl.BlockSpec((1, h), lambda b_, k_: (b_, 0))
+        carry_spec_2d = pl.BlockSpec((1, h, d), lambda b_, k_: (b_, 0, 0))
+        return pl.pallas_call(
+            kernel,
+            grid=(b, nk),
+            in_specs=[
+                pl.BlockSpec((1,), lambda b_, k_: (b_,)),
+                pl.BlockSpec((1, h, d), lambda b_, k_: (b_, 0, 0)),
+                pl.BlockSpec((1, block_k, hkv, d), lambda b_, k_:
+                             (b_, k_, 0, 0)),
+                pl.BlockSpec((1, block_k, hkv, d), lambda b_, k_:
+                             (b_, k_, 0, 0)),
+                carry_spec_1d, carry_spec_1d, carry_spec_2d,
+            ],
+            out_specs=[carry_spec_1d, carry_spec_1d, carry_spec_2d],
+            out_shape=[
+                jax.ShapeDtypeStruct((b, h), jnp.float32),
+                jax.ShapeDtypeStruct((b, h), jnp.float32),
+                jax.ShapeDtypeStruct((b, h, d), jnp.float32),
+            ],
+            scratch_shapes=[
+                pltpu.VMEM((h,), jnp.float32),
+                pltpu.VMEM((h,), jnp.float32),
+                pltpu.VMEM((h, d), jnp.float32),
+            ],
+            interpret=interpret,
+        )(lens, q, ks, vs, m0, l0, acc0)
+
+    def finalize(carry):
+        _, lsum, acc = carry
+        denom = jnp.maximum(lsum, 1e-30)
+        return (acc / denom[..., None]).astype(q.dtype)
+
+    return SlicedOp(n_slices, init, step, finalize, label="flash_decode")

@@ -29,31 +29,26 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from ..core.segments import SlicedOp, n_slices_for
 from . import ref
 
 NEG_INF = -1e30
 
 
-def _fwd_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
-                scale: float, causal: bool, window: Optional[int],
-                q_offset: int, block_q: int, block_k: int, n_kv: int):
-    qi = pl.program_id(2)
-    ki = pl.program_id(3)
-
-    @pl.when(ki == 0)
-    def _init():
-        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
-        l_scr[...] = jnp.zeros_like(l_scr)
-        acc_scr[...] = jnp.zeros_like(acc_scr)
-
+def _block_update(q_ref, k_ref, v_ref, m_scr, l_scr, acc_scr, *,
+                  scale: float, causal: bool, window: Optional[int],
+                  rows_base, cols_base, block_q: int, block_k: int):
+    """One online-softmax block update on the VMEM carry scratch — the
+    single definition shared by the whole-grid kernel and the sliced
+    (resumable) kernel, so the two execute bit-identical math."""
     q = q_ref[0, 0].astype(jnp.float32)           # (bq, d)
     k = k_ref[0, 0].astype(jnp.float32)           # (bk, d)
     v = v_ref[0, 0].astype(jnp.float32)
     s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
 
-    rows = qi * block_q + jax.lax.broadcasted_iota(
-        jnp.int32, (block_q, block_k), 0) + q_offset
-    cols = ki * block_k + jax.lax.broadcasted_iota(
+    rows = rows_base + jax.lax.broadcasted_iota(
+        jnp.int32, (block_q, block_k), 0)
+    cols = cols_base + jax.lax.broadcasted_iota(
         jnp.int32, (block_q, block_k), 1)
     mask = jnp.ones((block_q, block_k), jnp.bool_)
     if causal:
@@ -71,10 +66,61 @@ def _fwd_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
         p.astype(v.dtype), v, preferred_element_type=jnp.float32)
     m_scr[...] = m_new
 
+
+def _fwd_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+                scale: float, causal: bool, window: Optional[int],
+                q_offset: int, block_q: int, block_k: int, n_kv: int):
+    qi = pl.program_id(2)
+    ki = pl.program_id(3)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    _block_update(q_ref, k_ref, v_ref, m_scr, l_scr, acc_scr,
+                  scale=scale, causal=causal, window=window,
+                  rows_base=qi * block_q + q_offset,
+                  cols_base=ki * block_k,
+                  block_q=block_q, block_k=block_k)
+
     @pl.when(ki == n_kv - 1)
     def _flush():
         denom = jnp.maximum(l_scr[...], 1e-30)
         o_ref[0, 0] = (acc_scr[...] / denom[:, None]).astype(o_ref.dtype)
+
+
+def _fwd_carry_kernel(q_ref, k_ref, v_ref, m0_ref, l0_ref, acc0_ref,
+                      m_ref, l_ref, acc_ref, m_scr, l_scr, acc_scr, *,
+                      scale: float, causal: bool, window: Optional[int],
+                      q_offset: int, kv_offset: int, block_q: int,
+                      block_k: int, n_kv: int):
+    """Resumable slice: same grid walk as ``_fwd_kernel`` over ``n_kv`` kv
+    blocks starting at absolute column ``kv_offset``, but the softmax row
+    stats + output accumulator enter as an explicit carry and leave as
+    outputs instead of being normalized in place — the executor preempts
+    between dispatches and a checkpoint can snapshot the carry."""
+    qi = pl.program_id(2)
+    ki = pl.program_id(3)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = m0_ref[0, 0]
+        l_scr[...] = l0_ref[0, 0]
+        acc_scr[...] = acc0_ref[0, 0]
+
+    _block_update(q_ref, k_ref, v_ref, m_scr, l_scr, acc_scr,
+                  scale=scale, causal=causal, window=window,
+                  rows_base=qi * block_q + q_offset,
+                  cols_base=kv_offset + ki * block_k,
+                  block_q=block_q, block_k=block_k)
+
+    @pl.when(ki == n_kv - 1)
+    def _flush():
+        m_ref[0, 0] = m_scr[...]
+        l_ref[0, 0] = l_scr[...]
+        acc_ref[0, 0] = acc_scr[...]
 
 
 def _fwd(q, k, v, *, causal, window, q_offset, block_q, block_k,
@@ -163,3 +209,88 @@ def flash_attention(q, k, v, *, causal: bool = True,
     o = _flash(qt, kt, vt, causal, window, q_offset, block_q, block_k,
                interpret)
     return jnp.moveaxis(o, 1, 2)
+
+
+def flash_attention_sliced(q, k, v, *, causal: bool = True,
+                           window: Optional[int] = None, q_offset: int = 0,
+                           block_q: int = 128, block_k: int = 128,
+                           kv_slice: int = 1,
+                           interpret: bool = False) -> SlicedOp:
+    """Sliced, resumable flash attention (DESIGN.md §6).
+
+    Each slice dispatches ``kv_slice`` kv-block grid steps and threads the
+    online-softmax carry (running max m, running sum l, unnormalized
+    accumulator acc — fp32, (B,H,Sq)/(B,H,Sq)/(B,H,Sq,D)) explicitly, so
+    the executor can preempt between slices with delay bounded by one
+    slice.  The kv blocks are visited in the same order with the same
+    block shapes as the whole-grid kernel, so the result is value-identical
+    to :func:`flash_attention` (pinned in tests/test_sliced_kernels.py).
+    Forward-only: slicing exists for inference serving; training goes
+    through :func:`flash_attention`."""
+    b, sq, h, d = q.shape
+    sk, hkv = k.shape[1], k.shape[2]
+    k = ref.repeat_kv(k, h // hkv)
+    v = ref.repeat_kv(v, h // hkv)
+    qt = jnp.moveaxis(q, 1, 2)   # (B, H, S, D)
+    kt = jnp.moveaxis(k, 1, 2)
+    vt = jnp.moveaxis(v, 1, 2)
+    block_q = min(block_q, sq)
+    block_k = min(block_k, sk)
+    assert sq % block_q == 0 and sk % block_k == 0, (sq, sk)
+    n_q, n_kv = sq // block_q, sk // block_k
+    n_slices = n_slices_for(n_kv, kv_slice)
+    scale = d ** -0.5
+
+    def init():
+        return (jnp.full((b, h, sq), NEG_INF, jnp.float32),
+                jnp.zeros((b, h, sq), jnp.float32),
+                jnp.zeros((b, h, sq, d), jnp.float32))
+
+    def step(carry, i):
+        m0, l0, acc0 = carry
+        k0 = i * kv_slice
+        nk = min(kv_slice, n_kv - k0)
+        ks = kt[:, :, k0 * block_k:(k0 + nk) * block_k]
+        vs = vt[:, :, k0 * block_k:(k0 + nk) * block_k]
+        kernel = functools.partial(
+            _fwd_carry_kernel, scale=scale, causal=causal, window=window,
+            q_offset=q_offset, kv_offset=k0 * block_k, block_q=block_q,
+            block_k=block_k, n_kv=nk)
+        carry_spec_1d = pl.BlockSpec(
+            (1, 1, block_q), lambda b_, h_, q_, k_: (b_, h_, q_))
+        carry_spec_2d = pl.BlockSpec(
+            (1, 1, block_q, d), lambda b_, h_, q_, k_: (b_, h_, q_, 0))
+        return pl.pallas_call(
+            kernel,
+            grid=(b, h, n_q, nk),
+            in_specs=[
+                pl.BlockSpec((1, 1, block_q, d), lambda b_, h_, q_, k_:
+                             (b_, h_, q_, 0)),
+                pl.BlockSpec((1, 1, block_k, d), lambda b_, h_, q_, k_:
+                             (b_, h_, k_, 0)),
+                pl.BlockSpec((1, 1, block_k, d), lambda b_, h_, q_, k_:
+                             (b_, h_, k_, 0)),
+                carry_spec_1d, carry_spec_1d, carry_spec_2d,
+            ],
+            out_specs=[carry_spec_1d, carry_spec_1d, carry_spec_2d],
+            out_shape=[
+                jax.ShapeDtypeStruct((b, h, sq), jnp.float32),
+                jax.ShapeDtypeStruct((b, h, sq), jnp.float32),
+                jax.ShapeDtypeStruct((b, h, sq, d), jnp.float32),
+            ],
+            scratch_shapes=[
+                pltpu.VMEM((block_q,), jnp.float32),
+                pltpu.VMEM((block_q,), jnp.float32),
+                pltpu.VMEM((block_q, d), jnp.float32),
+            ],
+            interpret=interpret,
+        )(qt, ks, vs, m0, l0, acc0)
+
+    def finalize(carry):
+        _, lsum, acc = carry
+        denom = jnp.maximum(lsum, 1e-30)
+        o = (acc / denom[..., None]).astype(q.dtype)
+        return jnp.moveaxis(o, 1, 2)
+
+    return SlicedOp(n_slices, init, step, finalize,
+                    label="flash_attention")

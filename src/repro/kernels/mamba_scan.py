@@ -18,6 +18,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from ..core.segments import SlicedOp, n_slices_for
+
 
 def _kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, d_ref, h0_ref,
             y_ref, hf_ref, h_scr, *, chunk: int, n_chunks: int):
@@ -93,3 +95,48 @@ def mamba_scan_pallas(x, dt, A, B, C, D, h0: Optional[jax.Array] = None,
         interpret=interpret,
     )(x, dt, A, B, C, D, h0)
     return y, h_final
+
+
+def mamba_scan_sliced(x, dt, A, B, C, D, h0: Optional[jax.Array] = None,
+                      chunk: int = 32, block_d: int = 512,
+                      slice_chunks: int = 1, interpret: bool = False,
+                      scan_fn=None) -> SlicedOp:
+    """Sliced, resumable selective scan: each slice dispatches
+    ``slice_chunks`` time-chunk grid steps of :func:`mamba_scan_pallas`
+    on its window, threading the recurrent state h — which the kernel
+    already exposes as (h0 in, h_final out) — through the carry together
+    with the output buffer.  The recurrence is sequential in time, so the
+    sliced result is value-identical to the whole-sequence kernel.
+
+    ``scan_fn`` overrides the per-window scan (ops.py passes the
+    pallas/reference dispatcher so slicing works on both paths)."""
+    bt, s, di = x.shape
+    n = A.shape[1]
+    chunk = min(chunk, s)
+    assert s % chunk == 0, (s, chunk)
+    n_chunks = s // chunk
+    n_slices = n_slices_for(n_chunks, slice_chunks)
+    if scan_fn is None:
+        def scan_fn(xw, dtw, A_, Bw, Cw, D_, h):
+            return mamba_scan_pallas(xw, dtw, A_, Bw, Cw, D_, h0=h,
+                                     chunk=chunk, block_d=block_d,
+                                     interpret=interpret)
+
+    def init():
+        h = h0 if h0 is not None else jnp.zeros((bt, di, n), jnp.float32)
+        return (h, jnp.zeros((bt, s, di), x.dtype))
+
+    def step(carry, i):
+        h, y = carry
+        t0 = i * slice_chunks * chunk
+        t1 = min(t0 + slice_chunks * chunk, s)
+        yw, h = scan_fn(x[:, t0:t1], dt[:, t0:t1], A, B[:, t0:t1],
+                       C[:, t0:t1], D, h)
+        y = jax.lax.dynamic_update_slice(y, yw.astype(y.dtype), (0, t0, 0))
+        return (h, y)
+
+    def finalize(carry):
+        h, y = carry
+        return y, h
+
+    return SlicedOp(n_slices, init, step, finalize, label="mamba_scan")

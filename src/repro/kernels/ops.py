@@ -6,18 +6,36 @@ runtime) and the pure-jnp references in ``ref.py`` (CPU dry-run, smoke
 tests, and the oracle for kernel validation).
 
 The global default is platform-derived: Pallas on TPU, reference elsewhere.
-``set_use_pallas`` overrides it (tests use interpret-mode Pallas on CPU).
+``set_use_pallas`` overrides it (tests use interpret-mode Pallas on CPU);
+the ``REPRO_PALLAS`` environment variable provides the same override for
+subprocesses (``interpret`` → interpret-mode Pallas, as in CI's
+runtime-smoke job; ``on``/``off`` → force the dispatch).
+
+The ``*_sliced`` entry points return a :class:`repro.core.segments.
+SlicedOp` — the op split into K-grid-step dispatches with an explicit
+carry — so the real-time executor can preempt between slices (bounded
+preemption delay, DESIGN.md §6) and checkpoint mid-op.
 """
 from __future__ import annotations
 
+import os
 from typing import Optional
 
 import jax
 
+from ..core.segments import SlicedOp
 from . import ref
 
 _USE_PALLAS: Optional[bool] = None  # None -> auto (TPU only)
 _INTERPRET = False                  # run Pallas kernels in interpret mode
+
+_ENV = os.environ.get("REPRO_PALLAS", "").lower()
+if _ENV == "interpret":             # CI runtime-smoke: exercise the Pallas
+    _USE_PALLAS, _INTERPRET = True, True   # path on CPU runners
+elif _ENV in ("on", "1", "true"):
+    _USE_PALLAS = True
+elif _ENV in ("off", "0", "false"):
+    _USE_PALLAS = False
 
 
 def set_use_pallas(value: Optional[bool], interpret: bool = False) -> None:
@@ -34,6 +52,14 @@ def use_pallas() -> bool:
 
 def interpret_mode() -> bool:
     return _INTERPRET
+
+
+def _sliced_interpret() -> bool:
+    """Sliced execution always goes through the Pallas kernels (the carry
+    contract is kernel-level); off-TPU they run in interpret mode."""
+    if use_pallas():
+        return _INTERPRET
+    return jax.default_backend() != "tpu"
 
 
 # --------------------------------------------------------------------------
@@ -87,3 +113,63 @@ def mamba_decode_step(x, dt, A, B, C, D, h):
 
 def rwkv6_decode_step(r, k, v, w, u, state):
     return ref.rwkv6_decode_step(r, k, v, w, u, state)
+
+
+# --------------------------------------------------------------------------
+# sliced, resumable entry points (bounded preemption delay — DESIGN.md §6)
+# --------------------------------------------------------------------------
+
+def attention_sliced(q, k, v, *, causal: bool = True,
+                     window: Optional[int] = None, q_offset: int = 0,
+                     block_q: int = 128, block_k: int = 128,
+                     kv_slice: int = 1) -> SlicedOp:
+    """Flash attention as a SlicedOp: ``kv_slice`` kv-block grid steps per
+    dispatch, explicit (m, l, acc) carry between dispatches.  Value-
+    identical to :func:`attention` on the Pallas path."""
+    from .flash_attention import flash_attention_sliced
+    return flash_attention_sliced(
+        q, k, v, causal=causal, window=window, q_offset=q_offset,
+        block_q=block_q, block_k=block_k, kv_slice=kv_slice,
+        interpret=_sliced_interpret())
+
+
+def decode_attention_sliced(q, k_cache, v_cache, cache_len, *,
+                            window: Optional[int] = None,
+                            block_k: int = 512,
+                            kv_slice: int = 1) -> SlicedOp:
+    """Flash decode as a SlicedOp over cache blocks (carry: m, l, acc)."""
+    from .decode_attention import flash_decode_sliced
+    return flash_decode_sliced(
+        q, k_cache, v_cache, cache_len, window=window, block_k=block_k,
+        kv_slice=kv_slice, interpret=_sliced_interpret())
+
+
+def mamba_scan_sliced(x, dt, A, B, C, D, h0=None, *, chunk: int = 32,
+                      block_d: int = 512,
+                      slice_chunks: int = 1) -> SlicedOp:
+    """Selective scan as a SlicedOp over time windows (carry: recurrent h
+    + output buffer).  Each window dispatches through the normal
+    pallas/reference dispatch, so this works on both paths."""
+    from .mamba_scan import mamba_scan_sliced as _sliced
+    if use_pallas():
+        return _sliced(x, dt, A, B, C, D, h0=h0, chunk=chunk,
+                       block_d=block_d, slice_chunks=slice_chunks,
+                       interpret=_INTERPRET)
+    return _sliced(x, dt, A, B, C, D, h0=h0, chunk=chunk, block_d=block_d,
+                   slice_chunks=slice_chunks,
+                   scan_fn=lambda xw, dtw, A_, Bw, Cw, D_, h:
+                   ref.mamba_scan(xw, dtw, A_, Bw, Cw, D_, h0=h))
+
+
+def rwkv6_scan_sliced(r, k, v, w, u, s0=None, *, chunk: int = 32,
+                      slice_chunks: int = 1) -> SlicedOp:
+    """WKV recurrence as a SlicedOp over time windows (carry: (B,H,D,D)
+    state + output buffer); pallas/reference dispatch per window."""
+    from .rwkv6 import rwkv6_scan_sliced as _sliced
+    if use_pallas():
+        return _sliced(r, k, v, w, u, s0=s0, chunk=chunk,
+                       slice_chunks=slice_chunks, interpret=_INTERPRET)
+    return _sliced(r, k, v, w, u, s0=s0, chunk=chunk,
+                   slice_chunks=slice_chunks,
+                   scan_fn=lambda rw, kw, vw, ww, u_, st:
+                   ref.rwkv6_scan(rw, kw, vw, ww, u_, s0=st))

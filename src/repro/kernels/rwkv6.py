@@ -20,6 +20,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from ..core.segments import SlicedOp, n_slices_for
+
 
 def _kernel(r_ref, k_ref, v_ref, w_ref, u_ref, s0_ref, o_ref, sf_ref,
             s_scr, *, chunk: int, n_chunks: int):
@@ -88,3 +90,45 @@ def rwkv6_scan_pallas(r, k, v, w, u, s0: Optional[jax.Array] = None,
         interpret=interpret,
     )(r, k, v, w, u, s0)
     return out, s_final
+
+
+def rwkv6_scan_sliced(r, k, v, w, u, s0: Optional[jax.Array] = None,
+                      chunk: int = 32, slice_chunks: int = 1,
+                      interpret: bool = False, scan_fn=None) -> SlicedOp:
+    """Sliced, resumable WKV recurrence: each slice dispatches
+    ``slice_chunks`` time-chunk grid steps of :func:`rwkv6_scan_pallas`
+    on its window, threading the (B,H,D,D) recurrent state — already a
+    kernel-level (s0 in, s_final out) pair — through the carry with the
+    output buffer.  Value-identical to the whole-sequence kernel.
+
+    ``scan_fn`` overrides the per-window scan (ops.py passes the
+    pallas/reference dispatcher)."""
+    b, s, h, d = r.shape
+    chunk = min(chunk, s)
+    assert s % chunk == 0, (s, chunk)
+    n_chunks = s // chunk
+    n_slices = n_slices_for(n_chunks, slice_chunks)
+    if scan_fn is None:
+        def scan_fn(rw, kw, vw, ww, u_, st):
+            return rwkv6_scan_pallas(rw, kw, vw, ww, u_, s0=st,
+                                     chunk=chunk, interpret=interpret)
+
+    def init():
+        st = s0 if s0 is not None else jnp.zeros((b, h, d, d), jnp.float32)
+        return (st, jnp.zeros((b, s, h, d), r.dtype))
+
+    def step(carry, i):
+        st, out = carry
+        t0 = i * slice_chunks * chunk
+        t1 = min(t0 + slice_chunks * chunk, s)
+        ow, st = scan_fn(r[:, t0:t1], k[:, t0:t1], v[:, t0:t1],
+                         w[:, t0:t1], u, st)
+        out = jax.lax.dynamic_update_slice(out, ow.astype(out.dtype),
+                                           (0, t0, 0, 0))
+        return (st, out)
+
+    def finalize(carry):
+        st, out = carry
+        return out, st
+
+    return SlicedOp(n_slices, init, step, finalize, label="rwkv6_scan")

@@ -1,8 +1,13 @@
-"""Serving driver: batched prefill + chunked decode, executor-ready.
+"""Serving driver: batched prefill + sliced decode, executor-ready.
 
-The engine exposes device work in bounded-duration chunks (``decode_chunk``)
-so the real-time executor can preempt between chunks — the TPU analogue of
-the paper's thread-block-granularity preemption window.
+The engine exposes device work as GPU-access segments (`repro.core.
+segments.SlicedOp`): ``decode_segment(n)`` is a sliced, resumable segment
+— ``slice_tokens`` decode programs per dispatch, with the KV cache /
+position / emitted tokens threaded as the explicit carry — so the
+real-time executor preempts between slices with delay bounded by one
+slice, and a checkpoint can snapshot the carry mid-generation.  This is
+the TPU analogue of the paper's thread-block-granularity preemption
+window (DESIGN.md §6).
 
   PYTHONPATH=src python -m repro.launch.serve --arch smollm-135m --reduced \
       --batch 4 --prompt-len 32 --decode 64
@@ -17,6 +22,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..configs import get
+from ..core.segments import SlicedOp, n_slices_for
 from ..models import transformer
 
 
@@ -41,17 +47,54 @@ class InferenceEngine:
         self.last_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
         return logits
 
+    # -- GPU-access segments (executor-dispatched) ----------------------
+    def prefill_segment(self, tokens: jax.Array) -> SlicedOp:
+        """Prefill as a one-slice device segment (a single XLA program;
+        its measured duration is its own preemption-delay bound)."""
+        def step(carry, i):
+            return self.prefill_batch(tokens)
+
+        return SlicedOp(1, lambda: None, step, lambda logits: logits,
+                        label="prefill")
+
+    def decode_segment(self, n: int, slice_tokens: int = 1) -> SlicedOp:
+        """Generate ``n`` tokens as a sliced segment: ``slice_tokens``
+        jitted decode programs per dispatch (the preemption grain), carry
+        = {cache, pos, tok, out}.  The engine state is committed at
+        finalize, so a preempted/abandoned carry never corrupts the
+        engine; ``finalize`` returns the (B, n) tokens."""
+        b = self.last_tok.shape[0]
+
+        def init():
+            return {"cache": self.cache, "pos": self.pos,
+                    "tok": self.last_tok,
+                    "out": jnp.zeros((b, n), jnp.int32)}
+
+        def step(carry, i):
+            cache, pos, tok, out = (carry["cache"], carry["pos"],
+                                    carry["tok"], carry["out"])
+            for t in range(i * slice_tokens,
+                           min((i + 1) * slice_tokens, n)):
+                logits, cache = self._decode(self.params, cache, tok, pos)
+                pos = pos + 1
+                tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+                out = jax.lax.dynamic_update_slice(
+                    out, tok[:, None], (0, t))
+            return {"cache": cache, "pos": pos, "tok": tok, "out": out}
+
+        def finalize(carry):
+            self.cache = carry["cache"]
+            self.pos = carry["pos"]
+            self.last_tok = carry["tok"]
+            return carry["out"]
+
+        return SlicedOp(n_slices_for(n, slice_tokens), init, step,
+                        finalize, label="decode")
+
     def decode_chunk(self, n: int, greedy: bool = True):
-        """Generate ``n`` tokens; one jitted program per token (the
-        preemption boundary).  Returns (B, n) tokens."""
-        out = []
-        for _ in range(n):
-            logits, self.cache = self._decode(self.params, self.cache,
-                                              self.last_tok, self.pos)
-            self.pos = self.pos + 1
-            self.last_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
-            out.append(self.last_tok)
-        return jnp.stack(out, axis=1)
+        """Generate ``n`` tokens inline (no executor): runs the sliced
+        segment to completion.  Returns (B, n) tokens."""
+        return self.decode_segment(n).run()
 
 
 def main() -> None:

@@ -1,10 +1,11 @@
 from .admission import AdmissionController, JobProfile
-from .checkpointer import AsyncCheckpointer, latest_step, restore, save
+from .checkpointer import (AsyncCheckpointer, latest_carry, latest_step,
+                           restore, save, save_carry)
 from .executor import DeviceExecutor
 from .fault import FaultTolerantLoop, Heartbeat, StallError, with_retry
 from .job import RTJob
 
 __all__ = ["AdmissionController", "JobProfile", "AsyncCheckpointer",
-           "latest_step", "restore", "save", "DeviceExecutor",
-           "FaultTolerantLoop", "Heartbeat", "StallError", "with_retry",
-           "RTJob"]
+           "latest_step", "restore", "save", "save_carry", "latest_carry",
+           "DeviceExecutor", "FaultTolerantLoop", "Heartbeat", "StallError",
+           "with_retry", "RTJob"]

@@ -22,6 +22,7 @@ from typing import Callable, List, Optional
 from ..core import GpuSegment, Task, Taskset, schedulable
 from ..core.audsley import assign_gpu_priorities
 from ..core.policy import policy_spec
+from ..core.segments import WorkloadProfile
 
 
 def rta_for(policy: str, wait_mode: str) -> Callable:
@@ -60,6 +61,25 @@ class JobProfile:
             deadline=self.deadline_ms or self.period_ms,
             cpu=self.cpu, priority=self.priority,
             best_effort=self.best_effort, device=self.device)
+
+    @classmethod
+    def from_workload(cls, wp: "WorkloadProfile", period_ms: float,
+                      priority: int, *, cpu: int = 0,
+                      deadline_ms: Optional[float] = None,
+                      best_effort: bool = False, device: int = 0,
+                      margin: float = 1.2) -> "JobProfile":
+        """Build the admission profile from a *measured*
+        ``core.segments.WorkloadProfile`` (host segment times + per-slice
+        device times), inflated by ``margin`` — observations are not
+        WCETs.  This is the end of the measured pipeline: real sliced
+        kernel → per-slice times → η/G segments → RTA admission."""
+        host, dev = wp.segments_ms(margin)
+        return cls(name=wp.name,
+                   host_segments_ms=host or [0.0],
+                   device_segments_ms=dev,
+                   period_ms=period_ms, priority=priority, cpu=cpu,
+                   deadline_ms=deadline_ms, best_effort=best_effort,
+                   device=device)
 
 
 class AdmissionController:

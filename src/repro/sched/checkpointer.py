@@ -99,6 +99,32 @@ def restore(ckpt_dir: str, like: Any, step: Optional[int] = None,
     return jax.tree_util.tree_unflatten(treedef, out)
 
 
+# --------------------------------------------------------------------------
+# mid-job carry snapshots (sliced device segments, DESIGN.md §6)
+# --------------------------------------------------------------------------
+
+def save_carry(ckpt_dir: str, label: str, slice_idx: int,
+               carry: Any) -> str:
+    """Snapshot a SlicedOp carry after ``slice_idx`` completed slices.
+    The carry is an ordinary pytree (softmax row stats, recurrent state,
+    KV cache + emitted tokens, ...), so the sharded/atomic ``save`` works
+    unchanged; a job resumes with ``executor.run_sliced(job, op,
+    carry=carry, start=slice_idx)`` instead of re-running the segment."""
+    return save(os.path.join(ckpt_dir, f"carry_{label}"), slice_idx, carry)
+
+
+def latest_carry(ckpt_dir: str, label: str, like: Any
+                 ) -> Optional[tuple]:
+    """(slice_idx, carry) of the latest snapshot for ``label``, restored
+    into the structure of ``like`` (use ``op.init()``), or ``None`` when
+    no snapshot exists."""
+    d = os.path.join(ckpt_dir, f"carry_{label}")
+    idx = latest_step(d)
+    if idx is None:
+        return None
+    return idx, restore(d, like, step=idx)
+
+
 class AsyncCheckpointer:
     """Fire-and-forget saves on a worker thread (training never stalls on
     I/O); ``wait()`` drains before shutdown."""

@@ -27,8 +27,11 @@ the executor only ever talks to the runtime face of ``SchedulingPolicy``.
 Preemption takes effect at program boundaries: before each dispatch the
 executor re-checks that the calling job is still admitted (and otherwise
 waits, busy-spinning or suspending per ``wait_mode``).  Long device work
-should be chunked (microbatches / decode chunks) to bound the preemption
-delay — the epsilon analogue of thread-block-boundary preemption.
+goes through ``run_sliced`` — a ``repro.core.segments.SlicedOp`` dispatched
+K grid-slices at a time with an explicit carry — so the preemption delay
+is *enforced* to be at most one slice (the epsilon analogue of
+thread-block-boundary preemption), measured per slice into
+``job.stats.slice_times``, and checkpointable mid-op (DESIGN.md §6).
 """
 from __future__ import annotations
 
@@ -199,4 +202,44 @@ class DeviceExecutor:
             self.dispatches += 1
             out = program(*args, **kw)
             jax.block_until_ready(out)
+        return out
+
+    def run_sliced(self, job: RTJob, op, *,
+                   carry=None, start: int = 0,
+                   checkpoint: Optional[Callable] = None,
+                   checkpoint_every: int = 0):
+        """Dispatch a :class:`repro.core.segments.SlicedOp` slice by slice.
+
+        Admission is re-checked before *every* slice, so a higher-priority
+        job waits at most one in-flight slice (+ the runlist-update ε) —
+        the bounded preemption delay the analysis assumes, instead of the
+        whole-op wait of a single monolithic dispatch.  Per-slice wall
+        times land in ``job.stats.slice_times`` (the measured ε-analogue
+        profile).
+
+        ``carry``/``start`` resume from a snapshot; ``checkpoint(i, carry)``
+        is called (outside the device lock) after every
+        ``checkpoint_every``-th slice, e.g. ``sched.checkpointer.
+        save_carry`` — a preempted or crashed job restarts mid-op rather
+        than re-running the segment."""
+        if carry is None:
+            carry = op.init()
+        for i in range(start, op.n_slices):
+            self._wait_admitted(job)
+            with self._device_lock:
+                self.dispatches += 1
+                t0 = time.perf_counter()
+                carry = op.step(carry, i)
+                jax.block_until_ready(carry)
+                job.stats.slice_times.append(time.perf_counter() - t0)
+            if checkpoint is not None and checkpoint_every > 0 \
+                    and (i + 1) % checkpoint_every == 0:
+                checkpoint(i + 1, carry)
+        self._wait_admitted(job)
+        with self._device_lock:
+            self.dispatches += 1
+            t0 = time.perf_counter()
+            out = op.finalize(carry)
+            jax.block_until_ready(out)
+            job.stats.slice_times.append(time.perf_counter() - t0)
         return out

@@ -36,10 +36,20 @@ class JobStats:
     completions: int = 0
     response_times: List[float] = field(default_factory=list)
     deadline_misses: int = 0
+    slice_times: List[float] = field(default_factory=list)  # seconds
 
     @property
-    def mort(self) -> float:
-        return max(self.response_times) if self.response_times else 0.0
+    def mort(self) -> Optional[float]:
+        """Maximum observed response time, or ``None`` before the first
+        completion — an idle job must not read as a 0.0 MORT (i.e. as
+        trivially meeting its deadline) in overhead/case-study reports."""
+        return max(self.response_times) if self.response_times else None
+
+    @property
+    def max_slice_time(self) -> Optional[float]:
+        """Longest single sliced dispatch (s) — the preemption-delay bound
+        this job imposes on higher-priority arrivals."""
+        return max(self.slice_times) if self.slice_times else None
 
 
 class RTJob:
