@@ -30,7 +30,7 @@ from typing import Dict, List
 import numpy as np
 
 from repro.core.segments import SlicedOp
-from repro.sched import DeviceExecutor, RTJob
+from repro.sched import ClusterExecutor, DeviceExecutor, RTJob
 
 
 def measure_ioctl_updates(n: int = 20_000) -> np.ndarray:
@@ -68,14 +68,22 @@ def measure_poll_rewrites(n: int = 5_000) -> np.ndarray:
 
 
 def measure_preemption_latency(n_releases: int = 20,
-                               slice_s: float = 0.01) -> Dict:
-    """Release a high-priority job ``n_releases`` times against a
-    best-effort job streaming ``slice_s``-long sliced dispatches; return
-    the release→first-program latency distribution (ms) and the analytic
-    bound (one slice + measured epsilon)."""
-    ex = DeviceExecutor(mode="notify", wait_mode="suspend")
-    latencies: List[float] = []
+                               slice_s: float = 0.01,
+                               n_devices: int = 1) -> Dict:
+    """Per device of an ``n_devices`` cluster: release a high-priority
+    job ``n_releases`` times against a best-effort job streaming
+    ``slice_s``-long sliced dispatches on the *same* device; return the
+    release→first-program latency distribution (ms) and the analytic
+    bound (one slice + measured epsilon).  The flat keys are device 0
+    (the historical single-device artifact shape); ``per_device`` holds
+    every device when ``n_devices > 1`` — the bound must hold on each
+    device independently (no cross-device interference)."""
+    cluster = ClusterExecutor(n_devices=n_devices, policy="ioctl",
+                              wait_mode="suspend", n_cpus=2)
+    latencies: Dict[int, List[float]] = {d: [] for d in range(n_devices)}
     stop = []
+    bes: List[RTJob] = []
+    rts: List[RTJob] = []
 
     def be_body(job, it):
         def step(carry, i):
@@ -83,42 +91,64 @@ def measure_preemption_latency(n_releases: int = 20,
                 time.sleep(slice_s)  # device residency of one slice
             return carry
 
-        with ex.device_segment(job):
-            ex.run_sliced(job, SlicedOp(50, lambda: None, step,
-                                        lambda c: c, label="be_slice"))
+        with cluster.device_segment(job):
+            cluster.run_sliced(job, SlicedOp(50, lambda: None, step,
+                                             lambda c: c,
+                                             label="be_slice"))
 
     def rt_body(job, it):
         t_req = time.perf_counter()
-        with ex.device_segment(job):
-            ex.run(job, lambda: latencies.append(
+        with cluster.device_segment(job):
+            cluster.run(job, lambda: latencies[job.device].append(
                 (time.perf_counter() - t_req) * 1e3))
 
-    be = RTJob("be", be_body, period_s=0.001, priority=0,
-               best_effort=True, n_iterations=10_000)
-    rt = RTJob("rt", rt_body, period_s=3 * slice_s, priority=50,
-               n_iterations=n_releases)
-    be.start(ex, stop_after_s=n_releases * 3 * slice_s + 2.0)
-    time.sleep(2 * slice_s)  # let the BE stream get going
-    rt.start(ex)
-    rt.join(n_releases * 3 * slice_s + 30)
+    horizon = n_releases * 3 * slice_s + 2.0
+    for d in range(n_devices):
+        be = RTJob(f"be{d}", be_body, period_s=0.001, priority=d,
+                   best_effort=True, n_iterations=10_000, device=d)
+        rt = RTJob(f"rt{d}", rt_body, period_s=3 * slice_s,
+                   priority=50 + d, n_iterations=n_releases, device=d)
+        cluster.bind_job(be)
+        cluster.bind_job(rt)
+        bes.append(be)
+        rts.append(rt)
+    for be in bes:
+        be.start(cluster, stop_after_s=horizon)
+    time.sleep(2 * slice_s)  # let the BE streams get going
+    for rt in rts:
+        rt.start(cluster)
+    for rt in rts:
+        rt.join(horizon + 30)
     stop.append(True)
-    be.stop()
-    be.join(10)
-    ex.shutdown()
-    eps_ms = (max(ex.update_times) * 1e3) if ex.update_times else 0.0
-    # an absent measurement must not read as perfect latency (same rule
-    # as JobStats.mort): NaN, never 0.0
-    lat = np.array(latencies) if latencies else np.full(1, np.nan)
-    return {
-        "n": len(latencies),
-        "slice_ms": slice_s * 1e3,
-        "epsilon_ms": round(eps_ms, 4),
-        "bound_ms": round(slice_s * 1e3 + eps_ms, 3),
-        "max_ms": round(float(np.max(lat)), 3),
-        "avg_ms": round(float(np.mean(lat)), 3),
-        "median_ms": round(float(np.median(lat)), 3),
-        "be_slices": len(be.stats.slice_times),
-    }
+    for be in bes:
+        be.stop()
+        be.join(10)
+    cluster.shutdown()
+    cluster.assert_migration_free()
+
+    def summary(d: int) -> Dict:
+        ex = cluster.executors[d]
+        eps_ms = (max(ex.update_times) * 1e3) if ex.update_times else 0.0
+        # an absent measurement must not read as perfect latency (same
+        # rule as JobStats.mort): NaN, never 0.0
+        lat = (np.array(latencies[d]) if latencies[d]
+               else np.full(1, np.nan))
+        return {
+            "n": len(latencies[d]),
+            "slice_ms": slice_s * 1e3,
+            "epsilon_ms": round(eps_ms, 4),
+            "bound_ms": round(slice_s * 1e3 + eps_ms, 3),
+            "max_ms": round(float(np.max(lat)), 3),
+            "avg_ms": round(float(np.mean(lat)), 3),
+            "median_ms": round(float(np.median(lat)), 3),
+            "be_slices": len(bes[d].stats.slice_times),
+        }
+
+    out = summary(0)
+    out["n_devices"] = n_devices
+    if n_devices > 1:
+        out["per_device"] = {d: summary(d) for d in range(n_devices)}
+    return out
 
 
 def run(quick: bool = False) -> List[Dict]:
@@ -145,13 +175,19 @@ def main() -> None:
                     help="write the BENCH_overhead.json artifact")
     ap.add_argument("--quick", action="store_true",
                     help="CI-sized sample counts")
+    ap.add_argument("--n-devices", type=int, default=1,
+                    help="measure preemption latency per device of an "
+                         "N-device cluster (the bound must hold on each)")
     args = ap.parse_args()
 
     rows = run(quick=args.quick)
     preempt = measure_preemption_latency(
-        n_releases=10 if args.quick else 30)
+        n_releases=10 if args.quick else 30, n_devices=args.n_devices)
     print("  preemption_latency: " + " ".join(
-        f"{k}={v}" for k, v in preempt.items()))
+        f"{k}={v}" for k, v in preempt.items() if k != "per_device"))
+    for d, row in preempt.get("per_device", {}).items():
+        print(f"  preemption_latency[device {d}]: " + " ".join(
+            f"{k}={v}" for k, v in row.items()))
     if args.json:
         with open(args.json, "w") as f:
             json.dump({"rows": rows, "preemption_latency": preempt}, f,

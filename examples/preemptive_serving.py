@@ -7,7 +7,14 @@ admission test's epsilon comes from the *measured* per-slice profile
 rather than a whole-train-step worst case.
 
   PYTHONPATH=src python examples/preemptive_serving.py
+
+With ``--n-devices N`` (N > 1) the same two workloads run on a
+ClusterExecutor: inference pinned to device 0, training pinned to device
+N-1 (the boundary device — the admission path the cross-device analysis
+guards), so the inference WCRT is computed on the multi-device platform
+and the per-device MORTs show the isolation.
 """
+import argparse
 import time
 
 import jax
@@ -19,20 +26,43 @@ from repro.launch.serve import InferenceEngine
 from repro.launch.steps import build_train_step
 from repro.models import transformer
 from repro.optim import adamw
-from repro.sched import AdmissionController, DeviceExecutor, JobProfile, RTJob
+from repro.sched import ClusterExecutor, JobProfile, RTJob
 
 
 def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--n-devices", type=int, default=1,
+                    help="N>1: train on device N-1, infer on device 0")
+    args = ap.parse_args()
+    n_devices = args.n_devices
+    infer_dev, train_dev = 0, n_devices - 1
+    # physical placement: pin each workload's arrays (and therefore its
+    # XLA programs) to its scheduling device when the host exposes that
+    # many jax devices; otherwise the scheduling isolation still holds
+    # but the programs share one physical device (warn — the analysis
+    # models N devices)
+    jdevs = jax.devices()
+    if n_devices > 1 and len(jdevs) < n_devices:
+        print(f"WARNING: --n-devices {n_devices} but only {len(jdevs)} "
+              f"jax device(s); programs share one physical device "
+              f"(set XLA_FLAGS=--xla_force_host_platform_device_count="
+              f"{n_devices})")
+    infer_jdev = jdevs[infer_dev] if len(jdevs) > infer_dev else None
+    train_jdev = jdevs[train_dev] if len(jdevs) > train_dev else None
     # --- workloads -----------------------------------------------------
     infer_cfg = get("smollm-135m").reduced()
     train_cfg = get("olmo-1b").reduced()
-    engine = InferenceEngine(infer_cfg, max_len=64)
+    engine = InferenceEngine(infer_cfg, max_len=64, device=infer_jdev)
     params = transformer.init_params(train_cfg, jax.random.PRNGKey(0))
+    if train_jdev is not None:
+        params = jax.device_put(params, train_jdev)
     state = {"params": params, "opt": adamw.init_opt_state(params)}
     step_fn = jax.jit(build_train_step(train_cfg))
     microbatches = [
         {"inputs": jnp.zeros((1, 32), jnp.int32),
          "labels": jnp.zeros((1, 32), jnp.int32)} for _ in range(2)]
+    if train_jdev is not None:
+        microbatches = jax.device_put(microbatches, train_jdev)
 
     # --- the job bodies as segmented workloads ---------------------------
     # inference: one prefill slice + 4 decode-token slices per release
@@ -69,30 +99,40 @@ def main() -> None:
     # API had to assume (DESIGN.md §6)
     max_slice = max(infer_prof.max_slice_ms, train_prof.max_slice_ms)
     eps_ms = 1.0 + max_slice * 1.2
-    ac = AdmissionController(mode="notify", wait_mode="suspend", n_cpus=1,
-                             epsilon_ms=eps_ms)
-    res = ac.try_admit(JobProfile.from_workload(
-        infer_prof, period_ms=1500, priority=50, margin=2.0))
-    print(f"inference admitted={res['admitted']} "
-          f"WCRT={res['wcrt'].get('infer', 0):.1f}ms "
+
+    # --- the cluster: admit→place→bind, then run preemptively ------------
+    cluster = ClusterExecutor(n_devices=n_devices, policy="notify",
+                              wait_mode="suspend", n_cpus=1,
+                              epsilon_ms=eps_ms)
+    res = cluster.submit(
+        JobProfile.from_workload(infer_prof, period_ms=1500, priority=50,
+                                 margin=2.0, device=infer_dev),
+        workload=infer_wl, n_iterations=100)
+    print(f"inference admitted={res['admitted']} on device "
+          f"{res['device']} WCRT={res['wcrt'].get('infer', 0):.1f}ms "
           f"(slices {[round(s, 1) for s in infer_prof.device[1].slice_ms]}"
           f"ms, max slice {max_slice:.1f}ms, epsilon {eps_ms:.0f}ms)")
-    ac.try_admit(JobProfile.from_workload(
-        train_prof, period_ms=500, priority=0, best_effort=True,
-        margin=1.5))
-
-    # --- run under the preemptive executor -------------------------------
-    ex = DeviceExecutor(mode="notify", wait_mode="suspend")
-    infer = RTJob("infer", infer_wl.bind(ex), period_s=1.5, priority=50,
-                  n_iterations=100)
-    train = RTJob("train", train_wl.bind(ex), period_s=0.5, priority=0,
-                  best_effort=True, n_iterations=100)
-    train.start(ex, stop_after_s=6.0)
+    res_train = cluster.submit(
+        JobProfile.from_workload(train_prof, period_ms=500, priority=0,
+                                 best_effort=True, margin=1.5,
+                                 device=train_dev),
+        workload=train_wl, n_iterations=100)
+    if res["job"] is None or res_train["job"] is None:
+        # report the refusal instead of crashing on job=None — nothing
+        # has started yet (submit was called without start=True)
+        cluster.shutdown()
+        refused = res if res["job"] is None else res_train
+        why = refused.get("error") or refused["wcrt"]
+        raise SystemExit(f"admission refused: {why}")
+    infer: RTJob = res["job"]
+    train: RTJob = res_train["job"]
+    train.start(cluster, stop_after_s=6.0)
     time.sleep(0.05)
-    infer.start(ex, stop_after_s=6.0)
+    infer.start(cluster, stop_after_s=6.0)
     infer.join(30)
     train.join(30)
-    ex.shutdown()
+    cluster.shutdown()
+    cluster.assert_migration_free()
 
     wcrt = res["wcrt"].get("infer", float("inf"))
     mort_ms = (infer.stats.mort or 0.0) * 1e3
@@ -104,6 +144,11 @@ def main() -> None:
     print(f"training (best-effort): {train.stats.completions} releases "
           f"alongside; longest observed slice {obs_slice:.1f}ms "
           f"(protective bound {eps_ms:.0f}ms)")
+    if n_devices > 1:
+        morts = {d: (round(v * 1e3, 1) if v is not None else None)
+                 for d, v in cluster.per_device_mort().items()}
+        print(f"per-device MORT (ms): {morts} "
+              f"(infer on {infer_dev}, train on {train_dev})")
     assert infer.stats.completions > 0, "inference never completed"
     assert mort_ms <= wcrt + 1e-6, "WCRT bound violated!"
     print("preemptive_serving OK")

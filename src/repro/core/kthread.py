@@ -68,6 +68,7 @@ class KernelThreadPolicy(SchedulingPolicy):
         self.update_left = 0.0       # epsilon remaining for in-flight rewrite
         self.next_poll = 0.0
         self._last_winners: Dict[int, Optional["Job"]] = {}
+        self._runtime_stale = False  # runlist evicted, awaiting next poll
 
     # ---- Algorithm 1 -------------------------------------------------------
     def _eligible(self, j: "Job") -> bool:
@@ -184,16 +185,27 @@ class KernelThreadPolicy(SchedulingPolicy):
         return pick_reserved(active_jobs)
 
     def runtime_apply(self, decision) -> bool:
-        changed = decision is not self.reserved
+        changed = decision is not self.reserved or self._runtime_stale
         self.reserved = decision
+        self._runtime_stale = False
         return changed
 
     def runtime_on_complete(self, job) -> None:
         if self.reserved is job:
+            # the reservation holder is gone, but Algorithm 1 only
+            # rewrites runlists from the kernel thread: other TSGs stay
+            # evicted until the next poll re-admits them.  Without this
+            # stale window a best-effort job could dispatch between the
+            # completion and the poll while a ready RT job is still
+            # blocked — a priority-inversion window the simulator does
+            # not have (found by tests/conformance.py).
             self.reserved = None
+            self._runtime_stale = True
 
     def runtime_admitted(self, job) -> bool:
-        return self.reserved is job or self.reserved is None
+        if self.reserved is job:
+            return True
+        return self.reserved is None and not self._runtime_stale
 
 
 # The busy-mode RTA is multi-device sound: on n_devices > 1 it resolves

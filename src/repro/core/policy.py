@@ -153,7 +153,21 @@ class Alg2State:
 
     def remove(self, job) -> bool:
         """end() IOCTL (lines 18-25).  Returns True iff task_running
-        membership changed."""
+        membership changed.
+
+        A caller that never reached task_running (cancelled, or its
+        segment body errored while still in task_pending — the runtime's
+        ``device_segment.__exit__`` still issues the end() call) is just
+        dropped from task_pending: the paper's handover (lines 19-22)
+        assumes the *departing* task held the runlist, and running it for
+        a pending caller would admit a second RT program next to the
+        current holder (found by tests/test_policy_fuzz.py; unreachable
+        in the simulator, where ge pieces only execute once admitted)."""
+        if job not in self.running:
+            if job in self.pending:
+                self.pending.remove(job)
+                job.gpu_pending = False
+            return False
         before = list(self.running)
         rt_pend = [j for j in self.pending if job_is_rt(j)]
         if rt_pend:

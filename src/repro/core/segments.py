@@ -344,9 +344,29 @@ class SegmentedWorkload:
         return sum(1 for e in self._entries if e.kind == "device")
 
     # -- runtime -----------------------------------------------------------
-    def bind(self, executor) -> Callable:
-        """An ``RTJob`` body running this workload under ``executor``."""
+    def bind(self, executor, device: Optional[int] = None) -> Callable:
+        """An ``RTJob`` body running this workload under ``executor``.
+
+        ``device`` pins the job to one accelerator of a multi-device
+        platform: the body binds ``job.device`` on first run (and a
+        ``ClusterExecutor`` routes every dispatch by it), while a plain
+        ``DeviceExecutor`` must *be* that device (``device_index``
+        checked).  A job already bound elsewhere raises — the
+        migration-free invariant (DESIGN.md §7)."""
         def body(job, it):
+            if device is not None:
+                bound = getattr(job, "device", None)
+                if bound is None:
+                    job.device = device
+                elif bound != device:
+                    raise RuntimeError(
+                        f"job {job.name!r} is bound to device {bound}, "
+                        f"workload is pinned to device {device}")
+                ex_dev = getattr(executor, "device_index", None)
+                if ex_dev is not None and ex_dev != device:
+                    raise RuntimeError(
+                        f"workload pinned to device {device} cannot run "
+                        f"on executor of device {ex_dev}")
             self.run(executor, job)
         return body
 

@@ -11,10 +11,19 @@ window (DESIGN.md §6).
 
   PYTHONPATH=src python -m repro.launch.serve --arch smollm-135m --reduced \
       --batch 4 --prompt-len 32 --decode 64
+
+``--n-devices N`` (N > 1) switches to disaggregated serving: a prefill
+pool on device 0 and a decode pool on device N-1, each driven by its own
+preemptive ``DeviceExecutor`` inside a ``ClusterExecutor`` whose
+placement-aware admission pins the pools to their devices (DESIGN.md
+§7).  The KV cache is handed off between pools with an explicit
+``device_put``.  On a CPU host, expose devices with
+``XLA_FLAGS=--xla_force_host_platform_device_count=N``.
 """
 from __future__ import annotations
 
 import argparse
+import threading
 import time
 
 import jax
@@ -27,10 +36,17 @@ from ..models import transformer
 
 
 class InferenceEngine:
-    def __init__(self, cfg, params=None, max_len: int = 256, seed: int = 0):
+    def __init__(self, cfg, params=None, max_len: int = 256, seed: int = 0,
+                 device=None):
+        """``device`` (a ``jax.Device``) places the params — and therefore
+        every jitted program — on one accelerator of a multi-device host;
+        None keeps the platform default."""
         self.cfg = cfg
+        self.device = device
         self.params = params if params is not None else \
             transformer.init_params(cfg, jax.random.PRNGKey(seed))
+        if device is not None:
+            self.params = jax.device_put(self.params, device)
         self.max_len = max_len
         self._prefill = jax.jit(
             lambda p, t: transformer.prefill(cfg, p, t, max_len))
@@ -43,9 +59,21 @@ class InferenceEngine:
 
     def prefill_batch(self, tokens: jax.Array):
         """tokens: (B, S).  Returns last-token logits."""
+        if self.device is not None:
+            tokens = jax.device_put(tokens, self.device)
         logits, self.cache, self.pos = self._prefill(self.params, tokens)
         self.last_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
         return logits
+
+    def adopt_state(self, cache, pos, last_tok) -> None:
+        """Take over another engine's KV state — the prefill→decode
+        handoff of disaggregated serving.  The state is ``device_put``
+        onto this engine's device (the explicit cross-device transfer
+        the placement layer charges to the handoff, not to a segment)."""
+        if self.device is not None:
+            cache, pos, last_tok = jax.device_put(
+                (cache, pos, last_tok), self.device)
+        self.cache, self.pos, self.last_tok = cache, pos, last_tok
 
     # -- GPU-access segments (executor-dispatched) ----------------------
     def prefill_segment(self, tokens: jax.Array) -> SlicedOp:
@@ -97,6 +125,115 @@ class InferenceEngine:
         return self.decode_segment(n).run()
 
 
+def run_disaggregated(cfg, args) -> None:
+    """Prefill and decode pools on separate devices: the classic
+    disaggregated-serving scenario, on the cluster runtime.  Each pool
+    is an RT job pinned to its device; admission runs the cross-device
+    analysis on the pinned placements before either job may start."""
+    from ..sched import ClusterExecutor, JobProfile
+
+    n = args.n_devices
+    devs = jax.devices()
+    if len(devs) < n:
+        raise SystemExit(
+            f"--n-devices {n} but only {len(devs)} device(s) visible; "
+            f"set XLA_FLAGS=--xla_force_host_platform_device_count={n}")
+    prefill_dev, decode_dev = 0, n - 1
+    max_len = args.prompt_len + args.decode + 8
+    pre = InferenceEngine(cfg, max_len=max_len, device=devs[prefill_dev])
+    dec = InferenceEngine(cfg, params=pre.params, max_len=max_len,
+                          device=devs[decode_dev])
+    toks = jax.random.randint(jax.random.PRNGKey(1),
+                              (args.batch, args.prompt_len), 0,
+                              cfg.vocab_size)
+
+    # warm-up + nominal WCETs for the admission profiles (margin below)
+    pre.prefill_batch(toks)
+    jax.block_until_ready(pre.cache)
+    dec.adopt_state(pre.cache, pre.pos, pre.last_tok)
+    dec.decode_chunk(2)
+    t0 = time.perf_counter()
+    pre.prefill_batch(toks)
+    jax.block_until_ready(pre.cache)
+    prefill_ms = (time.perf_counter() - t0) * 1e3
+    dec.adopt_state(pre.cache, pre.pos, pre.last_tok)
+    t0 = time.perf_counter()
+    jax.block_until_ready(dec.decode_chunk(4))
+    decode_ms = (time.perf_counter() - t0) * 1e3 / 4 * args.decode
+
+    cluster = ClusterExecutor(n_devices=n, policy="ioctl",
+                              wait_mode="suspend", n_cpus=2,
+                              epsilon_ms=1.0)
+    handoff = threading.Event()
+    out: dict = {}
+    times: dict = {}
+
+    def prefill_body(job, it):
+        t = time.perf_counter()
+        with cluster.device_segment(job):
+            cluster.run_sliced(job, pre.prefill_segment(toks))
+        dec.adopt_state(pre.cache, pre.pos, pre.last_tok)
+        times["prefill_ms"] = (time.perf_counter() - t) * 1e3
+        handoff.set()
+
+    def decode_body(job, it):
+        if not handoff.wait(timeout=120):
+            raise RuntimeError("prefill pool never handed off")
+        t = time.perf_counter()
+        with cluster.device_segment(job):
+            out["tokens"] = cluster.run_sliced(
+                job, dec.decode_segment(args.decode, slice_tokens=4))
+        times["decode_ms"] = (time.perf_counter() - t) * 1e3
+
+    period = max(prefill_ms + decode_ms, 1.0) * 20
+    m = 3.0  # one observation is not a WCET
+    r_pre = cluster.submit(
+        JobProfile("prefill", [1.0], [(1.0, prefill_ms * m)],
+                   period_ms=period, priority=40, cpu=0,
+                   device=prefill_dev),
+        body=prefill_body)
+    r_dec = cluster.submit(
+        JobProfile("decode", [1.0], [(1.0, decode_ms * m)],
+                   period_ms=period, priority=50, cpu=1,
+                   device=decode_dev),
+        body=decode_body)
+    # check both admissions before starting either pool: a refusal must
+    # not leave the other pool's thread running behind an exception
+    for tag, r in (("prefill", r_pre), ("decode", r_dec)):
+        if not r["admitted"]:
+            cluster.shutdown()
+            raise SystemExit(f"{tag} pool refused admission: "
+                             f"{r.get('error') or r['wcrt']}")
+    print(f"admission: prefill -> device {r_pre['device']} "
+          f"({r_pre['via']}), decode -> device {r_dec['device']} "
+          f"({r_dec['via']})")
+    assert r_pre["device"] != r_dec["device"]
+    r_pre["job"].start(cluster)
+    r_dec["job"].start(cluster)
+    try:
+        cluster.join(180)
+    finally:
+        cluster.shutdown()
+    cluster.assert_migration_free()
+
+    if "tokens" not in out:
+        raise SystemExit("decode pool produced no tokens "
+                         "(handoff or pool failure — see traceback above)")
+    toks_out = out["tokens"]
+    per_tok = times["decode_ms"] / args.decode
+    print(f"prefill pool (device {prefill_dev}): "
+          f"{args.batch}x{args.prompt_len} in {times['prefill_ms']:.1f} ms")
+    print(f"decode pool (device {decode_dev}): {args.decode} tokens, "
+          f"{per_tok:.2f} ms/tok "
+          f"({args.batch * 1e3 / per_tok / 1e3:.1f} tok/s aggregate)")
+    morts = cluster.per_device_mort()
+    print("per-device MORT (s):",
+          {d: (round(v, 3) if v is not None else None)
+           for d, v in morts.items()})
+    print("sample:", np.asarray(toks_out[0, :16]))
+    print("disaggregated serve OK")
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True)
@@ -104,10 +241,16 @@ def main() -> None:
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--decode", type=int, default=64)
+    ap.add_argument("--n-devices", type=int, default=1,
+                    help="N>1: disaggregated prefill/decode pools on "
+                         "separate devices via ClusterExecutor")
     args = ap.parse_args()
 
     entry = get(args.arch)
     cfg = entry.reduced() if args.reduced else entry.config()
+    if args.n_devices > 1:
+        run_disaggregated(cfg, args)
+        return
     eng = InferenceEngine(cfg, max_len=args.prompt_len + args.decode + 8)
     toks = jax.random.randint(jax.random.PRNGKey(1),
                               (args.batch, args.prompt_len), 0,

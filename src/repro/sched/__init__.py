@@ -1,11 +1,13 @@
 from .admission import AdmissionController, JobProfile
 from .checkpointer import (AsyncCheckpointer, latest_carry, latest_step,
                            restore, save, save_carry)
-from .executor import DeviceExecutor
+from .cluster import ClusterExecutor
+from .executor import DeviceExecutor, ExecutorTrace, TraceEvent
 from .fault import FaultTolerantLoop, Heartbeat, StallError, with_retry
 from .job import RTJob
 
 __all__ = ["AdmissionController", "JobProfile", "AsyncCheckpointer",
            "latest_step", "restore", "save", "save_carry", "latest_carry",
-           "DeviceExecutor", "FaultTolerantLoop", "Heartbeat", "StallError",
+           "ClusterExecutor", "DeviceExecutor", "ExecutorTrace",
+           "TraceEvent", "FaultTolerantLoop", "Heartbeat", "StallError",
            "with_retry", "RTJob"]

@@ -103,7 +103,9 @@ class AdmissionController:
 
     def try_admit(self, prof: JobProfile) -> dict:
         """Returns {admitted: bool, wcrt: {...}, via: "default"|"audsley"}.
-        Best-effort jobs are always admitted (they have no guarantee)."""
+        Best-effort jobs are always admitted (they have no guarantee) —
+        but still validated, or an unbuildable profile would poison every
+        later ``_taskset()`` build."""
         if not (0 <= prof.device < self.n_devices):
             # refuse, don't crash: a bad profile must not take down the
             # admission path (Taskset validation would raise), nor may it
@@ -111,11 +113,22 @@ class AdmissionController:
             return {"admitted": False, "via": None, "wcrt": {},
                     "error": f"device {prof.device} out of range for "
                              f"{self.n_devices}-device platform"}
+        if any(p.name == prof.name for p in self.admitted):
+            # a duplicate name would silently merge WCRT dict entries
+            return {"admitted": False, "via": None, "wcrt": {},
+                    "error": f"job name {prof.name!r} already admitted"}
+        try:
+            # same refuse-don't-crash rule for every other profile defect
+            # Taskset validation catches (colliding priorities, bad cpu):
+            # a live gatekeeper must return a refusal, not raise
+            ts = self._taskset(prof)
+        except ValueError as e:
+            return {"admitted": False, "via": None, "wcrt": {},
+                    "error": str(e)}
         if prof.best_effort:
             self.admitted.append(prof)
             return {"admitted": True, "via": "best_effort", "wcrt": {}}
         rta = self.rta
-        ts = self._taskset(prof)
         if schedulable(ts, rta):
             self.admitted.append(prof)
             return {"admitted": True, "via": "default",
@@ -129,3 +142,12 @@ class AdmissionController:
                         "gpu_priorities": {t.name: t.gpu_priority
                                            for t in assigned.tasks}}
         return {"admitted": False, "via": None, "wcrt": rta(ts)}
+
+    def release(self, name: str) -> bool:
+        """Retire an admitted profile (its job left the platform) so its
+        demand no longer charges future admissions."""
+        for i, p in enumerate(self.admitted):
+            if p.name == name:
+                del self.admitted[i]
+                return True
+        return False

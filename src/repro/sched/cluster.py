@@ -1,0 +1,327 @@
+"""Multi-device runtime: one preemptive executor per accelerator, behind
+a placement-aware admission gate (DESIGN.md §7).
+
+``ClusterExecutor`` mirrors the simulator's one-policy-per-device
+structure on the live side: it owns one :class:`DeviceExecutor` (and one
+``SchedulingPolicy`` instance, resolved per device from the
+`core/policy` registry) for every device of an N-device platform, and an
+:class:`AdmissionController` configured for that platform as the
+cluster-wide gatekeeper — the PR 2 cross-device busy-wait fixed point
+(`core/crossfix.py`) finally feeds a real multi-executor runtime.
+
+The placement layer decides *where* an arriving workload runs:
+
+  * ``pinned``       — honor ``JobProfile.device`` verbatim;
+  * ``round_robin``  — rotate over devices, next-free-first;
+  * ``least_loaded`` — try devices in increasing admitted-GPU-utilization
+    order.
+
+Every candidate placement is re-tested by the cross-device admission
+analysis *before* committing (``try_admit`` on the profile rebound to
+the candidate device), and admit→place→bind happens in one transaction
+under the cluster lock: a job only ever exists bound to the device its
+admission was proven on.  The binding is immutable — the migration-free
+invariant — so the per-device RTAs' assumption that a task's device
+segments all execute on ``task.device`` holds by construction, and
+``assert_migration_free()`` re-verifies it from the executor traces.
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+from typing import Dict, List, Optional, Sequence, Union
+
+from ..core.policy import LEGACY_MODES
+from .admission import AdmissionController, JobProfile
+from .executor import DeviceExecutor, ExecutorTrace
+from .job import RTJob
+
+PLACEMENTS = ("pinned", "round_robin", "least_loaded")
+
+
+class ClusterExecutor:
+    """N preemptive device executors + placement-aware admission.
+
+    ``policy`` is a registry name applied to every device, or a
+    per-device sequence of names (one policy instance is built per
+    device either way).  ``admission`` overrides the internally built
+    :class:`AdmissionController` (required when per-device approaches
+    are heterogeneous, since one RTA must price the whole platform).
+    ``trace=True`` attaches an :class:`ExecutorTrace` to every executor
+    (the conformance harness's input)."""
+
+    def __init__(self, n_devices: int,
+                 policy: Union[str, Sequence[str]] = "ioctl",
+                 wait_mode: str = "suspend",
+                 poll_interval: float = 0.001,
+                 n_cpus: int = 4, epsilon_ms: float = 1.0,
+                 placement: str = "pinned",
+                 try_gpu_priorities: bool = True,
+                 trace: bool = False,
+                 admission: Optional[AdmissionController] = None):
+        if n_devices < 1:
+            raise ValueError("a cluster needs at least one device")
+        if placement not in PLACEMENTS:
+            raise ValueError(f"unknown placement {placement!r} "
+                             f"(available: {PLACEMENTS})")
+        names = ([policy] * n_devices if isinstance(policy, str)
+                 else list(policy))
+        if len(names) != n_devices:
+            raise ValueError(f"{len(names)} policies for "
+                             f"{n_devices} devices")
+        names = [LEGACY_MODES.get(n, n) for n in names]
+        self.n_devices = n_devices
+        self.placement = placement
+        self.executors: List[DeviceExecutor] = [
+            DeviceExecutor(policy=name, wait_mode=wait_mode,
+                           poll_interval=poll_interval, device_index=d,
+                           trace=ExecutorTrace() if trace else None)
+            for d, name in enumerate(names)]
+        if admission is None:
+            if len(set(names)) != 1:
+                raise ValueError(
+                    "heterogeneous per-device approaches need an explicit "
+                    "AdmissionController (one RTA must price the platform)")
+            # the executors may have coerced wait_mode (kthread forces
+            # busy); price admission with the mode actually enforced
+            admission = AdmissionController(
+                mode=names[0], wait_mode=self.executors[0].wait_mode,
+                n_cpus=n_cpus, epsilon_ms=epsilon_ms,
+                try_gpu_priorities=try_gpu_priorities,
+                n_devices=n_devices)
+        if admission.n_devices != n_devices:
+            raise ValueError(
+                f"admission controller models {admission.n_devices} "
+                f"devices, cluster has {n_devices}")
+        self.admission = admission
+        self._lock = threading.Lock()     # admit→place→bind transaction
+        self._bindings: Dict[int, int] = {}   # job.uid -> device
+        self._jobs: List[RTJob] = []
+        self._rr = 0                      # round-robin cursor
+
+    # ------------------------------------------------------------------
+    # placement
+    # ------------------------------------------------------------------
+    def _admitted_load(self, device: int) -> float:
+        """GPU utilization already admitted onto ``device``."""
+        load = 0.0
+        for p in self.admission.admitted:
+            if p.device == device:
+                load += sum(m + e for m, e in
+                            p.device_segments_ms) / p.period_ms
+        return load
+
+    def candidates(self, prof: JobProfile,
+                   strategy: Optional[str] = None) -> List[int]:
+        """Device try-order for ``prof`` under ``strategy`` (defaults to
+        the cluster's placement).  ``pinned`` honors ``prof.device``;
+        the others return every device, best candidate first — each is
+        admission-tested before committing (see :meth:`submit`)."""
+        s = strategy or self.placement
+        if s == "pinned":
+            return [prof.device]
+        if s == "round_robin":
+            return [(self._rr + i) % self.n_devices
+                    for i in range(self.n_devices)]
+        if s == "least_loaded":
+            return sorted(range(self.n_devices),
+                          key=lambda d: (self._admitted_load(d), d))
+        raise ValueError(f"unknown placement {s!r}")
+
+    # ------------------------------------------------------------------
+    # the admit→place→bind transaction
+    # ------------------------------------------------------------------
+    def submit(self, prof: JobProfile, workload=None, body=None, *,
+               strategy: Optional[str] = None, n_iterations: int = 1,
+               start: bool = False,
+               stop_after_s: Optional[float] = None) -> dict:
+        """Admit → place → bind in one transaction.
+
+        For each candidate device (in placement order) the profile is
+        rebound to that device and the full cross-device admission test
+        re-run; the first admitted placement wins, and the job is built
+        already bound to it (``RTJob.device`` set, binding recorded) —
+        there is no window where an admitted job is unplaced or a placed
+        job unadmitted.  Returns the admission dict extended with
+        ``device`` and ``job`` (both None when every placement was
+        refused; the dict then carries the last refusal).
+
+        Exactly one of ``workload`` (a ``core.segments.SegmentedWorkload``,
+        bound to the winning device) or ``body`` (a plain RTJob body)
+        must be given.  ``start=True`` releases the job immediately."""
+        if (workload is None) == (body is None):
+            raise ValueError("pass exactly one of workload= or body=")
+        with self._lock:
+            last: Optional[dict] = None
+            for dev in self.candidates(prof, strategy):
+                cand = (prof if prof.device == dev
+                        else dataclasses.replace(prof, device=dev))
+                res = self.admission.try_admit(cand)
+                if not res["admitted"]:
+                    last = res
+                    continue
+                job_body = (workload.bind(self, device=dev)
+                            if workload is not None else body)
+                job = RTJob(prof.name, job_body,
+                            period_s=prof.period_ms / 1e3,
+                            priority=prof.priority,
+                            deadline_s=(prof.deadline_ms or
+                                        prof.period_ms) / 1e3,
+                            best_effort=prof.best_effort,
+                            n_iterations=n_iterations, device=dev)
+                self._bindings[job.uid] = dev
+                self._jobs.append(job)
+                if strategy == "round_robin" or (
+                        strategy is None and
+                        self.placement == "round_robin"):
+                    self._rr = (dev + 1) % self.n_devices
+                out = dict(res, device=dev, job=job)
+                if start:
+                    job.start(self, stop_after_s)
+                return out
+            out = dict(last or {"admitted": False, "via": None,
+                                "wcrt": {}})
+            out.update(device=None, job=None)
+            return out
+
+    def bind_job(self, job: RTJob, device: Optional[int] = None
+                 ) -> DeviceExecutor:
+        """Pin an externally built job to a device (``submit`` does this
+        automatically; use this for jobs that bypass admission, e.g.
+        microbenchmarks).  Rebinding to a different device raises — the
+        migration-free invariant."""
+        dev = job.device if device is None else device
+        if dev is None:
+            raise ValueError(f"job {job.name!r} has no device: pass "
+                             "device= or set RTJob(device=...)")
+        if not (0 <= dev < self.n_devices):
+            raise ValueError(f"device {dev} out of range for "
+                             f"{self.n_devices}-device cluster")
+        with self._lock:
+            prev = self._bindings.get(job.uid)
+            if prev is not None and prev != dev:
+                raise RuntimeError(
+                    f"migration-free invariant: job {job.name!r} is bound "
+                    f"to device {prev}, refusing rebind to {dev}")
+            self._bindings[job.uid] = dev
+            if job not in self._jobs:
+                self._jobs.append(job)
+        job.device = dev
+        return self.executors[dev]
+
+    # ------------------------------------------------------------------
+    # executor protocol (routed by the job's binding) — an RTJob can be
+    # started on the cluster, and SegmentedWorkload.run() dispatches
+    # through these without knowing the platform is multi-device
+    # ------------------------------------------------------------------
+    def executor_for(self, device: int) -> DeviceExecutor:
+        if not (0 <= device < self.n_devices):
+            raise ValueError(f"device {device} out of range for "
+                             f"{self.n_devices}-device cluster")
+        return self.executors[device]
+
+    def _route(self, job: RTJob) -> DeviceExecutor:
+        dev = self._bindings.get(job.uid)
+        if dev is None:
+            return self.bind_job(job)   # adopts job.device (raises if unset)
+        if job.device is not None and job.device != dev:
+            raise RuntimeError(
+                f"migration-free invariant: job {job.name!r} bound to "
+                f"device {dev} now claims device {job.device}")
+        return self.executors[dev]
+
+    def on_job_start(self, job: RTJob) -> None:
+        self._route(job).on_job_start(job)
+
+    def on_job_complete(self, job: RTJob) -> None:
+        self._route(job).on_job_complete(job)
+
+    def device_segment(self, job: RTJob):
+        return self._route(job).device_segment(job)
+
+    def run(self, job: RTJob, program, *args, **kw):
+        return self._route(job).run(job, program, *args, **kw)
+
+    def run_sliced(self, job: RTJob, op, **kw):
+        return self._route(job).run_sliced(job, op, **kw)
+
+    # ------------------------------------------------------------------
+    # cluster-wide stats / invariants
+    # ------------------------------------------------------------------
+    @property
+    def traces(self) -> List[Optional[ExecutorTrace]]:
+        return [ex.trace for ex in self.executors]
+
+    def per_device_mort(self) -> Dict[int, Optional[float]]:
+        """Max observed response time per device (s), ``None`` for a
+        device with no completions yet (same no-silent-0.0 rule as
+        ``JobStats.mort``)."""
+        out: Dict[int, Optional[float]] = {d: None
+                                           for d in range(self.n_devices)}
+        for job in self._jobs:
+            m = job.stats.mort
+            d = self._bindings[job.uid]
+            if m is not None and (out[d] is None or m > out[d]):
+                out[d] = m
+        return out
+
+    def stats(self) -> dict:
+        return {
+            "per_device_mort": self.per_device_mort(),
+            "dispatches": {d: ex.dispatches
+                           for d, ex in enumerate(self.executors)},
+            "updates": {d: len(ex.update_times)
+                        for d, ex in enumerate(self.executors)},
+            "jobs": {d: sorted(j.name for j in self._jobs
+                               if self._bindings[j.uid] == d)
+                     for d in range(self.n_devices)},
+        }
+
+    def assert_migration_free(self) -> None:
+        """Every job's dispatches all happened on its bound device.
+        Checked against the executor traces when tracing is on; the
+        binding table (which refuses rebinds) is re-verified always."""
+        for job in self._jobs:
+            bound = self._bindings[job.uid]
+            if job.device != bound:
+                raise AssertionError(
+                    f"job {job.name!r}: binding table says device "
+                    f"{bound}, job says {job.device}")
+        # dispatches are keyed by job uid, not name: a released name may
+        # legitimately be resubmitted onto another device as a new job
+        seen: Dict[int, int] = {}
+        for ex in self.executors:
+            if ex.trace is None:
+                continue
+            for e in ex.trace.events:
+                if e.event != "dispatch":
+                    continue
+                uid = e.info.get("uid")
+                prev = seen.setdefault(uid, e.device)
+                if prev != e.device:
+                    raise AssertionError(
+                        f"job {e.job!r} dispatched on devices {prev} "
+                        f"and {e.device} — migration detected")
+
+    # ------------------------------------------------------------------
+    def release(self, name: str) -> bool:
+        """Retire a finished job: its admission profile stops charging
+        future placements and the name becomes submittable again (the
+        retired job also leaves the cluster's stats/invariant views, so
+        a resubmitted name cannot read as a migration).  Without this, a
+        completed job's demand would inflate every later admission test
+        and its name would be refused as a duplicate forever.  The
+        caller keeps the RTJob object (and its stats)."""
+        with self._lock:
+            for job in [j for j in self._jobs if j.name == name]:
+                self._jobs.remove(job)
+                self._bindings.pop(job.uid, None)
+            return self.admission.release(name)
+
+    def join(self, timeout: Optional[float] = None) -> None:
+        for job in self._jobs:
+            job.join(timeout)
+
+    def shutdown(self) -> None:
+        for ex in self.executors:
+            ex.shutdown()

@@ -37,6 +37,7 @@ from __future__ import annotations
 
 import threading
 import time
+from dataclasses import dataclass, field
 from typing import Callable, List, Optional, Union
 
 import jax
@@ -45,14 +46,55 @@ from ..core.policy import (LEGACY_MODES, SchedulingPolicy, make_policy)
 from .job import RTJob
 
 
+@dataclass(frozen=True)
+class TraceEvent:
+    """One executor event: ``start``/``complete`` (job lifecycle),
+    ``preempt``/``resume``/``dispatch`` (admission at a program boundary),
+    or ``update`` (a runlist rewrite, with the policy-state snapshot the
+    conformance harness replays — DESIGN.md §7)."""
+    t: float                  # time.monotonic() at emission
+    device: int               # DeviceExecutor.device_index
+    event: str
+    job: str                  # job name ("" for a poll update clearing it)
+    info: dict = field(default_factory=dict)
+
+
+class ExecutorTrace:
+    """Lightweight event recorder attached to a ``DeviceExecutor``.
+
+    Every emission happens under the executor's runlist mutex, so the
+    event order *is* the order the policy state machine saw — which is
+    what lets ``tests/conformance.py`` replay the recorded update
+    sequence through a fresh ``Alg2State``/``pick_reserved`` and through
+    the simulator, and assert decision-for-decision agreement."""
+
+    def __init__(self):
+        self.events: List[TraceEvent] = []
+
+    def emit(self, device: int, event: str, job: str = "", **info) -> None:
+        self.events.append(TraceEvent(time.monotonic(), device, event,
+                                      job, info))
+
+    def of(self, *events: str) -> List[TraceEvent]:
+        return [e for e in self.events if e.event in events]
+
+    def jobs(self) -> List[str]:
+        return sorted({e.job for e in self.events if e.event == "start"})
+
+
 class DeviceExecutor:
     def __init__(self, mode: Optional[str] = None,
                  wait_mode: str = "suspend",
                  poll_interval: float = 0.001,
-                 policy: Union[str, SchedulingPolicy, None] = None):
+                 policy: Union[str, SchedulingPolicy, None] = None,
+                 device_index: int = 0,
+                 trace: Optional[ExecutorTrace] = None):
         """``policy`` is a registry name (or instance); the historical
         ``mode`` argument ("notify"/"poll"/"unmanaged") keeps working and
-        maps onto the registry names."""
+        maps onto the registry names.  ``device_index`` names the
+        accelerator this executor drives on a multi-device platform
+        (``sched.cluster.ClusterExecutor`` owns one executor per device);
+        ``trace`` attaches an :class:`ExecutorTrace` event recorder."""
         assert wait_mode in ("busy", "suspend")
         if policy is None:
             policy = mode if mode is not None else "ioctl"
@@ -71,6 +113,8 @@ class DeviceExecutor:
             self.policy_name, self.policy_name)
         self.wait_mode = wait_mode
         self.poll_interval = poll_interval
+        self.device_index = device_index
+        self.trace = trace
         self._mutex = threading.Lock()      # runlist-update rt_mutex
         self._cv = threading.Condition(self._mutex)
         self._active: List[RTJob] = []       # jobs currently in a release
@@ -107,12 +151,15 @@ class DeviceExecutor:
         with self._mutex:
             self._active.append(job)
             self.policy.runtime_on_start(job)
+            self._emit("start", job, priority=job.priority,
+                       device_priority=job.device_priority, rt=job.is_rt)
 
     def on_job_complete(self, job: RTJob) -> None:
         with self._mutex:
             if job in self._active:
                 self._active.remove(job)
             self.policy.runtime_on_complete(job)
+            self._emit("complete", job)
             self._cv.notify_all()
 
     def shutdown(self) -> None:
@@ -134,6 +181,11 @@ class DeviceExecutor:
                 if self.policy.runtime_apply(decision):
                     self._cv.notify_all()
                     self.update_times.append(time.perf_counter() - t0)
+                    self._emit(
+                        "update", decision, which="poll",
+                        reserved=decision.name if decision else None,
+                        candidates=tuple((j.name, j.device_priority)
+                                         for j in rt))
             time.sleep(self.poll_interval)
 
     # ------------------------------------------------------------------
@@ -143,15 +195,33 @@ class DeviceExecutor:
     # ------------------------------------------------------------------
     def _ioctl_add(self, job: RTJob) -> None:
         t0 = time.perf_counter()
-        self.policy.runtime_segment_begin(job)
+        rewrote = self.policy.runtime_segment_begin(job)
         self.update_times.append(time.perf_counter() - t0)
+        self._emit_alg2("begin", job, rewrote)
         self._cv.notify_all()
 
     def _ioctl_remove(self, job: RTJob) -> None:
         t0 = time.perf_counter()
-        self.policy.runtime_segment_end(job)
+        rewrote = self.policy.runtime_segment_end(job)
         self.update_times.append(time.perf_counter() - t0)
+        self._emit_alg2("end", job, rewrote)
         self._cv.notify_all()
+
+    # ------------------------------------------------------------------
+    # trace emission (no-ops when no ExecutorTrace is attached); every
+    # call site holds self._mutex, so the event order is the order the
+    # policy state machine saw
+    # ------------------------------------------------------------------
+    def _emit(self, event: str, job: Optional[RTJob], **info) -> None:
+        if self.trace is not None:
+            self.trace.emit(self.device_index, event,
+                            job.name if job is not None else "", **info)
+
+    def _emit_alg2(self, which: str, job: RTJob, rewrote) -> None:
+        if self.trace is not None:
+            self._emit("update", job, which=which, rewrote=bool(rewrote),
+                       running=tuple(j.name for j in self.task_running),
+                       pending=tuple(j.name for j in self.task_pending))
 
     # ------------------------------------------------------------------
     # admission check used at every program boundary
@@ -160,16 +230,38 @@ class DeviceExecutor:
         return self.policy.runtime_admitted(job)
 
     def _wait_admitted(self, job: RTJob) -> None:
+        # "preempt" is emitted on the first denied check, "resume" when
+        # admission comes back, "dispatch" at every admission pass — all
+        # under the mutex, so a dispatch event is totally ordered against
+        # the runlist updates that justified it (conformance harness).
+        blocked = False
         if self.wait_mode == "busy":
             while True:
                 with self._mutex:
                     if self._admitted(job):
+                        if blocked:
+                            self._emit("resume", job)
+                        self._emit("dispatch", job, uid=job.uid)
                         return
-                time.sleep(0)  # busy-wait (yielding spin)
+                    if not blocked:
+                        blocked = True
+                        self._emit("preempt", job)
+                # busy-wait: a sub-poll-interval yield, not sleep(0) — a
+                # zero-sleep spin churns the GIL hard enough to starve
+                # the *running* job's thread on CPython, which shows up
+                # as cross-device interference a real spinning core
+                # would never cause
+                time.sleep(0.0005)
         else:
             with self._cv:
                 while not self._admitted(job):
+                    if not blocked:
+                        blocked = True
+                        self._emit("preempt", job)
                     self._cv.wait(timeout=0.05)
+                if blocked:
+                    self._emit("resume", job)
+                self._emit("dispatch", job, uid=job.uid)
 
     # ------------------------------------------------------------------
     # public API

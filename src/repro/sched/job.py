@@ -64,17 +64,28 @@ class RTJob:
     def __init__(self, name: str, body: Callable, period_s: float,
                  priority: int, deadline_s: Optional[float] = None,
                  device_priority: Optional[int] = None,
-                 best_effort: bool = False, n_iterations: int = 1):
+                 best_effort: bool = False, n_iterations: int = 1,
+                 device: Optional[int] = None):
         self.uid = next(RTJob._uid)
         self.name = name
         self.body = body
         self.period_s = period_s
         self.deadline_s = deadline_s or period_s
         self.priority = BEST_EFFORT if best_effort else priority
-        self.device_priority = (self.priority if device_priority is None
+        # a best-effort job has no real-time priority on either side of
+        # the platform: an explicit device_priority is ignored for BE
+        # jobs, or Alg2State.top_running could rank a BE member above an
+        # arriving RT job and push the RT job to task_pending behind
+        # best-effort work (found by tests/test_policy_fuzz.py)
+        self.device_priority = (self.priority
+                                if device_priority is None or best_effort
                                 else device_priority)
         self.best_effort = best_effort
         self.n_iterations = n_iterations
+        # accelerator this job's device segments are bound to; None until
+        # placed (ClusterExecutor.submit / bind_job set it, and the
+        # migration-free invariant keeps it fixed for the job's lifetime)
+        self.device = device
         self.state = JobState.IDLE
         self.stats = JobStats()
         self.release_time = 0.0

@@ -1,0 +1,443 @@
+"""Simulator ↔ executor trace-conformance harness (DESIGN.md §2/§7).
+
+DESIGN.md §2 claims the simulator and the runtime executor cannot drift
+apart because both drive the *same* policy state machines.  This module
+turns that claim into executable invariants.  A scenario is a list of
+:class:`JobSpec`s (release offset, priority, device, alternating
+host/device segments, all in abstract **ticks**); the harness
+
+  * runs it on a live ``ClusterExecutor`` (one tick = ``TICK_S`` wall
+    seconds, device programs are timed sleeps) with ``ExecutorTrace``
+    recording every dispatch/preempt/resume/complete and every runlist
+    update with its policy-state snapshot;
+  * replays the identical timing through the discrete-event
+    ``Simulator`` (one tick = one simulated ms) under recording
+    subclasses of the same policies;
+
+and checks, per device:
+
+  1. **priority-inversion-freedom** — no job dispatches while a
+     higher-device-priority real-time job is blocked (``preempt``-ed
+     without a later ``resume``);
+  2. **Algorithm 1/2 decision agreement** — the executor's recorded
+     update sequence, replayed through a *fresh* ``Alg2State`` /
+     ``pick_reserved``, reproduces every recorded rewrote-flag and
+     running/pending/reserved snapshot;
+  3. **simulator agreement** — the per-device sequence of admission
+     decisions (Alg2 ``(which, job)`` updates under ioctl, reservation
+     transitions under kthread) is identical between the live run and
+     the simulator replay;
+  4. **MORT ≤ WCRT** — measured response times (converted to ticks)
+     stay below the bounds the admission analysis computed for the same
+     platform (the cross-device fixed point on ``n_devices > 1`` busy
+     platforms).
+
+Scenario timings must be well separated (≥ 2 ticks between decision
+points) so wall-clock jitter cannot reorder events; the stock scenarios
+below obey this.
+"""
+from __future__ import annotations
+
+import math
+import time
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+from repro.core import Alg2State, GpuSegment, Task, Taskset, pick_reserved
+from repro.core.ioctl import IoctlPolicy
+from repro.core.kthread import KernelThreadPolicy
+from repro.core.simulator import Simulator
+from repro.sched import ClusterExecutor, JobProfile
+
+# one tick = 25 ms of wall time on the executor, 1 ms in the simulator
+TICK_S = 0.025
+
+
+@dataclass(frozen=True)
+class SegSpec:
+    """One host segment followed by one device segment (the paper's
+    alternating structure): ``host`` ticks of CPU work, then a bracketed
+    device segment of ``programs`` dispatches (ticks each)."""
+    host: float
+    programs: Tuple[float, ...]
+
+
+@dataclass(frozen=True)
+class JobSpec:
+    name: str
+    priority: int
+    segs: Tuple[SegSpec, ...]
+    device: int = 0
+    offset: float = 0.0          # release offset in ticks
+    best_effort: bool = False
+
+    @property
+    def exec_ticks(self) -> float:
+        return sum(s.host + sum(s.programs) for s in self.segs)
+
+
+@dataclass
+class ScenarioRun:
+    specs: List[JobSpec]
+    policy: str
+    wait_mode: str
+    n_devices: int
+    cluster: ClusterExecutor
+    jobs: Dict[str, object]
+    wcrt_ticks: Dict[str, float] = field(default_factory=dict)
+
+
+# --------------------------------------------------------------------------
+# stock scenarios: contention on every device, cross-device independence
+# --------------------------------------------------------------------------
+
+def contention_scenario(n_devices: int) -> List[JobSpec]:
+    """Per device: a best-effort streamer, a low- and a high-priority RT
+    job whose releases overlap — exercising displacement (Alg2 pending),
+    reservation handover (Alg1), and BE eviction.  Offsets/durations are
+    device-staggered so no two decision points coincide."""
+    specs: List[JobSpec] = []
+    for d in range(n_devices):
+        base = 3 * d                         # stagger devices
+        specs.append(JobSpec(
+            f"be{d}", priority=d, device=d, offset=base,
+            best_effort=True,
+            segs=(SegSpec(1, (2, 2, 2, 2, 2, 2, 2, 2)),)))
+        specs.append(JobSpec(
+            f"lo{d}", priority=10 + d, device=d, offset=base + 4,
+            segs=(SegSpec(1, (3, 3, 3)),)))
+        specs.append(JobSpec(
+            f"hi{d}", priority=30 + d, device=d, offset=base + 8,
+            segs=(SegSpec(1, (2, 2)),)))
+    return specs
+
+
+def isolation_scenario() -> List[JobSpec]:
+    """The acceptance pin: a high-priority job on device 0 against heavy
+    traffic pinned to device 1 — the device-0 job must never wait."""
+    return [
+        JobSpec("hp0", priority=50, device=0, offset=6,
+                segs=(SegSpec(1, (2, 2, 2)),)),
+        JobSpec("heavy1a", priority=20, device=1, offset=0,
+                segs=(SegSpec(1, (4, 4, 4, 4)),)),
+        JobSpec("heavy1b", priority=30, device=1, offset=4,
+                segs=(SegSpec(1, (4, 4, 4)),)),
+        JobSpec("be1", priority=0, device=1, offset=2, best_effort=True,
+                segs=(SegSpec(1, (3, 3, 3, 3, 3)),)),
+    ]
+
+
+# --------------------------------------------------------------------------
+# executor side
+# --------------------------------------------------------------------------
+
+def _sleep_program(dur_s: float):
+    def prog():
+        time.sleep(dur_s)
+        return None
+    return prog
+
+
+def _body(cluster: ClusterExecutor, spec: JobSpec):
+    def body(job, it):
+        for seg in spec.segs:
+            if seg.host > 0:
+                time.sleep(seg.host * TICK_S)
+            with cluster.device_segment(job):
+                for dur in seg.programs:
+                    cluster.run(job, _sleep_program(dur * TICK_S))
+    return body
+
+
+def profile_of(spec: JobSpec, margin: float = 3.0,
+               period_ticks: float = 10_000.0) -> JobProfile:
+    """The admission profile of one spec: nominal tick durations as ms,
+    inflated by ``margin`` (wall-clock sleeps overshoot, never undershoot
+    by much, so the margin absorbs scheduler noise)."""
+    return JobProfile(
+        name=spec.name,
+        host_segments_ms=[s.host * margin for s in spec.segs],
+        device_segments_ms=[(0.0, sum(s.programs) * margin)
+                            for s in spec.segs],
+        period_ms=period_ticks, priority=spec.priority,
+        cpu=0, best_effort=spec.best_effort, device=spec.device)
+
+
+def run_executor(specs: List[JobSpec], policy: str, wait_mode: str,
+                 n_devices: int, margin: float = 3.0) -> ScenarioRun:
+    """Admit every spec (cluster admission — the live crossfix path on
+    busy multi-device platforms), run the scenario, return the run with
+    traces and per-job WCRT bounds (ticks)."""
+    names = [s.name for s in specs]
+    assert len(set(names)) == len(names), "job names must be unique"
+    cluster = ClusterExecutor(
+        n_devices=n_devices, policy=policy, wait_mode=wait_mode,
+        n_cpus=len(specs) + 1, epsilon_ms=0.5, trace=True,
+        poll_interval=0.002)
+    jobs: Dict[str, object] = {}
+    wcrt: Dict[str, float] = {}
+    for i, s in enumerate(specs):
+        prof = profile_of(s, margin)
+        prof.cpu = i % cluster.admission.n_cpus
+        res = cluster.submit(prof, body=_body(cluster, s))
+        assert res["admitted"], (s.name, res)
+        jobs[s.name] = res["job"]
+        if not s.best_effort:
+            wcrt[s.name] = res["wcrt"].get(s.name, math.inf)
+    t0 = time.monotonic()
+    for s in sorted(specs, key=lambda s: s.offset):
+        delay = t0 + s.offset * TICK_S - time.monotonic()
+        if delay > 0:
+            time.sleep(delay)
+        jobs[s.name].start(cluster)
+    cluster.join(60)
+    cluster.shutdown()
+    return ScenarioRun(specs=list(specs), policy=policy,
+                       wait_mode=wait_mode, n_devices=n_devices,
+                       cluster=cluster, jobs=jobs, wcrt_ticks=wcrt)
+
+
+# --------------------------------------------------------------------------
+# invariant 1: priority-inversion-freedom from the trace
+# --------------------------------------------------------------------------
+
+def check_no_priority_inversion(run: ScenarioRun) -> int:
+    """At every dispatch, no blocked (preempted, not yet resumed) RT job
+    of higher device priority existed on that device.  Returns the number
+    of dispatches checked."""
+    checked = 0
+    for ex in run.cluster.executors:
+        dprio: Dict[str, int] = {}
+        is_rt: Dict[str, bool] = {}
+        blocked: Dict[str, bool] = {}
+        for e in ex.trace.events:
+            if e.event == "start":
+                dprio[e.job] = e.info["device_priority"]
+                is_rt[e.job] = e.info["rt"]
+                blocked[e.job] = False
+            elif e.event == "preempt":
+                blocked[e.job] = True
+            elif e.event in ("resume", "dispatch"):
+                blocked[e.job] = False
+                if e.event == "dispatch":
+                    checked += 1
+                    for k, b in blocked.items():
+                        if not (b and is_rt[k]):
+                            continue
+                        if not is_rt[e.job] or dprio[k] > dprio[e.job]:
+                            raise AssertionError(
+                                f"priority inversion on device "
+                                f"{e.device}: {e.job!r} dispatched while "
+                                f"RT job {k!r} (prio {dprio[k]}) blocked")
+            elif e.event == "complete":
+                blocked.pop(e.job, None)
+    return checked
+
+
+# --------------------------------------------------------------------------
+# invariant 2: Algorithm 1/2 decision agreement under local replay
+# --------------------------------------------------------------------------
+
+class _Stub:
+    """Stand-in job for state-machine replay, rebuilt from trace data."""
+
+    def __init__(self, name: str, dprio: int, rt: bool):
+        self.name = name
+        self.priority = dprio
+        self.device_priority = dprio
+        self.is_rt = rt
+        self.gpu_pending = False
+
+    def __repr__(self):
+        return f"_Stub({self.name})"
+
+
+def check_state_machine_replay(run: ScenarioRun) -> int:
+    """Replay each device's recorded update sequence through a fresh
+    instance of the canonical state machine (``Alg2State`` for ioctl,
+    ``pick_reserved`` for kthread) and assert every recorded decision —
+    the executor ran Algorithm 1/2 *exactly*.  Returns updates checked."""
+    checked = 0
+    for ex in run.cluster.executors:
+        stubs: Dict[str, _Stub] = {}
+        alg2 = Alg2State()
+        for e in ex.trace.events:
+            if e.event == "start":
+                stubs[e.job] = _Stub(e.job, e.info["device_priority"],
+                                     e.info["rt"])
+            if e.event != "update":
+                continue
+            checked += 1
+            if e.info["which"] == "poll":        # Algorithm 1
+                cands = [_Stub(n, p, True)
+                         for n, p in e.info["candidates"]]
+                want = pick_reserved(cands)
+                got = e.info["reserved"]
+                assert (want.name if want else None) == got, (
+                    f"Alg1 disagreement on device {ex.device_index}: "
+                    f"pick_reserved -> {want}, executor reserved {got!r}")
+            else:                                 # Algorithm 2
+                stub = stubs[e.job]
+                rewrote = (alg2.add(stub) if e.info["which"] == "begin"
+                           else alg2.remove(stub))
+                assert rewrote == e.info["rewrote"], (
+                    f"Alg2 rewrote-flag disagreement at {e}")
+                assert {j.name for j in alg2.running} == \
+                    set(e.info["running"]), f"Alg2 running set at {e}"
+                assert {j.name for j in alg2.pending} == \
+                    set(e.info["pending"]), f"Alg2 pending set at {e}"
+    return checked
+
+
+# --------------------------------------------------------------------------
+# invariant 3: simulator agreement on the decision sequence
+# --------------------------------------------------------------------------
+
+class RecordingIoctl(IoctlPolicy):
+    """IoctlPolicy logging every Algorithm 2 update it performs."""
+
+    def __init__(self, log: List[tuple], **kw):
+        super().__init__(**kw)
+        self._log = log
+
+    def begin_update(self, job, piece) -> None:
+        super().begin_update(job, piece)
+        self._log.append((self.device, piece.which, job.task.name))
+
+
+class RecordingKthread(KernelThreadPolicy):
+    """KernelThreadPolicy logging every reservation transition."""
+
+    def __init__(self, log: List[tuple], **kw):
+        super().__init__(**kw)
+        self._log = log
+        self._last_logged: Optional[str] = None
+
+    def _apply(self, tau_h) -> None:
+        super()._apply(tau_h)
+        name = tau_h.task.name if tau_h is not None else None
+        if name != self._last_logged:
+            self._last_logged = name
+            self._log.append((self.device, "reserve", name))
+
+
+def taskset_of(specs: List[JobSpec], n_devices: int,
+               period_ticks: float = 10_000.0) -> Taskset:
+    """The analysis/simulator Taskset of a scenario: tick durations as
+    ms, one CPU per job (decisions must not depend on core contention —
+    the executor gives every job its own thread), ε = 0 (the measured
+    runlist update is microseconds ≈ 0 ticks)."""
+    tasks = []
+    for i, s in enumerate(specs):
+        tasks.append(Task(
+            name=s.name,
+            cpu_segments=[seg.host for seg in s.segs],
+            gpu_segments=[GpuSegment(0.0, sum(seg.programs))
+                          for seg in s.segs],
+            period=period_ticks, deadline=period_ticks,
+            cpu=i, priority=s.priority, best_effort=s.best_effort,
+            device=s.device))
+    return Taskset(tasks, n_cpus=len(specs), epsilon=0.0,
+                   kthread_cpu=len(specs), n_devices=n_devices)
+
+
+def simulator_decision_log(specs: List[JobSpec], policy: str, mode: str,
+                           n_devices: int) -> List[tuple]:
+    """Replay the scenario timing through the simulator under recording
+    policies; return the ordered decision log [(device, kind, name)]."""
+    ts = taskset_of(specs, n_devices)
+    log: List[tuple] = []
+    if policy == "ioctl":
+        policies = [RecordingIoctl(log) for _ in range(n_devices)]
+    elif policy == "kthread":
+        policies = [RecordingKthread(log) for _ in range(n_devices)]
+        mode = "busy"
+    else:
+        raise ValueError(f"no recording policy for {policy!r}")
+    horizon = max(s.offset + s.exec_ticks for s in specs) * 6 + 100
+    Simulator(ts, policies, mode=mode, horizon=horizon,
+              offsets={s.name: s.offset for s in specs}).run()
+    return log
+
+
+def executor_decision_log(run: ScenarioRun) -> List[tuple]:
+    """The executor-side counterpart of :func:`simulator_decision_log`,
+    extracted from the traces: per-device order is exact (every update
+    is emitted under that device's runlist mutex)."""
+    log: List[tuple] = []
+    for ex in run.cluster.executors:
+        for e in ex.trace.events:
+            if e.event != "update":
+                continue
+            if e.info.get("which") == "poll":
+                log.append((ex.device_index, "reserve",
+                            e.info["reserved"]))
+            else:
+                log.append((ex.device_index, e.info["which"], e.job))
+    return log
+
+
+def _per_device(log: List[tuple], n_devices: int,
+                drop_none: bool = False) -> Dict[int, List[tuple]]:
+    out: Dict[int, List[tuple]] = {d: [] for d in range(n_devices)}
+    for dev, kind, name in log:
+        if drop_none and name is None:
+            continue
+        out[dev].append((kind, name))
+    return out
+
+
+def check_simulator_agreement(run: ScenarioRun) -> int:
+    """Per device, the live decision sequence equals the simulator's.
+    Reservation-cleared entries (name None) are dropped on both sides:
+    the executor clears reservations silently on completion, the
+    simulator via bookkeeping applies — the *who-got-the-device* order
+    is the conformance claim.  Returns decisions compared."""
+    sim = _per_device(
+        simulator_decision_log(run.specs, run.policy, run.wait_mode,
+                               run.n_devices),
+        run.n_devices, drop_none=True)
+    live = _per_device(executor_decision_log(run), run.n_devices,
+                       drop_none=True)
+    checked = 0
+    for d in range(run.n_devices):
+        assert live[d] == sim[d], (
+            f"decision sequences diverge on device {d}:\n"
+            f"  executor : {live[d]}\n  simulator: {sim[d]}")
+        checked += len(live[d])
+    return checked
+
+
+# --------------------------------------------------------------------------
+# invariant 4: measured MORT ≤ analysis WCRT
+# --------------------------------------------------------------------------
+
+def check_mort_vs_wcrt(run: ScenarioRun) -> int:
+    """Every RT job's maximum observed response time (ticks) is bounded
+    by the WCRT its admission computed.  Returns bounds checked."""
+    checked = 0
+    for s in run.specs:
+        if s.best_effort:
+            continue
+        job = run.jobs[s.name]
+        mort = job.stats.mort
+        assert mort is not None, f"{s.name} never completed"
+        bound = run.wcrt_ticks[s.name]
+        assert math.isfinite(bound), f"{s.name}: admission gave inf WCRT"
+        mort_ticks = mort / TICK_S
+        assert mort_ticks <= bound + 1e-9, (
+            f"{s.name}: MORT {mort_ticks:.2f} ticks > WCRT "
+            f"{bound:.2f} ticks")
+        checked += 1
+    return checked
+
+
+def check_all(run: ScenarioRun) -> Dict[str, int]:
+    """Run every conformance invariant; returns counts per check."""
+    run.cluster.assert_migration_free()
+    return {
+        "dispatches": check_no_priority_inversion(run),
+        "replayed_updates": check_state_machine_replay(run),
+        "agreed_decisions": check_simulator_agreement(run),
+        "wcrt_bounds": check_mort_vs_wcrt(run),
+    }
