@@ -1,32 +1,41 @@
-"""CI gate: compare a schedulability-sweep result JSON against the
+"""CI gate: compare schedulability-sweep result JSONs against the
 committed baseline (benchmarks/results/ci_baseline.json).
 
-Two gates (exit 1 on either):
+Two gates (exit 1 on either), applied per result file:
 
-  * **wall-clock** — fails when the sweep regresses more than
-    --max-regression (default 25%) over the baseline;
+  * **wall-clock** — fails when a sweep regresses more than
+    --max-regression (default 25%) over the baseline entry *of the same
+    backend* (like-for-like only: a NumPy result is never timed against
+    the JAX baseline and vice versa — the backends have different cost
+    models, so a cross comparison gates nothing meaningful);
   * **acceptance ratios** — fails on *any* drift from the baseline rows.
-    The sweep seeds are fixed and the batch backend is pinned
+    The sweep seeds are fixed and both vectorized backends are pinned
     decision-identical to the scalar reference, so ratios only move when
     the analysis itself changes — a silent result change from a backend
     or analysis edit must show up as a named CI failure, not as a perf
     footnote.  Intentional analysis changes regenerate the baseline
     (and justify it in the PR).
 
-The baseline records the sweep configuration (n, workers, backend); the
-CI job pins --workers to the baseline's value so the comparison is
-parallelism-for-parallelism.  Wall-clock still depends on host
-hardware: if runner hardware shifts the floor, regenerate the baseline
-from the job's uploaded artifact rather than widening the margin.
+The baseline is keyed per backend: ``{"backends": {tag: result}}``,
+where each entry records its own sweep configuration (n, workers) so
+the CI job can pin the matching flags.  The legacy flat single-result
+format still loads (its ``backend`` field names its only entry).
+Wall-clock still depends on host hardware: if runner hardware shifts
+the floor, regenerate the baseline from the job's uploaded artifacts
+rather than widening the margin.
 
---emit-trajectory PATH writes a small perf-trajectory artifact
-(wall-clock, per-sweep wall-clocks, backend tag, sweep config) from the
-current result; CI uploads it as ``BENCH_sweep.json`` so every push
-leaves a comparable perf datapoint next to the full rows.
+--emit-trajectory PATH writes the perf-trajectory artifact: per-backend
+wall-clock (total and per sweep) for every result passed, plus the
+scale-demo record (the "JAX 10k vs NumPy 1k" criterion measurement from
+``schedulability.py --scale-demo``) when one of the results carries it.
+CI uploads it as ``BENCH_sweep.json`` so every push leaves a comparable
+perf datapoint next to the full rows.
 
 Usage:
-    python benchmarks/schedulability.py --quick --json current.json
-    python benchmarks/check_regression.py current.json \
+    python benchmarks/schedulability.py --quick --json numpy.json
+    python benchmarks/schedulability.py --quick --backend jax --json jax.json
+    python benchmarks/schedulability.py --scale-demo --json demo.json
+    python benchmarks/check_regression.py numpy.json jax.json demo.json \
         --emit-trajectory BENCH_sweep.json
 """
 
@@ -40,6 +49,14 @@ import sys
 def load(path: str) -> dict:
     with open(path) as f:
         return json.load(f)
+
+
+def baseline_entries(baseline: dict) -> dict:
+    """Per-backend baseline map; a legacy flat baseline becomes the one
+    entry its ``backend`` field names."""
+    if "backends" in baseline:
+        return baseline["backends"]
+    return {baseline.get("backend", "scalar"): baseline}
 
 
 def drifted_rows(current: dict, baseline: dict) -> list[str]:
@@ -77,20 +94,75 @@ def drifted_rows(current: dict, baseline: dict) -> list[str]:
     return drifts
 
 
-def trajectory(current: dict) -> dict:
-    """The perf-trajectory datapoint CI commits as an artifact."""
+def trajectory_entry(current: dict) -> dict:
+    """One backend's perf-trajectory datapoint."""
     return {
         "wall_clock_s": current.get("wall_clock_s"),
         "sweep_wall_clock_s": current.get("sweep_wall_clock_s", {}),
-        "backend": current.get("backend", "scalar"),
         "n": current.get("n"),
         "workers": current.get("workers"),
     }
 
 
+def check_one(current: dict, bases: dict, max_regression: float) -> bool:
+    """Gate one sweep result against its same-backend baseline entry.
+    Returns True on failure."""
+    tag = current.get("backend", "scalar")
+    base = bases.get(tag)
+    if base is None:
+        print(
+            f"note: no {tag!r} baseline entry — wall-clock and drift "
+            "gates skipped for this result (commit one to enable them)",
+            file=sys.stderr,
+        )
+        return False
+    for key in ("n", "workers"):
+        if current.get(key) != base.get(key):
+            print(
+                f"note: {tag} sweep configs differ (current {key}="
+                f"{current.get(key)}, baseline {key}={base.get(key)}) "
+                "— wall-clock gate is apples-to-oranges",
+                file=sys.stderr,
+            )
+
+    failed = False
+    drifts = drifted_rows(current, base)
+    for line in drifts:
+        print(f"acceptance drift [{tag}]: {line}", file=sys.stderr)
+    if drifts:
+        print(
+            f"FAIL [{tag}]: {len(drifts)} acceptance ratio(s) drifted "
+            "from the baseline — analysis results changed (regenerate "
+            "the baseline only for an intentional, justified change)",
+            file=sys.stderr,
+        )
+        failed = True
+
+    cur_s = float(current["wall_clock_s"])
+    base_s = float(base["wall_clock_s"])
+    limit = base_s * (1.0 + max_regression)
+    print(
+        f"wall-clock [{tag}]: current {cur_s:.1f}s vs baseline "
+        f"{base_s:.1f}s (limit {limit:.1f}s)"
+    )
+    if cur_s > limit:
+        print(
+            f"FAIL [{tag}]: sweep wall-clock regressed more than "
+            f"{max_regression:.0%} over baseline",
+            file=sys.stderr,
+        )
+        failed = True
+    return failed
+
+
 def main() -> int:
     ap = argparse.ArgumentParser(description=__doc__.split("\n")[0])
-    ap.add_argument("current", help="result JSON from --json")
+    ap.add_argument(
+        "current",
+        nargs="+",
+        help="result JSON(s) from --json — one per backend, plus "
+        "optionally a --scale-demo result",
+    )
     ap.add_argument(
         "--baseline", default="benchmarks/results/ci_baseline.json"
     )
@@ -104,54 +176,30 @@ def main() -> int:
         "--emit-trajectory",
         default=None,
         metavar="PATH",
-        help="write the perf-trajectory artifact (wall-clock per sweep "
-        "+ backend tag) to PATH",
+        help="write the perf-trajectory artifact (per-backend wall-clock "
+        "per sweep + the scale-demo record) to PATH",
     )
     args = ap.parse_args()
 
-    current = load(args.current)
-    baseline = load(args.baseline)
-    cur_s = float(current["wall_clock_s"])
-    base_s = float(baseline["wall_clock_s"])
-    for key in ("n", "workers", "backend"):
-        if current.get(key) != baseline.get(key):
-            print(
-                f"note: sweep configs differ (current {key}="
-                f"{current.get(key)}, baseline {key}={baseline.get(key)}) "
-                "— wall-clock gate is apples-to-oranges",
-                file=sys.stderr,
-            )
+    bases = baseline_entries(load(args.baseline))
+    results = [load(p) for p in args.current]
+    traj: dict = {"backends": {}}
+    failed = False
+    for current in results:
+        if "scale_demo" in current:
+            traj["scale_demo"] = current["scale_demo"]
+        if "rows" not in current:
+            continue  # a pure scale-demo result carries no sweep gates
+        traj["backends"][current.get("backend", "scalar")] = (
+            trajectory_entry(current)
+        )
+        failed |= check_one(current, bases, args.max_regression)
 
     if args.emit_trajectory:
         with open(args.emit_trajectory, "w") as f:
-            json.dump(trajectory(current), f, indent=2)
+            json.dump(traj, f, indent=2)
         print(f"wrote trajectory {args.emit_trajectory}")
 
-    failed = False
-    drifts = drifted_rows(current, baseline)
-    for line in drifts:
-        print(f"acceptance drift: {line}", file=sys.stderr)
-    if drifts:
-        print(
-            f"FAIL: {len(drifts)} acceptance ratio(s) drifted from the "
-            "baseline — analysis results changed (regenerate the "
-            "baseline only for an intentional, justified change)",
-            file=sys.stderr,
-        )
-        failed = True
-
-    limit = base_s * (1.0 + args.max_regression)
-    print(
-        f"wall-clock: current {cur_s:.1f}s vs baseline {base_s:.1f}s "
-        f"(limit {limit:.1f}s)"
-    )
-    if cur_s > limit:
-        print(
-            f"FAIL: sweep wall-clock regressed more than "
-            f"{args.max_regression:.0%} over baseline",
-            file=sys.stderr,
-        )
-        failed = True
     if failed:
         return 1
     print("OK: within budget")

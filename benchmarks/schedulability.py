@@ -9,15 +9,29 @@ variants (see repro.core.analysis errata) are used throughout — they are
 sound against the simulator; epsilon = 1 ms for our approaches, zero
 overhead for prior work (as in the paper).
 
-Two analysis backends (select with ``--backend``, default ``batch``):
+Three analysis backends (select with ``--backend``, default ``batch``):
 
-  * ``batch`` — the vectorized backend (`repro.core.batch`, DESIGN.md §5):
-    each worker's chunk of tasksets is packed into arrays once and every
-    "ours" method runs as lockstep fixed points over the whole chunk,
-    with the Audsley retry batched across tasksets.  Decision-identical
-    to scalar (tests/test_batch_equivalence.py pins it).
+  * ``batch`` — the NumPy vectorized backend (`repro.core.batch`,
+    DESIGN.md §5): each worker's chunk of tasksets is packed into arrays
+    once and every "ours" method runs as lockstep fixed points over the
+    whole chunk, with the Audsley retry batched across tasksets.
+    Decision-identical to scalar (tests/test_batch_equivalence.py pins
+    it).
+  * ``jax`` — the same packs lowered to jit-compiled device kernels
+    (`repro.core.batch_jax`, DESIGN.md §8), built for 10k+-taskset
+    sweep points.  Bit-identical decisions again; defaults to serial
+    (no fork) so one process owns the device and the jit cache, and so
+    chunks stay large — splitting a batch across workers shrinks the
+    arrays the kernels amortize over.
   * ``scalar`` — the reference per-taskset path, kept runnable for
     differential timing and debugging.
+
+``--scale-demo`` runs the backend-scaling measurement instead of the
+paper sweeps: one sweep point at ``--scale-small``/``--scale-large``
+tasksets through the NumPy and JAX backends (taskset generation
+excluded, cold and warm JAX timings separated), with the explicit
+criterion record ("JAX at the large size vs NumPy at the small size")
+that lands in BENCH_sweep.json.
 
 Run as a script for the full sweep with a parallel per-chunk fan-out:
 
@@ -131,13 +145,15 @@ def _eval_chunk(args) -> List[Dict[str, bool]]:
         ts.kthread_cpu = ts.n_cpus  # dedicated scheduler core
         tss.append(ts)
     out: List[Dict[str, bool]] = [{} for _ in tss]
-    if backend == "batch":
+    if backend in ("batch", "jax"):
         specs = {m: s for m, s in BATCH_SPECS[methods_key].items()
                  if s is not None}
         with warnings.catch_warnings():
             # the heuristic arms of the --n-devices axis warn by design
             warnings.simplefilter("ignore", SoundnessWarning)
-            acc = batch_accept_many(specs, tss)
+            acc = batch_accept_many(
+                specs, tss,
+                backend="jax" if backend == "jax" else "numpy")
         for m, bits in acc.items():
             for d, b in zip(out, bits):
                 d[m] = bool(b)
@@ -151,10 +167,15 @@ def _eval_chunk(args) -> List[Dict[str, bool]]:
     return out
 
 
-def default_workers() -> int:
+def default_workers(backend: str = "batch") -> int:
     env = os.environ.get("REPRO_SWEEP_WORKERS")
     if env:
         return max(int(env), 1)
+    if backend == "jax":
+        # serial by default: forked workers would each recompile the
+        # kernels, and splitting a batch shrinks the arrays they
+        # amortize over
+        return 1
     # capped: the batch backend saturates cores with NumPy, and raw
     # cpu_count() oversubscribes small CI runners
     return min(os.cpu_count() or 1, 4)
@@ -317,6 +338,79 @@ ALL = [fig7_n_tasks, fig8_n_cpus, fig9_util, fig10_gpu_ratio, fig11_g_to_c,
        fig12_best_effort]
 
 
+def scale_demo(n_small: int = 1000, n_large: int = 10000,
+               seed0: int = 0) -> dict:
+    """Backend-scaling measurement for one sweep point (the BAND
+    configuration, both improved "ours" methods — RM test + batched
+    Audsley retry): the NumPy backend at both sizes, the JAX backend at
+    the large size cold (first call compiles the bucketed kernels) and
+    warm (compiled kernels reused — the steady state of a sweep, where
+    every point shares one bucket shape).
+
+    Taskset generation runs outside every timed region, and all times
+    are single-process wall-clock on the same host, so the numbers are
+    directly comparable.  The returned dict includes the explicit
+    criterion record ("JAX at n_large inside NumPy's n_small budget")
+    with its measured verdict — on accelerator hardware the batched
+    kernels are the scaling story; on a small CPU host the honest
+    outcome of that comparison belongs in the record, not in a
+    footnote (see DESIGN.md §8)."""
+    params = GenParams(util_per_cpu=BAND)
+    specs = {m: s for m, s in BATCH_SPECS["default"].items()
+             if s is not None}
+
+    def gen(n: int) -> list:
+        tss = []
+        for seed in range(seed0, seed0 + n):
+            ts = generate_taskset(seed, params)
+            ts.kthread_cpu = ts.n_cpus
+            tss.append(ts)
+        return tss
+
+    def timed(tss, backend: str) -> float:
+        t0 = time.perf_counter()
+        batch_accept_many(specs, tss, backend=backend)
+        return time.perf_counter() - t0
+
+    small, large = gen(n_small), gen(n_large)
+    t_np_small = timed(small, "numpy")
+    t_np_large = timed(large, "numpy")
+    t_jax_cold = timed(large, "jax")
+    t_jax_warm = timed(large, "jax")
+    t_jax_small = timed(small, "jax")
+    passed = t_jax_warm < t_np_small
+    demo = {
+        "point": {"util_per_cpu": list(BAND), "methods": sorted(specs)},
+        "n_small": n_small, "n_large": n_large,
+        "numpy_s": {f"n={n_small}": round(t_np_small, 3),
+                    f"n={n_large}": round(t_np_large, 3)},
+        "jax_s": {f"n={n_large}_cold": round(t_jax_cold, 3),
+                  f"n={n_large}_warm": round(t_jax_warm, 3),
+                  f"n={n_small}_warm": round(t_jax_small, 3)},
+        "per_taskset_ms": {
+            "numpy": round(t_np_large / n_large * 1e3, 4),
+            "jax_warm": round(t_jax_warm / n_large * 1e3, 4)},
+        "jax_speedup_at_n_large": round(t_np_large / t_jax_warm, 2),
+        "criterion": {
+            "statement": f"jax n={n_large} (warm) completes within "
+                         f"numpy's n={n_small} wall-clock",
+            f"jax_{n_large}_warm_s": round(t_jax_warm, 3),
+            f"numpy_{n_small}_s": round(t_np_small, 3),
+            "passed": passed,
+            "host": f"{os.cpu_count()}-core CPU (no accelerator)"},
+    }
+    print(f"scale demo (n_small={n_small}, n_large={n_large}):")
+    print(f"  numpy   n={n_small}: {t_np_small:.2f}s   "
+          f"n={n_large}: {t_np_large:.2f}s")
+    print(f"  jax     n={n_large}: cold {t_jax_cold:.2f}s  "
+          f"warm {t_jax_warm:.2f}s  "
+          f"({t_np_large / t_jax_warm:.1f}x numpy at n={n_large})")
+    print(f"  criterion {'PASSED' if passed else 'FAILED'}: "
+          f"jax {n_large} warm = {t_jax_warm:.2f}s vs "
+          f"numpy {n_small} = {t_np_small:.2f}s")
+    return demo
+
+
 def run(n: int = 200, workers: Optional[int] = None,
         backend: str = "batch") -> List[dict]:
     rows = []
@@ -337,21 +431,37 @@ def main() -> None:
     ap.add_argument("--workers", type=int, default=0,
                     help="process-pool size (0 = default_workers(), "
                          "1 = serial)")
-    ap.add_argument("--backend", choices=("batch", "scalar"),
+    ap.add_argument("--backend", choices=("batch", "jax", "scalar"),
                     default="batch",
-                    help="analysis backend: vectorized batch (default) "
-                         "or the scalar reference path")
+                    help="analysis backend: vectorized NumPy batch "
+                         "(default), jit-compiled jax, or the scalar "
+                         "reference path")
     ap.add_argument("--n-devices", type=int, nargs="+", default=None,
                     metavar="D",
                     help="run the multi-device axis over these device "
                          "counts (heuristic vs fixed-point acceptance) "
                          "instead of the paper sweeps")
+    ap.add_argument("--scale-demo", action="store_true",
+                    help="run the backend-scaling measurement (numpy vs "
+                         "jax, small vs large batch) instead of the "
+                         "paper sweeps")
+    ap.add_argument("--scale-small", type=int, default=1000,
+                    help="scale-demo small batch size (default 1000)")
+    ap.add_argument("--scale-large", type=int, default=10000,
+                    help="scale-demo large batch size (default 10000)")
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="write rows + wall-clock + backend to PATH (CI "
                          "regression gate reads this)")
     args = ap.parse_args()
+    if args.scale_demo:
+        demo = scale_demo(args.scale_small, args.scale_large)
+        if args.json:
+            with open(args.json, "w") as f:
+                json.dump({"scale_demo": demo}, f, indent=2)
+            print(f"wrote {args.json}")
+        return
     n = args.n or (40 if args.quick else 200)
-    workers = args.workers or default_workers()
+    workers = args.workers or default_workers(args.backend)
     t0 = time.time()
     try:
         if args.n_devices:

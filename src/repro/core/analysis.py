@@ -532,17 +532,20 @@ def schedulable_many(tasksets, rta, backend: str = "batch",
                      **kw) -> list[bool]:
     """Schedulability of a whole batch of tasksets under one analysis.
 
-    ``backend="batch"`` routes RTAs that declare a vectorized equivalent
-    (``rta.batch_kind``, or ``rta`` given directly as a kind string) to
-    the NumPy backend in `core/batch.py`, which runs every task of every
-    taskset in one masked lockstep fixed point — decision-identical to
-    the scalar path (tests/test_batch_equivalence.py).
+    ``backend="batch"`` (alias ``"numpy"``) routes RTAs that declare a
+    vectorized equivalent (``rta.batch_kind``, or ``rta`` given directly
+    as a kind string) to the NumPy backend in `core/batch.py`, which
+    runs every task of every taskset in one masked lockstep fixed point
+    — decision-identical to the scalar path
+    (tests/test_batch_equivalence.py).  ``backend="jax"`` lowers the
+    same pack to jit-compiled device kernels (`core/batch_jax.py`) —
+    bit-identical decisions again, built for 10k+-taskset sweeps.
     ``backend="scalar"`` (or an untagged external RTA) evaluates
     ``schedulable`` per taskset — the reference implementation."""
-    if backend not in ("batch", "scalar"):
+    if backend not in ("batch", "numpy", "jax", "scalar"):
         raise ValueError(f"unknown analysis backend {backend!r}")
     tasksets = list(tasksets)
-    if backend == "batch":
+    if backend != "scalar":
         kind = rta if isinstance(rta, str) else getattr(
             rta, "batch_kind", None)
         # scalar-only kwargs: ``early_exit`` is a pure acceleration hint
@@ -552,7 +555,9 @@ def schedulable_many(tasksets, rta, backend: str = "batch",
         if kind is not None and not ("only" in kw or "seeds" in kw):
             kw.pop("early_exit", None)
             from .batch import batch_schedulable
-            return batch_schedulable(kind, tasksets, **kw)
+            return batch_schedulable(
+                kind, tasksets,
+                backend="jax" if backend == "jax" else "numpy", **kw)
     if isinstance(rta, str):
         raise ValueError(
             f"kind string {rta!r} requires backend='batch'")

@@ -64,7 +64,14 @@ from .analysis import (MAX_ITERS, SoundnessWarning, fold_to_device,
 from .audsley import assign_gpu_priorities
 from .task_model import Taskset
 
-_EPS = 1e-9
+#: The ceil/floor robustness tolerance shared by every vectorized backend
+#: (NumPy here, JAX in `core/batch_jax.py`).  This is THE definition: the
+#: JAX backend imports it, so the two backends cannot silently drift apart
+#: on acceptance bits through a tolerance edit in one of them.  It must
+#: equal the scalar path's tolerance (analysis._EPS and the 1e-9 literals
+#: in overlap._ceil/_floor) — pinned by tests/test_batch_equivalence.py.
+CEIL_EPS = 1e-9
+_EPS = CEIL_EPS
 
 SUSPEND_KINDS = ("ioctl_suspend", "ioctl_suspend_improved")
 BUSY_KINDS = ("kthread_busy", "ioctl_busy", "ioctl_busy_improved")
@@ -188,33 +195,60 @@ def _pack(tasksets: Sequence[Taskset]) -> _Pack:
         gseg=z(S, N, Kg), gseg_m=np.zeros((S, N, Kg), dtype=bool),
         names=[], be_names=[],
     )
+    # Bulk fill: one row tuple per task appended to a flat list, then a
+    # single scatter per field.  Item-wise ndarray stores used to dominate
+    # packing cost at 10k-taskset batches (the JAX backend's scale), and
+    # packing is shared Python work both backends pay.  The tuple reads
+    # Task's cached cumulative slots directly — the property wrappers
+    # cost ~2x per access and this loop touches every task of every
+    # taskset in the batch.
+    sidx: List[int] = []
+    jidx: List[int] = []
+    rows: List[tuple] = []
+    csegs: List[tuple] = []
+    gsegs: List[tuple] = []
     for s, ts in enumerate(tasksets):
         p.eps[s] = ts.epsilon
         p.kcpu[s] = ts.kthread_cpu
         p.names.append([t.name for t in rts[s]])
         p.be_names.append([t.name for t in ts.tasks if not t.is_rt])
         for j, t in enumerate(rts[s]):
-            p.valid[s, j] = True
-            p.uses_gpu[s, j] = t.uses_gpu
-            p.C[s, j] = t.C
-            p.G[s, j] = t.G
-            p.Gm[s, j] = t.Gm
-            p.Ge[s, j] = t.Ge
-            p.C_best[s, j] = t.C_best
-            p.Ge_best[s, j] = t.Ge_best
-            p.eta_g[s, j] = t.eta_g
-            p.T[s, j] = t.period
-            p.D[s, j] = t.deadline
-            p.prio[s, j] = t.priority
-            p.gpu_prio[s, j] = t.gpu_priority
-            p.cpu[s, j] = t.cpu
-            nc = t.eta_c
-            p.cseg[s, j, :nc] = t.cpu_segments_best
-            p.cseg_m[s, j, :nc] = True
-            ng = t.eta_g
-            if ng:
-                p.gseg[s, j, :ng] = [g.exec_best for g in t.gpu_segments]
-                p.gseg_m[s, j, :ng] = True
+            sidx.append(s)
+            jidx.append(j)
+            gs = t.gpu_segments
+            rows.append((t._C, t._G, t._Gm, t._Ge, t._C_best, t._Ge_best,
+                         len(gs), t.period, t.deadline, t.priority,
+                         t.gpu_priority, t.cpu, bool(gs)))
+            csegs.append(t.cpu_segments_best)
+            gsegs.append(tuple(g.exec_best for g in gs))
+    if rows:
+        si = np.asarray(sidx)
+        ji = np.asarray(jidx)
+        cols = np.asarray(rows, dtype=np.float64)
+        p.valid[si, ji] = True
+        for k, f in enumerate(("C", "G", "Gm", "Ge", "C_best", "Ge_best",
+                               "eta_g", "T", "D", "prio", "gpu_prio")):
+            getattr(p, f)[si, ji] = cols[:, k]
+        p.cpu[si, ji] = cols[:, 11].astype(np.int64)
+        p.uses_gpu[si, ji] = cols[:, 12] != 0.0
+        for seg, segm, per_task in ((p.cseg, p.cseg_m, csegs),
+                                    (p.gseg, p.gseg_m, gsegs)):
+            # flat scatter: (task, segment-slot) index pairs built with
+            # repeat/cumsum instead of a per-task Python store
+            counts = np.fromiter(map(len, per_task), dtype=np.int64,
+                                 count=len(per_task))
+            total = int(counts.sum())
+            if not total:
+                continue
+            flat = np.fromiter(
+                (v for segs in per_task for v in segs),
+                dtype=np.float64, count=total)
+            sr = np.repeat(si, counts)
+            jr = np.repeat(ji, counts)
+            starts = np.repeat(np.cumsum(counts) - counts, counts)
+            kr = np.arange(total) - starts
+            seg[sr, jr, kr] = flat
+            segm[sr, jr, kr] = True
     return p
 
 
@@ -397,7 +431,8 @@ def _build2d(p: _Pack, kind: str, use_gpu_prio: bool, corrected: bool,
 
 def _solve2d(p: _Pack, const: np.ndarray, groups, use_gpu_prio: bool,
              analyzed: np.ndarray, seeds: Optional[np.ndarray] = None,
-             max_rounds: Optional[int] = None) -> np.ndarray:
+             max_rounds: Optional[int] = None,
+             decide: bool = False) -> np.ndarray:
     """Masked Jacobi ascent of all ``analyzed`` elements; returns (S,N)
     bounds with ``inf`` for diverged elements.  With R-dependent jitters
     (``use_gpu_prio=False``) every valid element must be analyzed — the
@@ -407,7 +442,14 @@ def _solve2d(p: _Pack, const: np.ndarray, groups, use_gpu_prio: bool,
     working set (tasksets converge at very different speeds, so the tail
     of the ascent runs on a small fraction of the batch), and each
     round computes one ceiling per *jitter kind* shared by all groups
-    using it."""
+    using it.
+
+    ``decide=True`` is the accept-bit fast path: the ascent is monotone,
+    so the first element to cross its deadline settles the row's
+    accept/reject decision and the whole row retires immediately.  The
+    returned bounds of such a row are only decision-accurate (some
+    finite entries may be below their fixed point) — callers that need
+    WCRT *values* must keep the default."""
     if not use_gpu_prio:
         assert bool((analyzed == p.valid).all()), \
             "R-dependent jitters need the full task vector"
@@ -481,6 +523,8 @@ def _solve2d(p: _Pack, const: np.ndarray, groups, use_gpu_prio: bool,
         # under R-dependent jitters: an interferer's base may still grow)
         quiet = ~(moved | newinf).any(axis=1)
         act = act & ~newinf & ~quiet[:, None]
+        if decide:
+            act = act & ~newinf.any(axis=1)[:, None]
         if not act.any():
             converged = True
             break
@@ -504,13 +548,73 @@ def _unpack_dicts(p: _Pack, R: np.ndarray) -> List[Dict[str, Optional[float]]]:
     return out
 
 
+# --------------------------------------------------------------------------
+# backend seam
+# --------------------------------------------------------------------------
+#
+# Everything above this line is the shared problem *construction* (packing,
+# term tables); everything below drives fixed points through a pluggable
+# solver.  A solver owns the two ascent primitives:
+#
+#   solve2d(p, kind, ...)    -> (S, N) WCRT bounds for a whole pack
+#   solve_rows(p, rows, ...) -> (M,) bounds for Audsley candidate tests
+#
+# The build step lives *inside* the solver so a backend may lower the pack
+# to its own array representation (the JAX backend fuses build + ascent
+# into jitted kernels); the NumPy solver simply composes the module-level
+# helpers.  Decision identity across solvers is pinned by
+# tests/test_batch_equivalence.py.
+
+class _NumpySolver:
+    """The reference vectorized backend: host NumPy, explicit rounds."""
+
+    name = "numpy"
+
+    def solve2d(self, p: _Pack, kind: str, use_gpu_prio: bool,
+                corrected: bool, analyzed: np.ndarray,
+                gpu_prio: Optional[np.ndarray] = None,
+                seeds: Optional[np.ndarray] = None,
+                floor_mode: bool = False,
+                decide: bool = False) -> np.ndarray:
+        const, groups = _build2d(p, kind, use_gpu_prio, corrected,
+                                 gpu_prio=gpu_prio, floor_mode=floor_mode)
+        return _solve2d(p, const, groups, use_gpu_prio, analyzed,
+                        seeds=seeds, decide=decide)
+
+    def solve_rows(self, p: _Pack, rows: np.ndarray, cands: np.ndarray,
+                   kind: str, corrected: bool, gp_rows: np.ndarray,
+                   seeds: Optional[np.ndarray] = None) -> np.ndarray:
+        cg = _build_rows(p, rows, cands, kind, corrected, gp_rows)
+        return _solve_rows(p, rows, *cg, seeds=seeds)
+
+
+_NUMPY_SOLVER = _NumpySolver()
+
+#: Accepted ``backend=`` spellings.  "batch" is the pre-JAX name of the
+#: NumPy backend (kept for callers of analysis.schedulable_many).
+BACKENDS = ("numpy", "batch", "jax")
+
+
+def get_solver(backend: str = "numpy"):
+    """Resolve a ``backend=`` name to a solver object.  The JAX backend
+    is imported lazily so environments without a working jax install can
+    still use the NumPy path (core/batch_jax.py gates on import)."""
+    if backend in ("numpy", "batch"):
+        return _NUMPY_SOLVER
+    if backend == "jax":
+        from . import batch_jax
+        return batch_jax.get_jax_solver()
+    raise ValueError(
+        f"unknown batch backend {backend!r} (expected one of {BACKENDS})")
+
+
 def _solve_problems(problems: Sequence[Taskset], kind: str,
-                    use_gpu_prio: bool, corrected: bool
+                    use_gpu_prio: bool, corrected: bool,
+                    solver=_NUMPY_SOLVER
                     ) -> List[Dict[str, Optional[float]]]:
     """Batched full-vector solve of single-device problems."""
     p = _pack(problems)
-    const, groups = _build2d(p, kind, use_gpu_prio, corrected)
-    R = _solve2d(p, const, groups, use_gpu_prio, analyzed=p.valid)
+    R = solver.solve2d(p, kind, use_gpu_prio, corrected, analyzed=p.valid)
     return _unpack_dicts(p, R)
 
 
@@ -520,7 +624,7 @@ def _solve_problems(problems: Sequence[Taskset], kind: str,
 
 def batch_rta(kind: str, tasksets: Sequence[Taskset],
               use_gpu_prio: bool = False, corrected: bool = True,
-              method: str = "fixed_point"
+              method: str = "fixed_point", backend: str = "numpy"
               ) -> List[Dict[str, Optional[float]]]:
     """Vectorized WCRT vectors for a batch of tasksets (any device
     counts), value-equivalent to the scalar RTA of the same kind with
@@ -529,6 +633,7 @@ def batch_rta(kind: str, tasksets: Sequence[Taskset],
         raise ValueError(f"unknown batch RTA kind {kind!r}")
     if method not in ("fixed_point", "heuristic"):
         raise ValueError(f"unknown multi-device method {method!r}")
+    solver = get_solver(backend)
     if method == "heuristic" and kind in SUSPEND_KINDS:
         raise ValueError("method='heuristic' applies to busy-mode kinds")
     tasksets = list(tasksets)
@@ -553,7 +658,8 @@ def batch_rta(kind: str, tasksets: Sequence[Taskset],
             SoundnessWarning, stacklevel=2)
     probs = [ts for _, ts in simple] + [f for _, _, f in folded]
     if probs:
-        dicts = _solve_problems(probs, kind, use_gpu_prio, corrected)
+        dicts = _solve_problems(probs, kind, use_gpu_prio, corrected,
+                                solver=solver)
         for (i, _), d in zip(simple, dicts[:len(simple)]):
             out[i] = d
         for (i, dev, _), Rd in zip(folded, dicts[len(simple):]):
@@ -565,13 +671,14 @@ def batch_rta(kind: str, tasksets: Sequence[Taskset],
     if cross:
         for i, d in zip(cross, _crossfix_lockstep(
                 kind, [tasksets[i] for i in cross], use_gpu_prio,
-                corrected)):
+                corrected, solver=solver)):
             out[i] = d
     return out  # type: ignore[return-value]
 
 
 def _crossfix_lockstep(kind: str, tasksets: List[Taskset],
-                       use_gpu_prio: bool, corrected: bool
+                       use_gpu_prio: bool, corrected: bool,
+                       solver=_NUMPY_SOLVER
                        ) -> List[Dict[str, Optional[float]]]:
     """The `core/crossfix.py` outer occupancy iteration, run in lockstep
     across a batch of multi-device busy-mode tasksets: each outer round
@@ -594,7 +701,8 @@ def _crossfix_lockstep(kind: str, tasksets: List[Taskset],
                 probs.append(fold_to_device(tasksets[i], d,
                                             occupancy=occ[i]))
                 owner.append((i, d))
-        dicts = _solve_problems(probs, kind, use_gpu_prio, corrected)
+        dicts = _solve_problems(probs, kind, use_gpu_prio, corrected,
+                                solver=solver)
         for i in idxs:
             R[i] = {}
         for (i, d), Rd in zip(owner, dicts):
@@ -626,11 +734,12 @@ def _crossfix_lockstep(kind: str, tasksets: List[Taskset],
 
 def batch_schedulable(kind: str, tasksets: Sequence[Taskset],
                       use_gpu_prio: bool = False, corrected: bool = True,
-                      method: str = "fixed_point") -> List[bool]:
+                      method: str = "fixed_point",
+                      backend: str = "numpy") -> List[bool]:
     """Decision twin of ``analysis.schedulable`` over a batch."""
     tasksets = list(tasksets)
     dicts = batch_rta(kind, tasksets, use_gpu_prio=use_gpu_prio,
-                      corrected=corrected, method=method)
+                      corrected=corrected, method=method, backend=backend)
     out = []
     for ts, R in zip(tasksets, dicts):
         ok = True
@@ -822,7 +931,8 @@ class _AudState:
         return sorted(lowest.values(), key=lambda j: prio[j])
 
 
-def _audsley_lockstep(kind: str, p: _Pack, corrected: bool) -> List[bool]:
+def _audsley_lockstep(kind: str, p: _Pack, corrected: bool,
+                      solver=_NUMPY_SOLVER) -> List[bool]:
     """Audsley GPU-priority assignment for a pack of single-device
     tasksets, with every active taskset's current candidate test batched
     into one vector fixed point per round, floor-seeded (DESIGN.md §5).
@@ -835,8 +945,8 @@ def _audsley_lockstep(kind: str, p: _Pack, corrected: bool) -> List[bool]:
     # Valid seed at every level; an inf floor proves the candidate can
     # never pass (its tests are skipped, like the scalar warm start).
     cand_mask = p.valid & p.uses_gpu
-    const, groups = _build2d(p, kind, True, corrected, floor_mode=True)
-    floor = _solve2d(p, const, groups, True, analyzed=cand_mask)
+    floor = solver.solve2d(p, kind, True, corrected, analyzed=cand_mask,
+                           floor_mode=True)
 
     while True:
         trials: List[_AudState] = []
@@ -862,8 +972,8 @@ def _audsley_lockstep(kind: str, p: _Pack, corrected: bool) -> List[bool]:
         cands = np.array([st.trial for st in trials])
         gp_rows = np.stack([st.gp for st in trials])
         seeds = floor[rows, cands]
-        cg = _build_rows(p, rows, cands, kind, corrected, gp_rows)
-        R = _solve_rows(p, rows, *cg, seeds=seeds)
+        R = solver.solve_rows(p, rows, cands, kind, corrected, gp_rows,
+                              seeds=seeds)
         for st, r in zip(trials, R):
             cand = st.trial
             st.trial = None
@@ -889,9 +999,8 @@ def _audsley_lockstep(kind: str, p: _Pack, corrected: bool) -> List[bool]:
         for k, st in enumerate(full):
             for col, r in st.placedR.items():
                 seeds[k, col] = r  # placement bound == final bound
-        const, groups = _build2d(sub, kind, True, corrected, gpu_prio=gp)
-        R = _solve2d(sub, const, groups, True, analyzed=sub.valid,
-                     seeds=seeds)
+        R = solver.solve2d(sub, kind, True, corrected, analyzed=sub.valid,
+                           gpu_prio=gp, seeds=seeds)
         for k, st in enumerate(full):
             st.result = bool(np.isfinite(R[k][sub.valid[k]]).all())
     return [bool(st.result) for st in states]
@@ -899,19 +1008,21 @@ def _audsley_lockstep(kind: str, p: _Pack, corrected: bool) -> List[bool]:
 
 def batch_schedulable_with_assignment(
         kind: str, tasksets: Sequence[Taskset],
-        method: str = "fixed_point", corrected: bool = True) -> List[bool]:
+        method: str = "fixed_point", corrected: bool = True,
+        backend: str = "numpy") -> List[bool]:
     """The Sec. VII-A evaluation pipeline over a batch: RM-priority test
     first, Audsley GPU-priority retry for the rejected sets.  Single-
     device retries run the lockstep Audsley; multi-device retries fall
     back to the scalar search (the joint busy fixed point has no
     per-candidate independence to batch over — core/audsley.py)."""
     return batch_accept_many({"_": (kind, method)}, tasksets,
-                             corrected=corrected)["_"]
+                             corrected=corrected, backend=backend)["_"]
 
 
 def batch_accept_many(specs: Dict[str, Tuple[str, str]],
                       tasksets: Sequence[Taskset],
-                      corrected: bool = True) -> Dict[str, List[bool]]:
+                      corrected: bool = True,
+                      backend: str = "numpy") -> Dict[str, List[bool]]:
     """Run several named ``(kind, method)`` evaluation pipelines over one
     batch, sharing the packed arrays across methods (the sweep driver's
     entry point: packing is per-batch Python work, everything after is
@@ -928,6 +1039,7 @@ def batch_accept_many(specs: Dict[str, Tuple[str, str]],
         if method == "heuristic" and kind in SUSPEND_KINDS:
             raise ValueError(
                 "method='heuristic' applies to busy-mode kinds")
+    solver = get_solver(backend)
     single = [i for i, ts in enumerate(tasksets) if ts.n_devices <= 1]
     multi = [i for i, ts in enumerate(tasksets) if ts.n_devices > 1]
     pack = _pack([tasksets[i] for i in single]) if single else None
@@ -935,12 +1047,13 @@ def batch_accept_many(specs: Dict[str, Tuple[str, str]],
     for name, (kind, method) in specs.items():
         acc = [False] * len(tasksets)
         if single:
-            const, groups = _build2d(pack, kind, False, corrected)
-            R = _solve2d(pack, const, groups, False, analyzed=pack.valid)
+            R = solver.solve2d(pack, kind, False, corrected,
+                               analyzed=pack.valid, decide=True)
             ok = np.isfinite(np.where(pack.valid, R, 0.0)).all(axis=1)
             rej = [k for k in range(pack.S) if not ok[k]]
             if rej:
-                res = _audsley_lockstep(kind, pack.take(rej), corrected)
+                res = _audsley_lockstep(kind, pack.take(rej), corrected,
+                                        solver=solver)
                 for k, r in zip(rej, res):
                     ok[k] = r
             for k, i in enumerate(single):
@@ -951,7 +1064,7 @@ def batch_accept_many(specs: Dict[str, Tuple[str, str]],
             # Audsley retries fall back to the scalar search
             ok_multi = batch_schedulable(
                 kind, [tasksets[i] for i in multi], use_gpu_prio=False,
-                corrected=corrected, method=method)
+                corrected=corrected, method=method, backend=backend)
             rta = scalar_rta(kind, method)
             for i, ok in zip(multi, ok_multi):
                 acc[i] = bool(ok) or (

@@ -1,0 +1,567 @@
+"""JAX-native batch RTA solver (DESIGN.md §8) — the ``backend="jax"``
+counterpart of the NumPy lockstep in `core/batch.py`.
+
+The NumPy backend iterates the whole pack Jacobi-style: every round
+materializes ``(S, N, N)`` interference matrices on the host and pays
+full Python dispatch per round.  This backend lowers the padded
+``_Pack`` arrays to device arrays once per solve and runs the entire
+ascent inside ``jit``-compiled kernels:
+
+  * **Priority-rank scan.**  ``lax.scan`` walks the tasks of every
+    taskset in decreasing CPU-priority order (the batch is vmapped
+    implicitly: one rank step analyzes the rank-k task of *all* S
+    tasksets at once).  Each step rebuilds the analyzed task's Lemma
+    1-4/6-7 interference row ``(S, N)`` on the fly from the pack masks
+    — the ``(S, N, N)`` matrices are never materialized — and ascends
+    its recurrence with a masked ``lax.while_loop``.  Because
+    interference flows strictly from higher CPU priority under the
+    RM-stage jitters, every interferer is *final* when its reader runs:
+    the scan is exactly the scalar substitution order, which is the
+    strongest possible identity argument (the NumPy Jacobi ascent
+    converges to the same least fixed point; DESIGN.md §5).
+  * **Per-element freezing.**  A task whose iterate crosses its
+    deadline is frozen at ``inf`` immediately (the scalar ``_iterate``
+    rule), and under ``decide=True`` its whole taskset lane retires:
+    later ranks of a rejected taskset are skipped, the accept bit is
+    already determined.  This is the scan-shaped equivalent of the
+    NumPy backend's converged-row compaction — converged or decided
+    work leaves the ascent, only the live tail iterates.
+  * **Eq. 5-9 overlap fixed points.**  The best-case BX ascents run
+    inside the same kernels on ``(S, K, N)`` tiles per rank
+    (``_bx_lfp``), fused by XLA with the masks that consume them.
+  * **Audsley rows kernel.**  The lockstep Audsley's per-round
+    candidate tests (one single-task recurrence per still-active
+    taskset, floor-seeded — the warm start's floor bounds become the
+    initial carries) and its closing full-set tests go through the same
+    machinery with GPU-priority (deadline-constant) jitters.
+
+Exactness: x64 is mandatory — every kernel runs under the *scoped*
+``jax.experimental.enable_x64`` context so the repo's f32 kernel code
+sharing the process keeps its default dtypes — and the ceil/floor
+tolerance is imported from `core/batch.py` (``CEIL_EPS``), so the two
+backends cannot drift apart on acceptance bits through a tolerance
+edit in one of them.
+
+Recompilation is bounded by *bucketed* pack shapes: S rounds up to a
+power of two (multiples of 2048 past 4096), N to a multiple of 4 and
+the segment axes to multiples of 2, so a parameter sweep whose taskset
+sizes wobble between points reuses one compiled kernel per bucket.
+
+When this module does *not* run: ``backend="numpy"`` stays the default
+everywhere (tiny batches are not worth the dispatch), multi-device
+Audsley retries fall back to the scalar search in both backends, and a
+broken jax install degrades gracefully — importing this module is lazy
+(`batch.get_solver`) and ``get_jax_solver`` raises a clear error
+instead of poisoning the NumPy path.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Dict, NamedTuple, Optional
+
+import numpy as np
+
+try:  # pragma: no cover - exercised only on broken installs
+    import jax
+    import jax.numpy as jnp
+    from jax import lax
+    from jax.experimental import enable_x64
+    HAVE_JAX = True
+    _JAX_ERROR = None
+except Exception as e:  # noqa: BLE001 - any import failure disables us
+    HAVE_JAX = False
+    _JAX_ERROR = e
+
+from .analysis import MAX_ITERS
+from .batch import CEIL_EPS, _Pack
+
+_EPS = CEIL_EPS
+_IMPROVED = frozenset(("ioctl_busy_improved", "ioctl_suspend_improved"))
+
+
+# --------------------------------------------------------------------------
+# shape bucketing
+# --------------------------------------------------------------------------
+
+def _bucket_s(n: int) -> int:
+    """Batch-axis bucket: powers of two up to 4096, then multiples of
+    2048 (a 10k sweep point pads to 10240, not 16384)."""
+    n = max(n, 1)
+    if n <= 4096:
+        return 1 << max(3, (n - 1).bit_length())
+    return -(-n // 2048) * 2048
+
+
+def _bucket_up(n: int, q: int) -> int:
+    return max(q, -(-n // q) * q)
+
+
+def _pad_rows(a: np.ndarray, S: int, fill) -> np.ndarray:
+    """Pad axis 0 to S rows with ``fill`` (axes >= 1 already sized)."""
+    if a.shape[0] == S:
+        return a
+    out = np.full((S,) + a.shape[1:], fill, dtype=a.dtype)
+    out[: a.shape[0]] = a
+    return out
+
+
+def _pad2(a: np.ndarray, S: int, N: int, fill) -> np.ndarray:
+    out = np.full((S, N) + a.shape[2:], fill, dtype=a.dtype)
+    out[: a.shape[0], : a.shape[1]] = a
+    return out
+
+
+class _Arrs(NamedTuple):
+    """The device-array view of a (bucketed) `_Pack` — a pytree, so one
+    jitted kernel serves every pack of the same bucket shape."""
+
+    valid: jnp.ndarray   # (S,N) bool
+    ug: jnp.ndarray      # (S,N) bool
+    C: jnp.ndarray
+    G: jnp.ndarray
+    Gm: jnp.ndarray
+    Ge: jnp.ndarray
+    C_best: jnp.ndarray
+    Ge_best: jnp.ndarray
+    eta_g: jnp.ndarray
+    T: jnp.ndarray
+    D: jnp.ndarray
+    prio: jnp.ndarray
+    gp: jnp.ndarray
+    cpu: jnp.ndarray     # (S,N) int64
+    eps: jnp.ndarray     # (S,)
+    kcpu: jnp.ndarray    # (S,) int64
+    cseg: jnp.ndarray    # (S,N,Kc)
+    cseg_m: jnp.ndarray
+    gseg: jnp.ndarray    # (S,N,Kg)
+    gseg_m: jnp.ndarray
+
+
+class _TaskRow(NamedTuple):
+    """Per-analyzed-task scalars, one lane per batch element."""
+
+    prio_i: jnp.ndarray
+    cpu_i: jnp.ndarray
+    gp_i: jnp.ndarray
+    ug_i: jnp.ndarray
+    C_i: jnp.ndarray
+    G_i: jnp.ndarray
+    eta_i: jnp.ndarray
+    D_i: jnp.ndarray
+    col: jnp.ndarray     # analyzed task's column index
+    gseg_i: jnp.ndarray  # (B,Kg)
+    gsegm_i: jnp.ndarray
+    cseg_i: jnp.ndarray  # (B,Kc)
+    csegm_i: jnp.ndarray
+
+
+# --------------------------------------------------------------------------
+# traced primitives (twins of core/batch.py's NumPy helpers)
+# --------------------------------------------------------------------------
+
+def _ceil_pos(x, T):
+    return jnp.maximum(jnp.ceil(x / T - _EPS), 0.0)
+
+
+def _floor_pos(x, T):
+    return jnp.maximum(jnp.floor(x / T + _EPS), 0.0)
+
+
+def _bx_lfp(init, w, T, live0, cap):
+    """Least fixed point of BX = init + sum_h max(ceil(BX/T_h)-1,0)*w_h,
+    ascending from ``init`` — overlap._best_fixed_point's conventions
+    (return-previous-iterate, 4096-step cap) on (B, K) element tiles.
+    Returns the iterate plus the still-live mask at exit (non-empty only
+    when ``cap`` cut the ascent short)."""
+
+    def cond(c):
+        _, live, it = c
+        return jnp.logical_and(live.any(), it < cap)
+
+    def body(c):
+        bx, live, it = c
+        n = jnp.maximum(_ceil_pos(bx[..., None], T) - 1.0, 0.0)
+        nxt = init + (n * w).sum(-1)
+        step = live & (nxt > bx + _EPS)
+        return jnp.where(step, nxt, bx), step, it + 1
+
+    bx0 = jnp.where(live0, init, 0.0)
+    bx, live, _ = lax.while_loop(cond, body, (bx0, live0, jnp.int32(0)))
+    return bx, live
+
+
+def _overlap_rows(A: _Arrs, ti: _TaskRow, mgpu_row, HPP_row, bx_cap):
+    """O^cg / O^gc rows (B, N) for the analyzed tasks — Eqs. (5)-(9)
+    from the per-task best-case segment fixed points, built on the fly
+    (no (S,N,N) matrices; XLA fuses these with their consumers)."""
+    T3 = A.T[:, None, :]
+    w_g = jnp.where(mgpu_row, A.Ge_best, 0.0)[:, None, :]
+    bxg, lg = _bx_lfp(ti.gseg_i, w_g, T3, ti.gsegm_i, bx_cap)
+    fl = jnp.maximum(_floor_pos(bxg[..., None], T3) - 1.0, 0.0)
+    fl = jnp.where(ti.gsegm_i[..., None], fl, 0.0)
+    Ocg = (fl * A.C_best[:, None, :]).sum(axis=1)
+    w_c = jnp.where(HPP_row, A.C_best, 0.0)[:, None, :]
+    bxc, lc = _bx_lfp(ti.cseg_i, w_c, T3, ti.csegm_i, bx_cap)
+    flc = jnp.maximum(_floor_pos(bxc[..., None], T3) - 1.0, 0.0)
+    flc = jnp.where(ti.csegm_i[..., None], flc, 0.0)
+    Ogc = (flc * A.Ge_best[:, None, :]).sum(axis=1)
+    return Ocg, Ogc, lg.any(-1) | lc.any(-1)
+
+
+def _build_task(kind: str, corrected: bool, floor_mode: bool,
+                use_gpu_prio: bool, A: _Arrs, ti: _TaskRow, bx_cap: int):
+    """const + interference-row term groups for the analyzed tasks —
+    the single-task projection of `_build2d` (same Lemma 2/3/4/6/7
+    tables; tests/test_batch_equivalence.py pins the equivalence)."""
+    HPP = A.valid & (A.cpu == ti.cpu_i[:, None]) & \
+        (A.prio > ti.prio_i[:, None])
+    HP = A.valid & (A.prio > ti.prio_i[:, None])
+    HPg = A.valid & (A.gp > ti.gp_i[:, None])
+    hpsel = HPg if use_gpu_prio else HP
+    none = jnp.zeros_like(HPP)
+    remote = none if floor_mode else (hpsel & A.ug & ~HPP)
+    eps1 = A.eps[:, None]
+    ocap = jnp.zeros(A.valid.shape[0], dtype=bool)
+
+    if kind == "kthread_busy":
+        x = ti.ug_i | (ti.cpu_i == A.kcpu)
+        if corrected:
+            x = x | (HPP & A.ug).any(-1)
+        const = ti.C_i + ti.G_i + jnp.where(x, 2.0 * A.eps, 0.0)
+        kmask = none if floor_mode else (hpsel & A.ug)
+        groups = [
+            (jnp.where(kmask & x[:, None], 2.0 * eps1, 0.0), "job", None),
+            (jnp.where(HPP, A.C + A.G, 0.0), None, None),
+            (jnp.where(remote, A.C + A.G, 0.0), "job", None),
+        ]
+        return const, groups, ocap
+
+    gstar_i = ti.G_i + 2.0 * A.eps * ti.eta_i
+    const = ti.C_i + gstar_i + (ti.eta_i + 1.0) * A.eps
+    gstar_h = A.G + 2.0 * eps1 * A.eta_g
+    gestar_h = A.Ge + 2.0 * eps1 * A.eta_g
+    gmstar_h = A.Gm + 2.0 * eps1 * A.eta_g
+    HPPc = HPP & ~A.ug
+    HPPg = HPP & A.ug
+    Ocg = Ogc = None
+    if kind in _IMPROVED:
+        if floor_mode:
+            iot = jnp.arange(A.valid.shape[1])[None, :]
+            mgpu = A.valid & A.ug & (iot != ti.col[:, None])
+        else:
+            mgpu = hpsel & A.ug
+        Ocg, Ogc, ocap = _overlap_rows(A, ti, mgpu, HPP, bx_cap)
+
+    if kind in ("ioctl_busy", "ioctl_busy_improved"):
+        stretch = (A.eta_g + 1.0) * eps1 if corrected else 0.0
+        groups = [
+            (jnp.where(HPPc, A.C, 0.0), None, Ocg),
+            (jnp.where(HPPg, A.C + gstar_h + stretch, 0.0), None,
+             Ocg + Ogc if Ocg is not None else None),
+            (jnp.where(remote, gestar_h, 0.0), "gpu", Ogc),
+        ]
+    else:  # ioctl_suspend / ioctl_suspend_improved
+        ug_col = ti.ug_i[:, None]
+        groups = [
+            (jnp.where(HPPc, A.C, 0.0), None, Ocg),
+            (jnp.where(HPPg, A.C + gmstar_h, 0.0), "cpu", Ocg),
+            (jnp.where(HPPg & ug_col, A.Ge, 0.0), "gpu", Ogc),
+            (jnp.where(remote & ug_col, gestar_h, 0.0), "gpu", Ogc),
+        ]
+    return const, groups, ocap
+
+
+def _ascend(const_i, groups, J: Dict[str, jnp.ndarray], T, D_i, R0, act0,
+            cap):
+    """Masked monotone ascent of the analyzed tasks' recurrences under
+    ``lax.while_loop``, per-element inf-freezing, capped at ``cap``
+    rounds.  At the full budget (MAX_ITERS+1, `_solve_rows`'s scalar
+    per-task cap) leftover-active lanes go conservatively to inf; at a
+    ladder rung below it they are reported back so the host re-solves
+    only those lanes at the full budget."""
+
+    def cond(c):
+        _, act, it = c
+        return jnp.logical_and(act.any(), it < cap)
+
+    def body(c):
+        R, act, it = c
+        Rs = jnp.where(jnp.isfinite(R), R, 0.0)
+        total = const_i
+        for W, jk, O in groups:
+            X = Rs[:, None] + (J[jk] if jk is not None else 0.0)
+            term = _ceil_pos(X, T) * W
+            if O is not None:
+                term = jnp.maximum(term - O, 0.0)
+            total = total + term.sum(-1)
+        Rnew = jnp.where(act, total, R)
+        newinf = act & (Rnew > D_i + _EPS)
+        delta = jnp.abs(jnp.where(act, Rnew, 0.0) - jnp.where(act, R, 0.0))
+        moved = act & ~newinf & (delta >= _EPS)
+        R = jnp.where(newinf, jnp.inf, Rnew)
+        return R, act & ~newinf & moved, it + 1
+
+    R, act, _ = lax.while_loop(cond, body, (R0, act0, jnp.int32(0)))
+    return jnp.where(act, jnp.inf, R), act  # cap exhausted: conservative
+
+
+def _const_jitters(A: _Arrs) -> Dict[str, jnp.ndarray]:
+    """Deadline-constant release jitters (the ``use_gpu_prio`` modes)."""
+    Dz = jnp.where(A.valid, jnp.where(jnp.isinf(A.D), 0.0, A.D), 0.0)
+    return {"job": jnp.maximum(Dz - (A.C + A.G), 0.0),
+            "gpu": jnp.maximum(Dz - A.Ge, 0.0),
+            "cpu": jnp.maximum(Dz - (A.C + A.Gm), 0.0)}
+
+
+def _gather_task(A: _Arrs, col) -> _TaskRow:
+    m = jnp.arange(A.valid.shape[0])
+    return _TaskRow(
+        prio_i=A.prio[m, col], cpu_i=A.cpu[m, col], gp_i=A.gp[m, col],
+        ug_i=A.ug[m, col], C_i=A.C[m, col], G_i=A.G[m, col],
+        eta_i=A.eta_g[m, col], D_i=A.D[m, col], col=col,
+        gseg_i=A.gseg[m, col], gsegm_i=A.gseg_m[m, col],
+        cseg_i=A.cseg[m, col], csegm_i=A.cseg_m[m, col])
+
+
+# --------------------------------------------------------------------------
+# the jitted kernels
+# --------------------------------------------------------------------------
+
+@partial(jax.jit, static_argnames=("kind", "use_gpu_prio", "corrected",
+                                   "floor_mode", "decide")) \
+    if HAVE_JAX else (lambda f: f)
+def _solve_scan(A: _Arrs, order, analyzed, seeds, cap, bx_cap,
+                *, kind: str, use_gpu_prio: bool, corrected: bool,
+                floor_mode: bool, decide: bool):
+    """Solve a whole pack: scan over priority ranks, one masked ascent
+    per rank.  Under RM-stage (R-dependent) jitters every interferer is
+    final when read — the scalar substitution order; under GPU-priority
+    (constant) jitters the elements are independent and the order is
+    immaterial, so one kernel serves every mode.
+
+    Returns ``(R, capped)``: ``capped`` marks lanes where ``cap`` or
+    ``bx_cap`` cut an ascent short of convergence — at a ladder rung
+    below the full budget the host discards those lanes' results and
+    re-solves them; at the full budget the inf freeze is the
+    conservative scalar semantics and ``capped`` is moot."""
+    S = A.valid.shape[0]
+    m = jnp.arange(S)
+    Jc = _const_jitters(A) if use_gpu_prio else None
+    R0 = jnp.where(analyzed, jnp.where(jnp.isfinite(seeds), seeds,
+                                       jnp.inf), 0.0)
+
+    # Bucket-padding columns of `order` hold index 0, so the final ranks
+    # of shorter rows re-analyze a task that is already final.  That is
+    # an idempotent no-op: its interferers (strictly higher priority)
+    # were final the first time, so the ascent re-converges in one step
+    # at the same value without moving, freezing, or killing the lane.
+    def step(carry, col):
+        R, dead, capped = carry
+        ti = _gather_task(A, col)
+        analyzed_i = analyzed[m, col]
+        Ri0 = R[m, col]
+        act0 = analyzed_i & jnp.isfinite(Ri0) & ~dead
+        if use_gpu_prio:
+            J = Jc
+        else:
+            base = jnp.where(A.valid,
+                             jnp.where(jnp.isinf(R), A.D, R), 0.0)
+            J = {"job": jnp.maximum(base - (A.C + A.G), 0.0),
+                 "gpu": jnp.maximum(base - A.Ge, 0.0),
+                 "cpu": jnp.maximum(base - (A.C + A.Gm), 0.0)}
+        const_i, groups, ocap = _build_task(kind, corrected, floor_mode,
+                                            use_gpu_prio, A, ti, bx_cap)
+        Ri, left = _ascend(const_i, groups, J, A.T, ti.D_i, Ri0, act0,
+                           cap)
+        R = R.at[m, col].set(Ri)
+        # a decide-dead lane's bit is already settled (monotone ascent:
+        # the first inf survives any further iterating), so a cap bite
+        # there needs no re-solve
+        capped = capped | ((left | (ocap & act0)) & ~dead)
+        if decide:
+            dead = dead | (analyzed_i & jnp.isinf(Ri))
+        return (R, dead, capped), None
+
+    dead0 = jnp.zeros((S,), dtype=bool)
+    (R, _, capped), _ = lax.scan(step, (R0, dead0, dead0), order.T)
+    return R, capped
+
+
+@partial(jax.jit, static_argnames=("kind", "corrected")) \
+    if HAVE_JAX else (lambda f: f)
+def _solve_rows_kernel(A: _Arrs, ti: _TaskRow, seeds, cap, bx_cap, *,
+                       kind: str, corrected: bool):
+    """Audsley candidate tests: one single-task recurrence per lane
+    under an overridden GPU-priority vector, floor-seeded.  Returns
+    ``(R, capped)`` with `_solve_scan`'s ladder contract."""
+    J = _const_jitters(A)
+    const_i, groups, ocap = _build_task(kind, corrected, False, True, A,
+                                        ti, bx_cap)
+    act0 = jnp.isfinite(seeds)
+    R0 = jnp.where(act0, seeds, jnp.inf)
+    R, left = _ascend(const_i, groups, J, A.T, ti.D_i, R0, act0, cap)
+    return R, left | (ocap & act0)
+
+
+# --------------------------------------------------------------------------
+# host-side lowering + the solver object
+# --------------------------------------------------------------------------
+
+def _lower(p: _Pack, gpu_prio: Optional[np.ndarray],
+           rows: Optional[np.ndarray] = None) -> _Arrs:
+    """Pack -> bucketed device arrays.  ``rows`` selects a row subset
+    (the Audsley candidate rounds) before padding."""
+
+    def sel(a):
+        return a if rows is None else a[rows]
+
+    S0 = p.S if rows is None else len(rows)
+    S = _bucket_s(S0)
+    N = _bucket_up(p.N, 4)
+    Kc = _bucket_up(p.cseg.shape[2], 2)
+    Kg = _bucket_up(p.gseg.shape[2], 2)
+    # a caller-supplied override is already in target row space (the
+    # full pack for solve2d, the selected rows for solve_rows)
+    gp = sel(p.gpu_prio) if gpu_prio is None else gpu_prio
+    f = jnp.asarray
+    return _Arrs(
+        valid=f(_pad2(sel(p.valid), S, N, False)),
+        ug=f(_pad2(sel(p.uses_gpu), S, N, False)),
+        C=f(_pad2(sel(p.C), S, N, 0.0)),
+        G=f(_pad2(sel(p.G), S, N, 0.0)),
+        Gm=f(_pad2(sel(p.Gm), S, N, 0.0)),
+        Ge=f(_pad2(sel(p.Ge), S, N, 0.0)),
+        C_best=f(_pad2(sel(p.C_best), S, N, 0.0)),
+        Ge_best=f(_pad2(sel(p.Ge_best), S, N, 0.0)),
+        eta_g=f(_pad2(sel(p.eta_g), S, N, 0.0)),
+        T=f(_pad2(sel(p.T), S, N, 1.0)),
+        D=f(_pad2(sel(p.D), S, N, np.inf)),
+        prio=f(_pad2(sel(p.prio), S, N, -np.inf)),
+        gp=f(_pad2(gp, S, N, -np.inf)),
+        cpu=f(_pad2(sel(p.cpu), S, N, -1)),
+        eps=f(_pad_rows(sel(p.eps), S, 0.0)),
+        kcpu=f(_pad_rows(sel(p.kcpu), S, 0.0).astype(np.int64)),
+        cseg=f(_pad_seg(sel(p.cseg), S, N, Kc)),
+        cseg_m=f(_pad_seg(sel(p.cseg_m), S, N, Kc)),
+        gseg=f(_pad_seg(sel(p.gseg), S, N, Kg)),
+        gseg_m=f(_pad_seg(sel(p.gseg_m), S, N, Kg)),
+    )
+
+
+def _pad_seg(a: np.ndarray, S: int, N: int, K: int) -> np.ndarray:
+    fill = False if a.dtype == bool else 0.0
+    out = np.full((S, N, K), fill, dtype=a.dtype)
+    out[: a.shape[0], : a.shape[1], : a.shape[2]] = a
+    return out
+
+
+def _order(prio: np.ndarray) -> np.ndarray:
+    """Per-taskset columns in decreasing CPU priority (padding last)."""
+    return np.argsort(-prio, axis=1, kind="stable").astype(np.int64)
+
+
+# The iteration-cap ladder: pass 1 runs every lane under a small round
+# budget (most RTA ascents converge in a handful of rounds), and only
+# the lanes where the cap bit — the slow-convergence tail near
+# saturation — are re-solved at the scalar backend's full budget.
+# Without the ladder the while_loop runs every lane for as many rounds
+# as the batch's *slowest* lane; this is the JAX analog of the NumPy
+# backend's converged-row compaction.  The final rung's inf freeze is
+# `_solve_rows`'s conservative cap semantics, so the ladder cannot
+# change a decision.
+_CAPS = (8, MAX_ITERS + 1)
+_BX_CAPS = (64, 4096)
+
+
+class JaxSolver:
+    """`core/batch.py`'s solver protocol on the JAX kernels above."""
+
+    name = "jax"
+
+    def solve2d(self, p: _Pack, kind: str, use_gpu_prio: bool,
+                corrected: bool, analyzed: np.ndarray,
+                gpu_prio: Optional[np.ndarray] = None,
+                seeds: Optional[np.ndarray] = None,
+                floor_mode: bool = False,
+                decide: bool = False) -> np.ndarray:
+        if not use_gpu_prio:
+            assert bool((analyzed == p.valid).all()), \
+                "R-dependent jitters need the full task vector"
+        out = np.empty((p.S, p.N))
+        todo = np.arange(p.S)
+        with enable_x64():
+            for rung, (cap, bx_cap) in enumerate(zip(_CAPS, _BX_CAPS)):
+                sub = None if len(todo) == p.S else todo
+                gp = gpu_prio if gpu_prio is None or sub is None \
+                    else gpu_prio[sub]
+                A = _lower(p, gp, rows=sub)
+                S, N = A.valid.shape
+                prio = p.prio if sub is None else p.prio[sub]
+                order = jnp.asarray(_pad2(_order(prio), S, N, 0))
+                ana = analyzed if sub is None else analyzed[sub]
+                if seeds is None:
+                    sd = np.zeros((len(todo), p.N))
+                else:
+                    sd = seeds if sub is None else seeds[sub]
+                R, capped = _solve_scan(
+                    A, order, jnp.asarray(_pad2(ana, S, N, False)),
+                    jnp.asarray(_pad2(sd, S, N, 0.0)), cap, bx_cap,
+                    kind=kind, use_gpu_prio=use_gpu_prio,
+                    corrected=corrected, floor_mode=floor_mode,
+                    decide=decide)
+                R = np.asarray(R)[: len(todo), : p.N]
+                if rung == len(_CAPS) - 1:
+                    out[todo] = R
+                    break
+                capped = np.asarray(capped)[: len(todo)]
+                out[todo[~capped]] = R[~capped]
+                todo = todo[capped]
+                if not len(todo):
+                    break
+        return out
+
+    def solve_rows(self, p: _Pack, rows: np.ndarray, cands: np.ndarray,
+                   kind: str, corrected: bool, gp_rows: np.ndarray,
+                   seeds: Optional[np.ndarray] = None) -> np.ndarray:
+        rows = np.asarray(rows)
+        cands = np.asarray(cands)
+        M0 = len(rows)
+        out = np.empty(M0)
+        todo = np.arange(M0)
+        with enable_x64():
+            for rung, (cap, bx_cap) in enumerate(zip(_CAPS, _BX_CAPS)):
+                A = _lower(p, gp_rows[todo], rows=rows[todo])
+                S, _ = A.valid.shape
+                col = np.zeros(S, dtype=np.int64)
+                col[: len(todo)] = cands[todo]
+                ti = _gather_task(A, jnp.asarray(col))
+                sd = np.full(S, np.inf)  # dead padding lanes never run
+                sd[: len(todo)] = (np.asarray(seeds)[todo]
+                                   if seeds is not None else 0.0)
+                R, capped = _solve_rows_kernel(
+                    A, ti, jnp.asarray(sd), cap, bx_cap, kind=kind,
+                    corrected=corrected)
+                R = np.asarray(R)[: len(todo)]
+                if rung == len(_CAPS) - 1:
+                    out[todo] = R
+                    break
+                capped = np.asarray(capped)[: len(todo)]
+                out[todo[~capped]] = R[~capped]
+                todo = todo[capped]
+                if not len(todo):
+                    break
+        return out
+
+
+_SOLVER: Optional[JaxSolver] = None
+
+
+def get_jax_solver() -> JaxSolver:
+    if not HAVE_JAX:
+        raise RuntimeError(
+            "backend='jax' requested but jax failed to import "
+            f"({_JAX_ERROR!r}); use backend='numpy'")
+    global _SOLVER
+    if _SOLVER is None:
+        _SOLVER = JaxSolver()
+    return _SOLVER

@@ -16,10 +16,12 @@ admission controller all resolve one policy name to one consistent
 (implementation, analysis) pair."""
 from __future__ import annotations
 
+import math
 from dataclasses import dataclass
-from typing import Callable, List, Optional
+from typing import Callable, Iterable, List, Optional
 
 from ..core import GpuSegment, Task, Taskset, schedulable
+from ..core.analysis import _EPS
 from ..core.audsley import assign_gpu_priorities
 from ..core.policy import policy_spec
 from ..core.segments import WorkloadProfile
@@ -82,20 +84,55 @@ class JobProfile:
                    device=device)
 
 
+def headroom_violation(ts: Taskset, headroom: float = 1.0
+                       ) -> Optional[str]:
+    """Utilization fast-reject: the long-run RT demand each CPU core and
+    each accelerator must serve, against a ``headroom`` capacity bound.
+
+    This is a *necessary* condition, so refusing on it is sound: a core
+    charges at least C + G^m per period for every RT task bound to it
+    (the suspend-mode floor — busy-waiting only adds demand), and a
+    device serves G^e per period for every RT task targeting it.  If
+    either exceeds 1.0, backlog grows without bound and every RTA in
+    the registry diverges to a refusal anyway — the gate just refuses
+    *before* any fixed point runs.  ``headroom < 1.0`` reserves slack
+    (a conservative gate that can refuse RTA-acceptable sets).
+
+    Returns a human-readable reason, or None when the gate passes.
+    """
+    cpu_u: dict = {}
+    dev_u: dict = {}
+    for t in ts.rt_tasks:
+        cpu_u[t.cpu] = cpu_u.get(t.cpu, 0.0) + (t.C + t.Gm) / t.period
+        if t.uses_gpu:
+            dev_u[t.device] = dev_u.get(t.device, 0.0) + t.Ge / t.period
+    for core, u in sorted(cpu_u.items()):
+        if u > headroom + _EPS:
+            return (f"RT utilization {u:.3f} on core {core} exceeds "
+                    f"headroom {headroom:g}")
+    for dev, u in sorted(dev_u.items()):
+        if u > headroom + _EPS:
+            return (f"RT utilization {u:.3f} on device {dev} exceeds "
+                    f"headroom {headroom:g}")
+    return None
+
+
 class AdmissionController:
     def __init__(self, mode: str = "notify", wait_mode: str = "suspend",
                  n_cpus: int = 4, epsilon_ms: float = 1.0,
-                 try_gpu_priorities: bool = True, n_devices: int = 1):
+                 try_gpu_priorities: bool = True, n_devices: int = 1,
+                 headroom: float = 1.0):
         self.mode, self.wait_mode = mode, wait_mode
         self.rta = rta_for(mode, wait_mode)
         self.n_cpus = n_cpus
         self.epsilon_ms = epsilon_ms
         self.try_gpu_priorities = try_gpu_priorities
         self.n_devices = n_devices
+        self.headroom = headroom
         self.admitted: List[JobProfile] = []
 
-    def _taskset(self, extra: Optional[JobProfile] = None) -> Taskset:
-        profs = self.admitted + ([extra] if extra else [])
+    def _taskset(self, *extra: JobProfile) -> Taskset:
+        profs = self.admitted + list(extra)
         return Taskset([p.to_task() for p in profs], n_cpus=self.n_cpus,
                        epsilon=self.epsilon_ms,
                        kthread_cpu=self.n_cpus,  # dedicated scheduler core
@@ -128,6 +165,12 @@ class AdmissionController:
         if prof.best_effort:
             self.admitted.append(prof)
             return {"admitted": True, "via": "best_effort", "wcrt": {}}
+        reason = headroom_violation(ts, self.headroom)
+        if reason is not None:
+            # the fast-reject: a hopeless taskset never reaches a fixed
+            # point (wcrt stays empty — nothing was computed)
+            return {"admitted": False, "via": None, "wcrt": {},
+                    "error": reason}
         rta = self.rta
         if schedulable(ts, rta):
             self.admitted.append(prof)
@@ -142,6 +185,82 @@ class AdmissionController:
                         "gpu_priorities": {t.name: t.gpu_priority
                                            for t in assigned.tasks}}
         return {"admitted": False, "via": None, "wcrt": rta(ts)}
+
+    def try_admit_many(self, profs: Iterable[JobProfile], *,
+                       backend: str = "numpy") -> List[dict]:
+        """Admit an arrival burst in order, batching the RTA fixed
+        points through `core/batch.py` (``backend="jax"`` lowers them
+        to the jit-compiled device kernels — the streaming-admission
+        fast path).
+
+        Decision-identical to calling ``try_admit`` per profile: the
+        burst is analyzed under *optimistic prefix* tasksets — profile
+        k is tested against admitted + burst[:k+1] — which is exactly
+        the sequential state while every earlier profile is being
+        admitted.  At the first profile the batch cannot clear (an RTA
+        refusal, a best-effort job, a validation defect, or a headroom
+        refusal) that one profile goes through the sequential path —
+        including the Audsley retry and the exact refusal dict — and
+        the remainder re-batches against the updated state.  WCRTs in
+        batched results are the batch solver's vectors (value-equal to
+        the scalar ones to float tolerance, inf-for-inf)."""
+        profs = list(profs)
+        kind = getattr(self.rta, "batch_kind", None)
+        if kind is None or len(profs) <= 1:
+            return [self.try_admit(p) for p in profs]
+        from ..core.batch import batch_rta
+        results: List[dict] = []
+        i = 0
+        while i < len(profs):
+            run: List[JobProfile] = []
+            tss: List[Taskset] = []
+            j = i
+            while j < len(profs):
+                p = profs[j]
+                if (p.best_effort
+                        or not (0 <= p.device < self.n_devices)
+                        or any(q.name == p.name
+                               for q in self.admitted + run)):
+                    break
+                try:
+                    ts = self._taskset(*run, p)
+                except ValueError:
+                    break
+                if headroom_violation(ts, self.headroom) is not None:
+                    break
+                run.append(p)
+                tss.append(ts)
+                j += 1
+            if not run:
+                # burst head needs non-RTA handling (best-effort,
+                # refusal): sequential produces the exact result dict
+                results.append(self.try_admit(profs[i]))
+                i += 1
+                continue
+            wcrts = batch_rta(kind, tss, backend=backend)
+            k = 0
+            while k < len(run) and self._accepts(tss[k], wcrts[k]):
+                k += 1
+            for p, w in zip(run[:k], wcrts[:k]):
+                self.admitted.append(p)
+                results.append({"admitted": True, "via": "default",
+                                "wcrt": w})
+            i += k
+            if k < len(run):
+                # first refusal: sequential fallback runs the Audsley
+                # retry; everything after it re-batches next round
+                results.append(self.try_admit(profs[i]))
+                i += 1
+        return results
+
+    @staticmethod
+    def _accepts(ts: Taskset, R: dict) -> bool:
+        """`analysis.schedulable`'s accept criterion on a WCRT dict."""
+        for t in ts.rt_tasks:
+            r = R.get(t.name, math.inf)
+            if r is None or math.isinf(r) or r > t.deadline + _EPS:
+                return False
+        return True
 
     def release(self, name: str) -> bool:
         """Retire an admitted profile (its job left the platform) so its

@@ -1,0 +1,164 @@
+"""Streaming admission: the utilization-headroom fast-reject and the
+batched arrival-burst path (`sched/admission.py`).
+
+The headroom gate must honor the refuse-don't-crash contract (PR 5) —
+a hopeless profile gets a refusal dict with an empty wcrt, never an
+exception, and never poisons later admissions — and must be *sound*:
+at the default ``headroom=1.0`` it only refuses profiles the full RTA
+path would refuse anyway (it is a necessary condition, evaluated
+before any fixed point runs).
+
+``try_admit_many`` must be decision-identical to calling ``try_admit``
+profile by profile, on bursts that mix real-time jobs with best-effort,
+duplicate-name, out-of-range-device, and headroom-hopeless profiles —
+under both vectorized backends.
+"""
+import math
+import random
+
+import pytest
+
+from repro.core.batch_jax import HAVE_JAX
+from repro.sched.admission import (AdmissionController, JobProfile,
+                                   headroom_violation)
+
+BACKENDS = [
+    "numpy",
+    pytest.param("jax", marks=pytest.mark.skipif(
+        not HAVE_JAX, reason="jax not importable")),
+]
+
+
+def _prof(i, **kw):
+    rng = random.Random(i)
+    d = dict(name=f"job{i}",
+             host_segments_ms=[rng.uniform(1.0, 4.0)],
+             device_segments_ms=[(0.3, rng.uniform(2.0, 8.0))],
+             period_ms=rng.choice([40.0, 60.0, 80.0, 120.0]),
+             priority=500 - i, cpu=i % 4)
+    d.update(kw)
+    return JobProfile(**d)
+
+
+def _mixed_burst():
+    profs = [_prof(i) for i in range(14)]
+    profs[3] = _prof(3, best_effort=True)
+    profs[5] = _prof(5, device=9)            # out of range -> refusal
+    profs[7] = _prof(7, name="job2")         # duplicate -> refusal
+    profs[9] = _prof(9, period_ms=4.0)       # hopeless -> headroom gate
+    profs[11] = _prof(11, cpu=77)            # Taskset build ValueError
+    return profs
+
+
+# --------------------------------------------------------------------------
+# headroom fast-reject
+# --------------------------------------------------------------------------
+
+def test_headroom_refuses_core_overload_without_rta():
+    ctl = AdmissionController(mode="ioctl", wait_mode="suspend")
+    over = _prof(0, host_segments_ms=[12.0], period_ms=10.0)
+    res = ctl.try_admit(over)
+    assert not res["admitted"]
+    assert res["wcrt"] == {}  # no fixed point ran
+    assert "headroom" in res["error"] and "core" in res["error"]
+    assert ctl.admitted == []  # refusal leaves no residue
+    # the controller keeps working after the refusal
+    assert ctl.try_admit(_prof(1))["admitted"]
+
+
+def test_headroom_refuses_device_overload():
+    ctl = AdmissionController(mode="ioctl", wait_mode="suspend")
+    over = _prof(0, host_segments_ms=[0.5],
+                 device_segments_ms=[(0.1, 11.0)], period_ms=10.0)
+    res = ctl.try_admit(over)
+    assert not res["admitted"] and "device 0" in res["error"]
+    assert res["wcrt"] == {}
+
+
+def test_headroom_exempts_best_effort():
+    """BE jobs carry no guarantee, so the gate must not refuse them."""
+    ctl = AdmissionController(mode="ioctl", wait_mode="suspend")
+    over = _prof(0, host_segments_ms=[12.0], period_ms=10.0,
+                 best_effort=True)
+    assert ctl.try_admit(over)["via"] == "best_effort"
+
+
+def test_headroom_violation_reports_per_core_and_device():
+    ctl = AdmissionController(mode="ioctl", wait_mode="suspend")
+    ts = ctl._taskset(_prof(0, host_segments_ms=[11.0], period_ms=10.0))
+    assert "core 0" in headroom_violation(ts, 1.0)
+    assert headroom_violation(ts, 2.0) is None  # slack widens the gate
+
+
+@pytest.mark.parametrize("wait_mode", ["busy", "suspend"])
+def test_headroom_gate_is_sound(wait_mode):
+    """At headroom=1.0 the gate is a pure fast path: a controller with
+    the gate and one with it disabled (headroom=inf, so only the RTA
+    decides) admit exactly the same stream."""
+    gated = AdmissionController(mode="ioctl", wait_mode=wait_mode)
+    ungated = AdmissionController(mode="ioctl", wait_mode=wait_mode,
+                                  headroom=math.inf)
+    saw_gate_refusal = False
+    for i in range(18):
+        p = _prof(i, period_ms=random.Random(1000 + i).choice(
+            [8.0, 15.0, 40.0, 80.0]))
+        rg, ru = gated.try_admit(p), ungated.try_admit(p)
+        assert rg["admitted"] == ru["admitted"], (wait_mode, i)
+        saw_gate_refusal |= "headroom" in rg.get("error", "")
+    assert [p.name for p in gated.admitted] == \
+        [p.name for p in ungated.admitted]
+    assert saw_gate_refusal  # the stream must actually exercise the gate
+
+
+# --------------------------------------------------------------------------
+# batched arrival bursts
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("backend", BACKENDS)
+@pytest.mark.parametrize("wait_mode", ["busy", "suspend"])
+def test_burst_matches_sequential(wait_mode, backend):
+    seq = AdmissionController(mode="ioctl", wait_mode=wait_mode)
+    bat = AdmissionController(mode="ioctl", wait_mode=wait_mode)
+    profs = _mixed_burst()
+    rs = [seq.try_admit(p) for p in profs]
+    rb = bat.try_admit_many(profs, backend=backend)
+    assert [r["admitted"] for r in rs] == [r["admitted"] for r in rb]
+    assert [r["via"] for r in rs] == [r["via"] for r in rb]
+    assert [r.get("error") for r in rs] == [r.get("error") for r in rb]
+    assert [p.name for p in seq.admitted] == [p.name for p in bat.admitted]
+    for a, b in zip(rs, rb):
+        assert set(a["wcrt"]) == set(b["wcrt"])
+        for name, r_s in a["wcrt"].items():
+            r_b = b["wcrt"][name]
+            if r_s is None or r_b is None:
+                assert r_s is r_b  # best-effort: no bound either way
+            elif math.isinf(r_s) or math.isinf(r_b):
+                assert math.isinf(r_s) and math.isinf(r_b)
+            else:
+                assert abs(r_s - r_b) <= 1e-6 * max(1.0, abs(r_s))
+
+
+def test_burst_audsley_retry_matches_sequential():
+    """A burst whose tail only clears via GPU-priority reassignment
+    still matches: the first RM refusal drops to the sequential path
+    (Audsley retry included) and the remainder re-batches."""
+    seq = AdmissionController(mode="ioctl", wait_mode="suspend")
+    bat = AdmissionController(mode="ioctl", wait_mode="suspend")
+    profs = [_prof(i, period_ms=30.0, host_segments_ms=[2.0],
+                   device_segments_ms=[(0.3, 5.0)], cpu=i % 2)
+             for i in range(8)]
+    rs = [seq.try_admit(p) for p in profs]
+    rb = bat.try_admit_many(profs)
+    assert [r["admitted"] for r in rs] == [r["admitted"] for r in rb]
+    assert [r["via"] for r in rs] == [r["via"] for r in rb]
+    assert [p.name for p in seq.admitted] == [p.name for p in bat.admitted]
+
+
+def test_burst_non_batch_rta_falls_back():
+    """Approaches without a vectorized kind take the sequential path
+    transparently (same results, no error)."""
+    ctl = AdmissionController(mode="ioctl", wait_mode="suspend")
+    ctl.rta = lambda ts, **kw: {t.name: 1.0 for t in ts.tasks}  # untagged
+    profs = [_prof(i) for i in range(3)]
+    res = ctl.try_admit_many(profs)
+    assert [r["admitted"] for r in res] == [True] * 3

@@ -1,7 +1,8 @@
 """Differential equivalence: scalar reference RTAs vs the vectorized
-batch backend (`repro.core.batch`, DESIGN.md §5).
+backends — NumPy (`repro.core.batch`, DESIGN.md §5) and JAX
+(`repro.core.batch_jax`, DESIGN.md §8) — a three-way net.
 
-Three layers of protection:
+Three layers of protection, each run per backend:
 
   * **WCRT differential** — for every analysis kind, across 1/2/4-device
     tasksets, both busy modes plus the suspend analyses, with and
@@ -11,16 +12,21 @@ Three layers of protection:
   * **Pipeline differential** — the full Sec. VII-A evaluation (RM test
     + Audsley retry) must make identical decisions through
     ``batch_accept_many`` and the scalar ``schedulable`` +
-    ``assign_gpu_priorities`` path, and the warm-started Audsley must
-    return the exact assignment of the cold-started search.
+    ``assign_gpu_priorities`` path (under JAX this exercises the
+    floor-seeded — i.e. warm-started — lockstep Audsley against the
+    scalar cold search), and the warm-started Audsley must return the
+    exact assignment of the cold-started search.
   * **Pinned golden batch** — 120 tasksets across six generator
     configurations with hard-coded accept/reject bits for all three
-    sweep methods, so a simultaneous drift of both backends (or a
+    sweep methods, so a simultaneous drift of the backends (or a
     generator change) cannot slip through as "still equivalent".
 
 ``REPRO_BATCH_N`` widens the differential seed range in CI's soundness
-job; the default keeps tier-1 fast.  The hypothesis property test rides
-along when the extra is installed (tests/_optional.py).
+job; the default keeps tier-1 fast.  ``REPRO_BATCH_BACKENDS`` (comma
+list, default "numpy,jax") selects which vectorized backends the
+differentials run under — the soundness matrix runs one backend per
+leg.  The hypothesis property test rides along when the extra is
+installed (tests/_optional.py).
 """
 import math
 import os
@@ -32,10 +38,28 @@ from repro.core import (GenParams, generate_taskset, schedulable,
 from repro.core.audsley import assign_gpu_priorities
 from repro.core.batch import (BUSY_KINDS, KINDS, batch_accept_many,
                               batch_rta, batch_schedulable, scalar_rta)
+from repro.core.batch_jax import HAVE_JAX
 
 from _optional import HAVE_HYPOTHESIS, given, settings, st
 
 N_DIFF = int(os.environ.get("REPRO_BATCH_N", "24"))
+
+BACKENDS = [
+    pytest.param(b, marks=pytest.mark.skipif(
+        b == "jax" and not HAVE_JAX, reason="jax not importable"))
+    for b in os.environ.get("REPRO_BATCH_BACKENDS", "numpy,jax").split(",")
+]
+
+
+def test_eps_constants_unified():
+    """The ceil/floor tolerance has exactly one definition: the scalar
+    analyses and both vectorized backends read the same constant, so
+    acceptance bits cannot drift through a one-sided tolerance edit."""
+    from repro.core import analysis
+    from repro.core import batch as b
+    from repro.core import batch_jax as bj
+    assert b.CEIL_EPS == analysis._EPS == bj._EPS
+    assert bj.CEIL_EPS is b.CEIL_EPS
 
 
 def _gen(seed, **kw):
@@ -61,14 +85,16 @@ def _assert_vectors_match(sc, ba, ctx):
 # WCRT differential
 # --------------------------------------------------------------------------
 
+@pytest.mark.parametrize("backend", BACKENDS)
 @pytest.mark.parametrize("kind", KINDS)
 @pytest.mark.parametrize("n_devices", [1, 2, 4])
 @pytest.mark.parametrize("use_gpu_prio", [False, True])
-def test_wcrt_differential(kind, n_devices, use_gpu_prio):
+def test_wcrt_differential(kind, n_devices, use_gpu_prio, backend):
     seeds = range(N_DIFF // 3)
     tss = [_gen(s, n_devices=n_devices) for s in seeds]
     rta = scalar_rta(kind)
-    batch = batch_rta(kind, tss, use_gpu_prio=use_gpu_prio)
+    batch = batch_rta(kind, tss, use_gpu_prio=use_gpu_prio,
+                      backend=backend)
     for s, (ts, ba) in enumerate(zip(tss, batch)):
         sc = rta(ts, use_gpu_prio=use_gpu_prio)
         _assert_vectors_match(sc, ba, (kind, n_devices, use_gpu_prio, s))
@@ -99,6 +125,13 @@ def test_schedulable_many_dispatch():
                                   backend="scalar")
     via_kind = schedulable_many(tss, "ioctl_busy_improved")
     assert via_batch == via_scalar == via_kind
+    # "numpy" is an accepted alias of "batch"; "jax" lowers the same
+    # pack to the jit-compiled kernels with identical decisions
+    assert schedulable_many(tss, ioctl_busy_improved_rta,
+                            backend="numpy") == via_batch
+    if HAVE_JAX:
+        assert schedulable_many(tss, "ioctl_busy_improved",
+                                backend="jax") == via_batch
     # scalar-only kwargs stay call-compatible on the batch default:
     # early_exit is an acceleration hint (dropped), seeds/only force the
     # scalar path instead of raising
@@ -141,22 +174,29 @@ def _scalar_pipeline(ts, rta):
     return assign_gpu_priorities(ts, rta) is not None
 
 
+@pytest.mark.parametrize("backend", BACKENDS)
 @pytest.mark.parametrize("kind", PIPELINE_KINDS)
-def test_pipeline_differential(kind):
+def test_pipeline_differential(kind, backend):
+    """The band forces Audsley retries, so under JAX this also pins the
+    floor-seeded (warm-started) lockstep Audsley — candidate rows kernel
+    included — against the scalar cold search's decisions."""
     tss = [_gen(s, util_per_cpu=(0.32, 0.42)) for s in range(N_DIFF)]
-    batch = batch_accept_many({kind: (kind, "fixed_point")}, tss)[kind]
+    batch = batch_accept_many({kind: (kind, "fixed_point")}, tss,
+                              backend=backend)[kind]
     rta = scalar_rta(kind)
     scalar = [_scalar_pipeline(ts, rta) for ts in tss]
     assert batch == scalar
 
 
+@pytest.mark.parametrize("backend", BACKENDS)
 @pytest.mark.parametrize("kind", PIPELINE_KINDS)
-def test_pipeline_differential_multi_device(kind):
+def test_pipeline_differential_multi_device(kind, backend):
     """n_devices > 1 routes the RM test through the lockstep crossfix /
     folded projections and the retry through the scalar fallback."""
     tss = [_gen(s, n_devices=2, util_per_cpu=(0.32, 0.42))
            for s in range(max(6, N_DIFF // 4))]
-    batch = batch_accept_many({kind: (kind, "fixed_point")}, tss)[kind]
+    batch = batch_accept_many({kind: (kind, "fixed_point")}, tss,
+                              backend=backend)[kind]
     rta = scalar_rta(kind)
     scalar = [_scalar_pipeline(ts, rta) for ts in tss]
     assert batch == scalar
@@ -211,14 +251,17 @@ GOLDEN_ACCEPT = {
 }
 
 
-def test_golden_batch_pinned():
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_golden_batch_pinned(backend):
     tss = golden_tasksets()
     assert len(tss) >= 100
     acc = batch_accept_many(
-        {k: (k, "fixed_point") for k in GOLDEN_ACCEPT}, tss)
+        {k: (k, "fixed_point") for k in GOLDEN_ACCEPT}, tss,
+        backend=backend)
     for kind, bits in GOLDEN_ACCEPT.items():
         got = "".join("1" if b else "0" for b in acc[kind])
-        assert got == bits, f"{kind}: golden acceptance drifted"
+        assert got == bits, \
+            f"{kind} [{backend}]: golden acceptance drifted"
 
 
 def test_golden_batch_matches_scalar():
