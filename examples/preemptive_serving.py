@@ -26,7 +26,7 @@ from repro.launch.serve import InferenceEngine
 from repro.launch.steps import build_train_step
 from repro.models import transformer
 from repro.optim import adamw
-from repro.sched import ClusterExecutor, JobProfile, RTJob
+from repro.sched import JobProfile, RTJob, connect
 
 
 def main() -> None:
@@ -101,10 +101,12 @@ def main() -> None:
     eps_ms = 1.0 + max_slice * 1.2
 
     # --- the cluster: admit→place→bind, then run preemptively ------------
-    cluster = ClusterExecutor(n_devices=n_devices, policy="notify",
-                              wait_mode="suspend", n_cpus=1,
-                              epsilon_ms=eps_ms)
-    res = cluster.submit(
+    # (through the unified facade: connect() owns an in-process cluster;
+    # the same submit() would reach a daemon given a socket path)
+    client = connect(n_devices=n_devices, policy="notify",
+                     wait_mode="suspend", n_cpus=1, epsilon_ms=eps_ms)
+    cluster = client.cluster
+    res = client.submit(
         JobProfile.from_workload(infer_prof, period_ms=1500, priority=50,
                                  margin=2.0, device=infer_dev),
         workload=infer_wl, n_iterations=100)
@@ -112,7 +114,7 @@ def main() -> None:
           f"{res['device']} WCRT={res['wcrt'].get('infer', 0):.1f}ms "
           f"(slices {[round(s, 1) for s in infer_prof.device[1].slice_ms]}"
           f"ms, max slice {max_slice:.1f}ms, epsilon {eps_ms:.0f}ms)")
-    res_train = cluster.submit(
+    res_train = client.submit(
         JobProfile.from_workload(train_prof, period_ms=500, priority=0,
                                  best_effort=True, margin=1.5,
                                  device=train_dev),
@@ -120,7 +122,7 @@ def main() -> None:
     if res["job"] is None or res_train["job"] is None:
         # report the refusal instead of crashing on job=None — nothing
         # has started yet (submit was called without start=True)
-        cluster.shutdown()
+        client.close(shutdown=True)
         refused = res if res["job"] is None else res_train
         why = refused.get("error") or refused["wcrt"]
         raise SystemExit(f"admission refused: {why}")
@@ -131,7 +133,7 @@ def main() -> None:
     infer.start(cluster, stop_after_s=6.0)
     infer.join(30)
     train.join(30)
-    cluster.shutdown()
+    client.close(shutdown=True)
     cluster.assert_migration_free()
 
     wcrt = res["wcrt"].get("infer", float("inf"))
@@ -146,7 +148,7 @@ def main() -> None:
           f"(protective bound {eps_ms:.0f}ms)")
     if n_devices > 1:
         morts = {d: (round(v * 1e3, 1) if v is not None else None)
-                 for d, v in cluster.per_device_mort().items()}
+                 for d, v in client.per_device_mort().items()}
         print(f"per-device MORT (ms): {morts} "
               f"(infer on {infer_dev}, train on {train_dev})")
     assert infer.stats.completions > 0, "inference never completed"

@@ -129,8 +129,11 @@ def run_disaggregated(cfg, args) -> None:
     """Prefill and decode pools on separate devices: the classic
     disaggregated-serving scenario, on the cluster runtime.  Each pool
     is an RT job pinned to its device; admission runs the cross-device
-    analysis on the pinned placements before either job may start."""
-    from ..sched import ClusterExecutor, JobProfile
+    analysis on the pinned placements before either job may start.
+    Submission goes through the unified facade (``repro.sched.connect``
+    → ``SchedClient``, DESIGN.md §9) — the bodies still bracket their
+    device segments on the executor face via ``client.cluster``."""
+    from ..sched import JobProfile, connect
 
     n = args.n_devices
     devs = jax.devices()
@@ -161,9 +164,9 @@ def run_disaggregated(cfg, args) -> None:
     jax.block_until_ready(dec.decode_chunk(4))
     decode_ms = (time.perf_counter() - t0) * 1e3 / 4 * args.decode
 
-    cluster = ClusterExecutor(n_devices=n, policy="ioctl",
-                              wait_mode="suspend", n_cpus=2,
-                              epsilon_ms=1.0)
+    client = connect(n_devices=n, policy="ioctl", wait_mode="suspend",
+                     n_cpus=2, epsilon_ms=1.0)
+    cluster = client.cluster
     handoff = threading.Event()
     out: dict = {}
     times: dict = {}
@@ -187,12 +190,12 @@ def run_disaggregated(cfg, args) -> None:
 
     period = max(prefill_ms + decode_ms, 1.0) * 20
     m = 3.0  # one observation is not a WCET
-    r_pre = cluster.submit(
+    r_pre = client.submit(
         JobProfile("prefill", [1.0], [(1.0, prefill_ms * m)],
                    period_ms=period, priority=40, cpu=0,
                    device=prefill_dev),
         body=prefill_body)
-    r_dec = cluster.submit(
+    r_dec = client.submit(
         JobProfile("decode", [1.0], [(1.0, decode_ms * m)],
                    period_ms=period, priority=50, cpu=1,
                    device=decode_dev),
@@ -200,20 +203,20 @@ def run_disaggregated(cfg, args) -> None:
     # check both admissions before starting either pool: a refusal must
     # not leave the other pool's thread running behind an exception
     for tag, r in (("prefill", r_pre), ("decode", r_dec)):
-        if not r["admitted"]:
-            cluster.shutdown()
-            raise SystemExit(f"{tag} pool refused admission: "
-                             f"{r.get('error') or r['wcrt']}")
+        if not r.accepted:
+            client.close(shutdown=True)
+            raise SystemExit(f"{tag} pool refused admission "
+                             f"({r.reason}): {r.error or r.wcrt}")
     print(f"admission: prefill -> device {r_pre['device']} "
           f"({r_pre['via']}), decode -> device {r_dec['device']} "
           f"({r_dec['via']})")
     assert r_pre["device"] != r_dec["device"]
-    r_pre["job"].start(cluster)
-    r_dec["job"].start(cluster)
+    r_pre.job.start(cluster)
+    r_dec.job.start(cluster)
     try:
-        cluster.join(180)
+        client.join(180)
     finally:
-        cluster.shutdown()
+        client.close(shutdown=True)
     cluster.assert_migration_free()
 
     if "tokens" not in out:
@@ -226,12 +229,63 @@ def run_disaggregated(cfg, args) -> None:
     print(f"decode pool (device {decode_dev}): {args.decode} tokens, "
           f"{per_tok:.2f} ms/tok "
           f"({args.batch * 1e3 / per_tok / 1e3:.1f} tok/s aggregate)")
-    morts = cluster.per_device_mort()
+    morts = client.per_device_mort()
     print("per-device MORT (s):",
           {d: (round(v, 3) if v is not None else None)
            for d, v in morts.items()})
     print("sample:", np.asarray(toks_out[0, :16]))
     print("disaggregated serve OK")
+
+
+def register_serving_workloads(cfg, seed: int = 1) -> None:
+    """Register the serving segments in the durable-workload registry
+    (``repro.sched.workloads``): ``serve.decode`` is a prefill + sliced
+    decode whose carry (KV cache, position, emitted tokens) checkpoints
+    mid-generation — a daemon submission of it survives a restart and
+    resumes decoding at the journaled slice."""
+    from ..sched.workloads import register_workload
+
+    engines: dict = {}
+
+    def decode_factory(batch: int = 2, prompt_len: int = 16,
+                       decode: int = 32, slice_tokens: int = 4):
+        key = (batch, prompt_len, decode)
+        eng = engines.get(key)
+        if eng is None:
+            eng = InferenceEngine(cfg,
+                                  max_len=prompt_len + decode + 8)
+            engines[key] = eng
+        toks = jax.random.randint(jax.random.PRNGKey(seed),
+                                  (batch, prompt_len), 0, cfg.vocab_size)
+        eng.prefill_batch(toks)
+        return eng.decode_segment(decode, slice_tokens=slice_tokens)
+
+    register_workload("serve.decode", decode_factory)
+
+
+def run_daemon(cfg, args) -> None:
+    """Daemon mode: the serving workloads registered, then the durable
+    scheduling daemon (`repro.sched.daemon`) owning the cluster — submit
+    with ``python -m repro.sched.client --socket ... submit --workload
+    serve.decode ...`` and the generation survives ``kill -9``."""
+    import os
+    import signal
+
+    from ..sched.daemon import SchedDaemon
+
+    register_serving_workloads(cfg)
+    daemon = SchedDaemon(args.store, args.socket,
+                         n_devices=args.n_devices)
+    daemon.start()
+    print(f"serve daemon ready pid={os.getpid()} "
+          f"socket={daemon.socket_path} "
+          f"recovered={daemon.recovery['recovered']} "
+          f"resumed={sorted(daemon.recovery['resumed'])}", flush=True)
+    signal.signal(signal.SIGTERM, lambda *a: daemon._stop.set())
+    try:
+        daemon.serve_forever()
+    finally:
+        daemon.stop()
 
 
 def main() -> None:
@@ -244,10 +298,23 @@ def main() -> None:
     ap.add_argument("--n-devices", type=int, default=1,
                     help="N>1: disaggregated prefill/decode pools on "
                          "separate devices via ClusterExecutor")
+    ap.add_argument("--daemon", action="store_true",
+                    help="run the durable scheduling daemon with the "
+                         "serving workloads registered")
+    ap.add_argument("--store", default=None,
+                    help="daemon job-store directory (--daemon)")
+    ap.add_argument("--socket", default=None,
+                    help="daemon unix socket (--daemon; default "
+                         "<store>/sock)")
     args = ap.parse_args()
 
     entry = get(args.arch)
     cfg = entry.reduced() if args.reduced else entry.config()
+    if args.daemon:
+        if not args.store:
+            ap.error("--daemon requires --store")
+        run_daemon(cfg, args)
+        return
     if args.n_devices > 1:
         run_disaggregated(cfg, args)
         return

@@ -1,13 +1,32 @@
-from .admission import AdmissionController, JobProfile
+from .admission import (AdmissionController, AdmissionDecision, JobProfile,
+                        RecoveryConformanceError, decisions_match)
 from .checkpointer import (AsyncCheckpointer, latest_carry, latest_step,
                            restore, save, save_carry)
 from .cluster import ClusterExecutor
 from .executor import DeviceExecutor, ExecutorTrace, TraceEvent
 from .fault import FaultTolerantLoop, Heartbeat, StallError, with_retry
 from .job import RTJob
+from .store import JobRecord, JobStore, StoreState
+from .workloads import register_workload
 
-__all__ = ["AdmissionController", "JobProfile", "AsyncCheckpointer",
-           "latest_step", "restore", "save", "save_carry", "latest_carry",
-           "ClusterExecutor", "DeviceExecutor", "ExecutorTrace",
+__all__ = ["AdmissionController", "AdmissionDecision", "JobProfile",
+           "RecoveryConformanceError", "decisions_match",
+           "AsyncCheckpointer", "latest_step", "restore", "save",
+           "save_carry", "latest_carry", "SOCKET_ENV", "SchedClient",
+           "connect", "ClusterExecutor", "DeviceExecutor", "ExecutorTrace",
            "TraceEvent", "FaultTolerantLoop", "Heartbeat", "StallError",
-           "with_retry", "RTJob"]
+           "with_retry", "RTJob", "JobRecord", "JobStore", "StoreState",
+           "register_workload"]
+
+
+def __getattr__(name):
+    # lazy: the daemon pulls in the full runtime stack, and an eager
+    # client import would double-import under `python -m
+    # repro.sched.client` (runpy warns about the stale sys.modules copy)
+    if name == "SchedDaemon":
+        from .daemon import SchedDaemon
+        return SchedDaemon
+    if name in ("SchedClient", "connect", "SOCKET_ENV"):
+        from . import client
+        return getattr(client, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

@@ -16,15 +16,153 @@ admission controller all resolve one policy name to one consistent
 (implementation, analysis) pair."""
 from __future__ import annotations
 
+import dataclasses
 import math
 from dataclasses import dataclass
-from typing import Callable, Iterable, List, Optional
+from typing import Callable, Iterable, List, Mapping, Optional
 
 from ..core import GpuSegment, Task, Taskset, schedulable
 from ..core.analysis import _EPS
 from ..core.audsley import assign_gpu_priorities
 from ..core.policy import policy_spec
 from ..core.segments import WorkloadProfile
+
+
+class RecoveryConformanceError(RuntimeError):
+    """Recovery re-ran admission over the journaled taskset and did NOT
+    reproduce the recorded decisions — the store and the analysis have
+    drifted (a changed RTA, a corrupted journal, a different platform
+    config), so the journaled guarantees cannot be trusted.  The
+    recovery path must refuse to come up rather than silently serve
+    jobs whose admission evidence no longer holds (the durable analogue
+    of tests/conformance.py's live↔simulated identity)."""
+
+
+# Reason codes carried by every admission decision, in refusal order:
+# the first gate that fires names the decision.
+REASONS = ("accepted", "validation-refused", "headroom-fast-reject",
+           "rta-reject")
+
+
+class AdmissionDecision(dict):
+    """Structured admission result (one decision of ``try_admit``).
+
+    A ``dict`` subclass on purpose: every existing call site reads the
+    mapping face (``res["admitted"]``, ``res.get("error")``,
+    ``res["wcrt"]``) and the job store journals decisions verbatim as
+    JSON — both keep working unchanged — while new code gets the typed
+    surface: ``bool(decision)`` is the acceptance, ``.reason`` is one
+    of :data:`REASONS`, ``.wcrt`` the RTA evidence, ``.device``/``.job``
+    the binding ``ClusterExecutor`` attached.
+
+    Keys always present: ``admitted`` (bool), ``reason``, ``via``
+    (``"default"``/``"audsley"``/``"best_effort"``/None), ``wcrt``
+    (task name → WCRT ms; empty when no fixed point ran).  Optional:
+    ``error`` (human-readable refusal), ``gpu_priorities`` (Audsley
+    assignment), ``device`` (binding), ``job`` (the live RTJob —
+    stripped before journaling)."""
+
+    def __init__(self, *args, **kw):
+        super().__init__(*args, **kw)
+        self.setdefault("admitted", False)
+        self.setdefault("reason",
+                        "accepted" if self["admitted"] else "rta-reject")
+        self.setdefault("via", None)
+        self.setdefault("wcrt", {})
+        if self["reason"] not in REASONS:
+            raise ValueError(f"unknown reason code {self['reason']!r} "
+                             f"(expected one of {REASONS})")
+        if self["admitted"] != (self["reason"] == "accepted"):
+            raise ValueError(
+                f"admitted={self['admitted']} contradicts "
+                f"reason={self['reason']!r}")
+
+    # -- typed face ------------------------------------------------------
+    def __bool__(self) -> bool:
+        return bool(self["admitted"])
+
+    @property
+    def accepted(self) -> bool:
+        return bool(self["admitted"])
+
+    @property
+    def reason(self) -> str:
+        return self["reason"]
+
+    @property
+    def via(self) -> Optional[str]:
+        return self["via"]
+
+    @property
+    def wcrt(self) -> dict:
+        return self["wcrt"]
+
+    @property
+    def error(self) -> Optional[str]:
+        return self.get("error")
+
+    @property
+    def device(self) -> Optional[int]:
+        return self.get("device")
+
+    @property
+    def job(self):
+        return self.get("job")
+
+    # -- helpers ---------------------------------------------------------
+    @classmethod
+    def accept(cls, via: str, wcrt: Optional[dict] = None,
+               **extra) -> "AdmissionDecision":
+        return cls(admitted=True, reason="accepted", via=via,
+                   wcrt=dict(wcrt or {}), **extra)
+
+    @classmethod
+    def refuse(cls, reason: str, *, error: Optional[str] = None,
+               wcrt: Optional[dict] = None, **extra) -> "AdmissionDecision":
+        d = cls(admitted=False, reason=reason, via=None,
+                wcrt=dict(wcrt or {}), **extra)
+        if error is not None:
+            d["error"] = error
+        return d
+
+    def bound(self, device: Optional[int], job=None) -> "AdmissionDecision":
+        """A copy with the placement attached (``ClusterExecutor``'s
+        admit→place→bind result)."""
+        out = AdmissionDecision(self)
+        out["device"] = device
+        out["job"] = job
+        return out
+
+    def journal_form(self) -> dict:
+        """The JSON-serializable view the job store appends verbatim:
+        everything except the live RTJob handle."""
+        return {k: v for k, v in self.items() if k != "job"}
+
+
+def decisions_match(a: Mapping, b: Mapping, tol: float = 1e-6) -> bool:
+    """Decision identity for recovery conformance: same acceptance,
+    reason, via, Audsley assignment, and WCRT evidence (to ``tol``,
+    inf-for-inf).  ``device``/``job``/``error`` wording are excluded —
+    placement is compared separately by the recovery path and the
+    refusal text is presentation, not evidence."""
+    if (bool(a.get("admitted")) != bool(b.get("admitted"))
+            or a.get("reason") != b.get("reason")
+            or a.get("via") != b.get("via")
+            or a.get("gpu_priorities") != b.get("gpu_priorities")):
+        return False
+    wa, wb = a.get("wcrt") or {}, b.get("wcrt") or {}
+    if set(wa) != set(wb):
+        return False
+    for k, va in wa.items():
+        vb = wb[k]
+        va = math.inf if va is None else float(va)
+        vb = math.inf if vb is None else float(vb)
+        if math.isinf(va) or math.isinf(vb):
+            if va != vb:
+                return False
+        elif abs(va - vb) > tol:
+            return False
+    return True
 
 
 def rta_for(policy: str, wait_mode: str) -> Callable:
@@ -83,6 +221,23 @@ class JobProfile:
                    deadline_ms=deadline_ms, best_effort=best_effort,
                    device=device)
 
+    def to_dict(self) -> dict:
+        """JSON-serializable form (the job store journals profiles)."""
+        d = dataclasses.asdict(self)
+        d["device_segments_ms"] = [list(s) for s in
+                                   self.device_segments_ms]
+        return d
+
+    @classmethod
+    def from_dict(cls, d: Mapping) -> "JobProfile":
+        """Inverse of :meth:`to_dict` (JSON round-trips tuples as
+        lists; ``to_task`` unpacks either, but recovery compares
+        profiles by value so the shape is normalized here)."""
+        d = dict(d)
+        d["device_segments_ms"] = [tuple(s) for s in
+                                   d["device_segments_ms"]]
+        return cls(**d)
+
 
 def headroom_violation(ts: Taskset, headroom: float = 1.0
                        ) -> Optional[str]:
@@ -138,8 +293,10 @@ class AdmissionController:
                        kthread_cpu=self.n_cpus,  # dedicated scheduler core
                        n_devices=self.n_devices)
 
-    def try_admit(self, prof: JobProfile) -> dict:
-        """Returns {admitted: bool, wcrt: {...}, via: "default"|"audsley"}.
+    def try_admit(self, prof: JobProfile) -> AdmissionDecision:
+        """Returns an :class:`AdmissionDecision` (a dict with keys
+        ``admitted``/``reason``/``via``/``wcrt``/…, so historical
+        ``res["admitted"]`` call sites read it unchanged).
         Best-effort jobs are always admitted (they have no guarantee) —
         but still validated, or an unbuildable profile would poison every
         later ``_taskset()`` build."""
@@ -147,47 +304,48 @@ class AdmissionController:
             # refuse, don't crash: a bad profile must not take down the
             # admission path (Taskset validation would raise), nor may it
             # be appended and poison every later _taskset() build
-            return {"admitted": False, "via": None, "wcrt": {},
-                    "error": f"device {prof.device} out of range for "
-                             f"{self.n_devices}-device platform"}
+            return AdmissionDecision.refuse(
+                "validation-refused",
+                error=f"device {prof.device} out of range for "
+                      f"{self.n_devices}-device platform")
         if any(p.name == prof.name for p in self.admitted):
             # a duplicate name would silently merge WCRT dict entries
-            return {"admitted": False, "via": None, "wcrt": {},
-                    "error": f"job name {prof.name!r} already admitted"}
+            return AdmissionDecision.refuse(
+                "validation-refused",
+                error=f"job name {prof.name!r} already admitted")
         try:
             # same refuse-don't-crash rule for every other profile defect
             # Taskset validation catches (colliding priorities, bad cpu):
             # a live gatekeeper must return a refusal, not raise
             ts = self._taskset(prof)
         except ValueError as e:
-            return {"admitted": False, "via": None, "wcrt": {},
-                    "error": str(e)}
+            return AdmissionDecision.refuse("validation-refused",
+                                            error=str(e))
         if prof.best_effort:
             self.admitted.append(prof)
-            return {"admitted": True, "via": "best_effort", "wcrt": {}}
+            return AdmissionDecision.accept("best_effort")
         reason = headroom_violation(ts, self.headroom)
         if reason is not None:
             # the fast-reject: a hopeless taskset never reaches a fixed
             # point (wcrt stays empty — nothing was computed)
-            return {"admitted": False, "via": None, "wcrt": {},
-                    "error": reason}
+            return AdmissionDecision.refuse("headroom-fast-reject",
+                                            error=reason)
         rta = self.rta
         if schedulable(ts, rta):
             self.admitted.append(prof)
-            return {"admitted": True, "via": "default",
-                    "wcrt": rta(ts)}
+            return AdmissionDecision.accept("default", rta(ts))
         if self.try_gpu_priorities:
             assigned = assign_gpu_priorities(ts, rta)
             if assigned is not None:
                 self.admitted.append(prof)
-                return {"admitted": True, "via": "audsley",
-                        "wcrt": rta(assigned, use_gpu_prio=True),
-                        "gpu_priorities": {t.name: t.gpu_priority
-                                           for t in assigned.tasks}}
-        return {"admitted": False, "via": None, "wcrt": rta(ts)}
+                return AdmissionDecision.accept(
+                    "audsley", rta(assigned, use_gpu_prio=True),
+                    gpu_priorities={t.name: t.gpu_priority
+                                    for t in assigned.tasks})
+        return AdmissionDecision.refuse("rta-reject", wcrt=rta(ts))
 
     def try_admit_many(self, profs: Iterable[JobProfile], *,
-                       backend: str = "numpy") -> List[dict]:
+                       backend: str = "numpy") -> List[AdmissionDecision]:
         """Admit an arrival burst in order, batching the RTA fixed
         points through `core/batch.py` (``backend="jax"`` lowers them
         to the jit-compiled device kernels — the streaming-admission
@@ -209,7 +367,7 @@ class AdmissionController:
         if kind is None or len(profs) <= 1:
             return [self.try_admit(p) for p in profs]
         from ..core.batch import batch_rta
-        results: List[dict] = []
+        results: List[AdmissionDecision] = []
         i = 0
         while i < len(profs):
             run: List[JobProfile] = []
@@ -243,8 +401,7 @@ class AdmissionController:
                 k += 1
             for p, w in zip(run[:k], wcrts[:k]):
                 self.admitted.append(p)
-                results.append({"admitted": True, "via": "default",
-                                "wcrt": w})
+                results.append(AdmissionDecision.accept("default", w))
             i += k
             if k < len(run):
                 # first refusal: sequential fallback runs the Audsley
@@ -270,3 +427,52 @@ class AdmissionController:
                 del self.admitted[i]
                 return True
         return False
+
+    # ------------------------------------------------------------------
+    # durable state: export / rebuild (sched/store.py, sched/daemon.py)
+    # ------------------------------------------------------------------
+    def export_config(self) -> dict:
+        """The constructor arguments that reproduce this controller's
+        platform model — journaled by the job store so recovery builds
+        an identically configured gatekeeper."""
+        return {"mode": self.mode, "wait_mode": self.wait_mode,
+                "n_cpus": self.n_cpus, "epsilon_ms": self.epsilon_ms,
+                "try_gpu_priorities": self.try_gpu_priorities,
+                "n_devices": self.n_devices, "headroom": self.headroom}
+
+    def export_state(self) -> dict:
+        """Config + the admitted profiles in admission order (the order
+        *is* state: each decision was taken against the prefix)."""
+        return {"config": self.export_config(),
+                "admitted": [p.to_dict() for p in self.admitted]}
+
+    @classmethod
+    def rebuild(cls, config: Mapping, entries: Iterable[Mapping], *,
+                conform: bool = True) -> "AdmissionController":
+        """Rebuild a controller from journaled state by *re-running*
+        admission over the journaled profiles in their recorded order.
+
+        Each ``entry`` is ``{"profile": ..., "decision": ...}`` as the
+        job store recorded it.  With ``conform=True`` (the recovery
+        default) every re-derived decision must be decision-identical
+        to the recorded one (:func:`decisions_match` — acceptance,
+        reason, via, Audsley assignment, WCRT evidence to tolerance) or
+        :class:`RecoveryConformanceError` is raised: an admitted RT
+        job's guarantee survives a crash only if the analysis still
+        proves it."""
+        ctl = cls(**dict(config))
+        for n, entry in enumerate(entries):
+            prof = JobProfile.from_dict(entry["profile"])
+            recorded = entry.get("decision")
+            redone = ctl.try_admit(prof)
+            if not redone["admitted"]:
+                raise RecoveryConformanceError(
+                    f"journaled job {prof.name!r} (entry {n}) refused on "
+                    f"re-admission: {redone.get('error') or redone['wcrt']}")
+            if conform and recorded is not None \
+                    and not decisions_match(redone, recorded):
+                raise RecoveryConformanceError(
+                    f"journaled job {prof.name!r} (entry {n}): recovered "
+                    f"decision {redone.journal_form()} does not reproduce "
+                    f"the recorded decision {dict(recorded)}")
+        return ctl

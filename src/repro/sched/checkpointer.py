@@ -8,12 +8,15 @@ provides — the primitive behind elastic re-scaling (elastic.py).
 """
 from __future__ import annotations
 
+import atexit
+import contextlib
 import json
 import os
 import shutil
 import threading
 import time
-from typing import Any, Optional
+import weakref
+from typing import Any, Iterator, Optional, Tuple
 
 import jax
 import ml_dtypes
@@ -69,6 +72,32 @@ def latest_step(ckpt_dir: str) -> Optional[int]:
         return int(f.read().strip())
 
 
+# steps currently being read by a `restore` call, keyed by
+# (abspath(ckpt_dir), step) with a reader count — `AsyncCheckpointer._gc`
+# must not delete a step out from under a concurrent restore (the
+# restore would crash mid-read on a missing arr_<i>.npy)
+_READERS_LOCK = threading.Lock()
+_READERS: dict = {}
+
+
+@contextlib.contextmanager
+def _reading(ckpt_dir: str, step: int) -> Iterator[Tuple[str, int]]:
+    """Read-guard for one checkpoint step: while held, the step is
+    exempt from ``AsyncCheckpointer._gc`` deletion."""
+    key = (os.path.abspath(ckpt_dir), step)
+    with _READERS_LOCK:
+        _READERS[key] = _READERS.get(key, 0) + 1
+    try:
+        yield key
+    finally:
+        with _READERS_LOCK:
+            n = _READERS.get(key, 1) - 1
+            if n <= 0:
+                _READERS.pop(key, None)
+            else:
+                _READERS[key] = n
+
+
 def restore(ckpt_dir: str, like: Any, step: Optional[int] = None,
             shardings: Any = None) -> Any:
     """Restore into the structure of ``like``; with ``shardings`` the
@@ -78,24 +107,25 @@ def restore(ckpt_dir: str, like: Any, step: Optional[int] = None,
         step = latest_step(ckpt_dir)
         if step is None:
             raise FileNotFoundError(f"no checkpoint in {ckpt_dir}")
-    d = os.path.join(ckpt_dir, f"step_{step:08d}")
-    with open(os.path.join(d, "manifest.json")) as f:
-        meta = json.load(f)
-    leaves, treedef = _flatten(like)
-    out = []
-    sh_leaves = (jax.tree_util.tree_flatten(shardings)[0]
-                 if shardings is not None else [None] * len(leaves))
-    for i, (leaf, sh) in enumerate(zip(leaves, sh_leaves)):
-        arr = np.load(os.path.join(d, f"arr_{i}.npy"))
-        saved_dt = meta["dtypes"][i]
-        if saved_dt in _BITCAST:
-            arr = arr.view(np.dtype(getattr(ml_dtypes, saved_dt)))
-        if hasattr(leaf, "dtype") and arr.dtype != leaf.dtype:
-            arr = arr.astype(leaf.dtype)
-        if sh is not None:
-            out.append(jax.device_put(arr, sh))
-        else:
-            out.append(jax.numpy.asarray(arr))
+    with _reading(ckpt_dir, step):
+        d = os.path.join(ckpt_dir, f"step_{step:08d}")
+        with open(os.path.join(d, "manifest.json")) as f:
+            meta = json.load(f)
+        leaves, treedef = _flatten(like)
+        out = []
+        sh_leaves = (jax.tree_util.tree_flatten(shardings)[0]
+                     if shardings is not None else [None] * len(leaves))
+        for i, (leaf, sh) in enumerate(zip(leaves, sh_leaves)):
+            arr = np.load(os.path.join(d, f"arr_{i}.npy"))
+            saved_dt = meta["dtypes"][i]
+            if saved_dt in _BITCAST:
+                arr = arr.view(np.dtype(getattr(ml_dtypes, saved_dt)))
+            if hasattr(leaf, "dtype") and arr.dtype != leaf.dtype:
+                arr = arr.astype(leaf.dtype)
+            if sh is not None:
+                out.append(jax.device_put(arr, sh))
+            else:
+                out.append(jax.numpy.asarray(arr))
     return jax.tree_util.tree_unflatten(treedef, out)
 
 
@@ -125,14 +155,36 @@ def latest_carry(ckpt_dir: str, label: str, like: Any
     return idx, restore(d, like, step=idx)
 
 
+# all live AsyncCheckpointers, drained once at interpreter exit: the
+# worker is a daemon thread, so without this an in-flight save is killed
+# mid-write at shutdown and silently dropped (the tmp-rename keeps the
+# *previous* checkpoint intact, but the newest state is lost — exactly
+# the checkpoint a crash-recovery path wants)
+_LIVE: "weakref.WeakSet[AsyncCheckpointer]" = weakref.WeakSet()
+
+
+def _drain_at_exit() -> None:
+    for ckpt in list(_LIVE):
+        try:
+            ckpt.wait()
+        except Exception:  # noqa: BLE001 — exit path must not raise
+            pass
+
+
+atexit.register(_drain_at_exit)
+
+
 class AsyncCheckpointer:
     """Fire-and-forget saves on a worker thread (training never stalls on
-    I/O); ``wait()`` drains before shutdown."""
+    I/O); ``wait()`` drains before shutdown, and an atexit hook drains
+    every live instance so interpreter exit cannot drop an in-flight
+    save."""
 
     def __init__(self, ckpt_dir: str, keep: int = 3):
         self.ckpt_dir = ckpt_dir
         self.keep = keep
         self._thread: Optional[threading.Thread] = None
+        _LIVE.add(self)
 
     def save(self, step: int, tree: Any) -> None:
         self.wait()
@@ -154,6 +206,14 @@ class AsyncCheckpointer:
         steps = sorted(
             int(d.split("_")[1]) for d in os.listdir(self.ckpt_dir)
             if d.startswith("step_") and not d.endswith(".tmp"))
+        root = os.path.abspath(self.ckpt_dir)
         for s in steps[:-self.keep]:
+            with _READERS_LOCK:
+                busy = _READERS.get((root, s), 0) > 0
+            if busy:
+                # a concurrent restore is reading this step (e.g. a
+                # FaultTolerantLoop rollback racing the post-save gc):
+                # skip it now, the next gc pass collects it
+                continue
             shutil.rmtree(os.path.join(self.ckpt_dir, f"step_{s:08d}"),
                           ignore_errors=True)

@@ -1,0 +1,369 @@
+"""One public submission facade: ``repro.sched.connect()`` → SchedClient.
+
+Every way of getting work onto the platform now goes through one
+surface (DESIGN.md §9):
+
+    client = repro.sched.connect()                  # in-process cluster
+    client = repro.sched.connect(n_devices=2, policy="ioctl")
+    client = repro.sched.connect(cluster)           # wrap an existing one
+    client = repro.sched.connect("/run/schedd.sock")  # daemon socket
+    client = repro.sched.connect()  # $REPRO_SCHED_SOCKET set → daemon
+
+``SchedClient.submit/release/status/per_device_mort`` behave identically
+against an in-process :class:`~repro.sched.cluster.ClusterExecutor` and
+the daemon's unix socket; the historical direct paths
+(``ClusterExecutor.submit``, ``DeviceExecutor(mode=...)``) still work
+but emit ``DeprecationWarning``.
+
+Over the socket, a submission's workload must be a *registered spec*
+(``sched.workloads``) so the daemon can journal and reconstruct it;
+in-process clients may additionally pass live ``workload=``/``body=``
+objects (which are not durable — a spec-based submission is journaled
+and survives a crash, a closure-based one does not).
+
+The socket protocol is one JSON request line per connection, one JSON
+response line back — deliberately connectionless per call, so a client
+survives a daemon restart without resubscribing (the recovery suite
+kills the daemon mid-conversation).
+"""
+from __future__ import annotations
+
+import json
+import os
+import socket as socketlib
+from typing import Any, Dict, Mapping, Optional, Union
+
+from .admission import AdmissionDecision, JobProfile
+from .cluster import ClusterExecutor
+from .workloads import make_body, normalize_spec
+
+__all__ = ["SchedClient", "connect", "SOCKET_ENV"]
+
+SOCKET_ENV = "REPRO_SCHED_SOCKET"
+
+
+def _int_keys(d: Mapping) -> dict:
+    """JSON object keys are strings; device-indexed maps come back
+    int-keyed."""
+    return {int(k): v for k, v in d.items()}
+
+
+# --------------------------------------------------------------------------
+# backends
+# --------------------------------------------------------------------------
+
+class _LocalBackend:
+    """Facade over an in-process ClusterExecutor (owned or adopted)."""
+
+    def __init__(self, cluster: ClusterExecutor, owns: bool):
+        self.cluster = cluster
+        self._owns = owns
+
+    def submit(self, prof: JobProfile, *, workload=None, body=None,
+               workload_spec=None, n_iterations=1, start=False,
+               stop_after_s=None, strategy=None) -> AdmissionDecision:
+        meta = None
+        if workload_spec is not None:
+            if workload is not None or body is not None:
+                raise ValueError("pass workload_spec= alone, not with "
+                                 "workload=/body=")
+            spec = normalize_spec(workload_spec)
+            body = make_body(self.cluster, prof.name, spec,
+                             store=self.cluster.store)
+            meta = {"workload": spec}
+        return self.cluster._submit(
+            prof, workload, body, strategy=strategy,
+            n_iterations=n_iterations, start=start,
+            stop_after_s=stop_after_s, journal_meta=meta)
+
+    def release(self, name: str) -> bool:
+        return self.cluster.release(name)
+
+    def status(self) -> dict:
+        return {"pid": os.getpid(), "backend": "local",
+                "n_devices": self.cluster.n_devices,
+                "placement": self.cluster.placement,
+                "admitted": [p.name for p in
+                             self.cluster.admission.admitted],
+                "stats": self.cluster.stats()}
+
+    def per_device_mort(self) -> Dict[int, Optional[float]]:
+        return self.cluster.per_device_mort()
+
+    def ping(self) -> dict:
+        return {"ok": True, "pid": os.getpid(), "backend": "local"}
+
+    def join(self, timeout: Optional[float] = None) -> None:
+        self.cluster.join(timeout)
+
+    def close(self, shutdown: Optional[bool] = None) -> None:
+        if shutdown if shutdown is not None else self._owns:
+            self.cluster.shutdown()
+
+
+class _SocketBackend:
+    """Facade over the daemon's unix socket (one JSON line per call)."""
+
+    def __init__(self, path: Union[str, os.PathLike]):
+        self.path = os.fspath(path)
+        self.cluster = None   # execution lives in the daemon process
+
+    def request(self, op: str, timeout: float = 60.0,
+                **payload) -> Any:
+        req = dict(payload, op=op)
+        with socketlib.socket(socketlib.AF_UNIX,
+                              socketlib.SOCK_STREAM) as s:
+            s.settimeout(timeout)
+            s.connect(self.path)
+            s.sendall((json.dumps(req) + "\n").encode())
+            s.shutdown(socketlib.SHUT_WR)
+            buf = b""
+            while True:
+                chunk = s.recv(65536)
+                if not chunk:
+                    break
+                buf += chunk
+        if not buf.strip():
+            raise RuntimeError(f"no response from daemon for {op!r} "
+                               "(connection closed)")
+        resp = json.loads(buf.decode())
+        if not resp.get("ok"):
+            raise RuntimeError(f"daemon refused {op!r}: "
+                               f"{resp.get('error')}")
+        return resp.get("result")
+
+    def submit(self, prof: JobProfile, *, workload=None, body=None,
+               workload_spec=None, n_iterations=1, start=False,
+               stop_after_s=None, strategy=None) -> AdmissionDecision:
+        if workload is not None or body is not None:
+            raise ValueError(
+                "a daemon submission must be a registered workload spec "
+                "(workload_spec=...): live workload/body objects cannot "
+                "be journaled or reconstructed after a crash")
+        if workload_spec is None:
+            raise ValueError("pass workload_spec= (a sched.workloads "
+                             "registry name or {'name', 'kwargs'} spec)")
+        result = self.request(
+            "submit", profile=prof.to_dict(),
+            workload=normalize_spec(workload_spec, check=False),
+            n_iterations=n_iterations, start=start,
+            stop_after_s=stop_after_s, strategy=strategy)
+        return AdmissionDecision(result)
+
+    def release(self, name: str) -> bool:
+        return bool(self.request("release", name=name))
+
+    def status(self) -> dict:
+        st = self.request("status")
+        stats = st.get("stats") or {}
+        for key in ("per_device_mort", "dispatches", "updates", "jobs"):
+            if key in stats:
+                stats[key] = _int_keys(stats[key])
+        return st
+
+    def per_device_mort(self) -> Dict[int, Optional[float]]:
+        return _int_keys(self.request("per_device_mort"))
+
+    def ping(self) -> dict:
+        return self.request("ping")
+
+    def join(self, timeout: Optional[float] = None) -> None:
+        raise NotImplementedError(
+            "join() is in-process only: daemon jobs outlive the client "
+            "by design — poll status()/jobs() instead")
+
+    def close(self, shutdown: Optional[bool] = None) -> None:
+        if shutdown:
+            try:
+                self.request("shutdown")
+            except (OSError, RuntimeError):
+                pass  # daemon already gone
+
+
+# --------------------------------------------------------------------------
+# the public client
+# --------------------------------------------------------------------------
+
+class SchedClient:
+    """The one submission surface: submit / release / status /
+    per_device_mort, identical against an in-process cluster and the
+    daemon socket."""
+
+    def __init__(self, backend):
+        self._backend = backend
+
+    @property
+    def cluster(self) -> Optional[ClusterExecutor]:
+        """The in-process cluster (None for a socket client) — job
+        bodies that bracket their own device segments still talk to
+        the executor face directly."""
+        return self._backend.cluster
+
+    def submit(self, prof: JobProfile, *, workload=None, body=None,
+               workload_spec=None, n_iterations: int = 1,
+               start: bool = False,
+               stop_after_s: Optional[float] = None,
+               strategy: Optional[str] = None) -> AdmissionDecision:
+        """Admit → place → bind (→ start) one job; returns the
+        structured :class:`AdmissionDecision` with the winning device.
+
+        ``workload_spec`` (registry name or spec dict) is the durable
+        path and works on both backends; ``workload=`` (a
+        SegmentedWorkload) and ``body=`` (a callable) are in-process
+        only."""
+        return self._backend.submit(
+            prof, workload=workload, body=body,
+            workload_spec=workload_spec, n_iterations=n_iterations,
+            start=start, stop_after_s=stop_after_s, strategy=strategy)
+
+    def release(self, name: str) -> bool:
+        """Retire an admitted job: stops charging admissions, frees the
+        name."""
+        return self._backend.release(name)
+
+    def status(self) -> dict:
+        return self._backend.status()
+
+    def per_device_mort(self) -> Dict[int, Optional[float]]:
+        return self._backend.per_device_mort()
+
+    def ping(self) -> dict:
+        return self._backend.ping()
+
+    def jobs(self) -> dict:
+        """Per-job detail (completions, MORT, admitted WCRT evidence)
+        — daemon backend only for now; local callers hold the RTJob."""
+        if isinstance(self._backend, _SocketBackend):
+            return self._backend.request("jobs")
+        raise NotImplementedError("jobs() detail is served by the "
+                                  "daemon; local callers hold the RTJob")
+
+    def join(self, timeout: Optional[float] = None) -> None:
+        self._backend.join(timeout)
+
+    def close(self, shutdown: Optional[bool] = None) -> None:
+        """Release the client.  ``shutdown=True`` also stops the
+        backend (an owned in-process cluster shuts down by default; an
+        adopted one and a daemon keep running)."""
+        self._backend.close(shutdown)
+
+    def __enter__(self) -> "SchedClient":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+
+def connect(target: Union[str, os.PathLike, ClusterExecutor, None] = None,
+            **cluster_kwargs) -> SchedClient:
+    """The unified entry point of the scheduling platform.
+
+      * ``connect()`` — ``$REPRO_SCHED_SOCKET`` if set (daemon client),
+        else a fresh in-process single-device cluster;
+      * ``connect(n_devices=4, policy="ioctl", ...)`` — a fresh
+        in-process cluster built from the kwargs (owned: ``close()``
+        shuts it down);
+      * ``connect(existing_cluster)`` — adopt a live ClusterExecutor
+        (not owned);
+      * ``connect("/path/to/sock")`` — the daemon at that socket.
+    """
+    if isinstance(target, ClusterExecutor):
+        if cluster_kwargs:
+            raise ValueError("cluster kwargs make no sense when "
+                             "adopting an existing cluster")
+        return SchedClient(_LocalBackend(target, owns=False))
+    if target is None:
+        env = os.environ.get(SOCKET_ENV)
+        if env:
+            if cluster_kwargs:
+                raise ValueError(
+                    f"cluster kwargs make no sense with {SOCKET_ENV} "
+                    f"set (the daemon owns the platform)")
+            return SchedClient(_SocketBackend(env))
+        cluster_kwargs.setdefault("n_devices", 1)
+        return SchedClient(_LocalBackend(
+            ClusterExecutor(**cluster_kwargs), owns=True))
+    # a path → daemon socket
+    if cluster_kwargs:
+        raise ValueError("cluster kwargs make no sense for a daemon "
+                         "socket (the daemon owns the platform)")
+    return SchedClient(_SocketBackend(target))
+
+
+# --------------------------------------------------------------------------
+# CLI: the daemon's command-line client
+# --------------------------------------------------------------------------
+
+def main(argv=None) -> int:
+    import argparse
+
+    ap = argparse.ArgumentParser(
+        prog="repro.sched.client",
+        description="CLI client for the scheduling daemon")
+    ap.add_argument("--socket", default=os.environ.get(SOCKET_ENV),
+                    help=f"daemon unix socket (default: ${SOCKET_ENV})")
+    sub = ap.add_subparsers(dest="cmd", required=True)
+    for simple in ("ping", "status", "jobs", "mort", "shutdown",
+                   "compact"):
+        sub.add_parser(simple)
+    rel = sub.add_parser("release")
+    rel.add_argument("name")
+    sb = sub.add_parser("submit")
+    sb.add_argument("--name", required=True)
+    sb.add_argument("--workload", required=True,
+                    help="registered workload name (sched.workloads)")
+    sb.add_argument("--workload-kwargs", default="{}",
+                    help="JSON kwargs for the workload factory")
+    sb.add_argument("--period-ms", type=float, required=True)
+    sb.add_argument("--priority", type=int, required=True)
+    sb.add_argument("--deadline-ms", type=float, default=None)
+    sb.add_argument("--host-ms", type=float, default=1.0)
+    sb.add_argument("--misc-ms", type=float, default=0.5)
+    sb.add_argument("--exec-ms", type=float, required=True,
+                    help="device WCET of the whole segment (ms)")
+    sb.add_argument("--cpu", type=int, default=0)
+    sb.add_argument("--device", type=int, default=0)
+    sb.add_argument("--best-effort", action="store_true")
+    sb.add_argument("--n-iterations", type=int, default=1)
+    sb.add_argument("--start", action="store_true")
+    sb.add_argument("--stop-after-s", type=float, default=None)
+    args = ap.parse_args(argv)
+    if not args.socket:
+        ap.error(f"--socket (or ${SOCKET_ENV}) is required")
+
+    client = connect(args.socket)
+    if args.cmd == "ping":
+        out = client.ping()
+    elif args.cmd == "status":
+        out = client.status()
+    elif args.cmd == "jobs":
+        out = client.jobs()
+    elif args.cmd == "mort":
+        out = client.per_device_mort()
+    elif args.cmd == "release":
+        out = {"released": client.release(args.name)}
+    elif args.cmd == "compact":
+        out = client._backend.request("compact")
+    elif args.cmd == "shutdown":
+        client.close(shutdown=True)
+        out = {"ok": True}
+    else:  # submit
+        prof = JobProfile(
+            name=args.name, host_segments_ms=[args.host_ms],
+            device_segments_ms=[(args.misc_ms, args.exec_ms)],
+            period_ms=args.period_ms, priority=args.priority,
+            cpu=args.cpu, deadline_ms=args.deadline_ms,
+            best_effort=args.best_effort, device=args.device)
+        dec = client.submit(
+            prof,
+            workload_spec={"name": args.workload,
+                           "kwargs": json.loads(args.workload_kwargs)},
+            n_iterations=args.n_iterations, start=args.start,
+            stop_after_s=args.stop_after_s)
+        out = dec.journal_form()
+    print(json.dumps(out, indent=2, sort_keys=True, default=str))
+    return 0 if not isinstance(out, dict) or out.get("ok", True) else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -29,12 +29,16 @@ from __future__ import annotations
 
 import dataclasses
 import threading
-from typing import Dict, List, Optional, Sequence, Union
+import warnings
+from typing import TYPE_CHECKING, Dict, List, Mapping, Optional, Sequence, Union
 
 from ..core.policy import LEGACY_MODES
-from .admission import AdmissionController, JobProfile
+from .admission import AdmissionController, AdmissionDecision, JobProfile
 from .executor import DeviceExecutor, ExecutorTrace
 from .job import RTJob
+
+if TYPE_CHECKING:  # pragma: no cover
+    from .store import JobStore
 
 PLACEMENTS = ("pinned", "round_robin", "least_loaded")
 
@@ -58,7 +62,8 @@ class ClusterExecutor:
                  placement: str = "pinned",
                  try_gpu_priorities: bool = True,
                  trace: bool = False,
-                 admission: Optional[AdmissionController] = None):
+                 admission: Optional[AdmissionController] = None,
+                 store: Optional["JobStore"] = None):
         if n_devices < 1:
             raise ValueError("a cluster needs at least one device")
         if placement not in PLACEMENTS:
@@ -94,6 +99,11 @@ class ClusterExecutor:
                 f"admission controller models {admission.n_devices} "
                 f"devices, cluster has {n_devices}")
         self.admission = admission
+        # optional durability: a sched.store.JobStore that journals every
+        # admit→place→bind transaction (inside the transaction lock, so
+        # journal order == admission order — the property recovery's
+        # decision-conformance re-run depends on) and every release
+        self.store = store
         self._lock = threading.Lock()     # admit→place→bind transaction
         self._bindings: Dict[int, int] = {}   # job.uid -> device
         self._jobs: List[RTJob] = []
@@ -134,7 +144,25 @@ class ClusterExecutor:
     def submit(self, prof: JobProfile, workload=None, body=None, *,
                strategy: Optional[str] = None, n_iterations: int = 1,
                start: bool = False,
-               stop_after_s: Optional[float] = None) -> dict:
+               stop_after_s: Optional[float] = None) -> AdmissionDecision:
+        """Deprecated direct-submission path: go through the unified
+        facade instead — ``repro.sched.connect(...)`` returns a
+        ``SchedClient`` whose ``submit`` works identically against an
+        in-process cluster and the daemon socket (DESIGN.md §9)."""
+        warnings.warn(
+            "direct ClusterExecutor.submit() is deprecated; submit "
+            "through repro.sched.connect() -> SchedClient.submit()",
+            DeprecationWarning, stacklevel=2)
+        return self._submit(prof, workload, body, strategy=strategy,
+                            n_iterations=n_iterations, start=start,
+                            stop_after_s=stop_after_s)
+
+    def _submit(self, prof: JobProfile, workload=None, body=None, *,
+                strategy: Optional[str] = None, n_iterations: int = 1,
+                start: bool = False,
+                stop_after_s: Optional[float] = None,
+                journal_meta: Optional[Mapping] = None
+                ) -> AdmissionDecision:
         """Admit → place → bind in one transaction.
 
         For each candidate device (in placement order) the profile is
@@ -142,17 +170,24 @@ class ClusterExecutor:
         re-run; the first admitted placement wins, and the job is built
         already bound to it (``RTJob.device`` set, binding recorded) —
         there is no window where an admitted job is unplaced or a placed
-        job unadmitted.  Returns the admission dict extended with
-        ``device`` and ``job`` (both None when every placement was
-        refused; the dict then carries the last refusal).
+        job unadmitted.  Returns the :class:`AdmissionDecision` extended
+        with ``device`` and ``job`` (both None when every placement was
+        refused; the decision then carries the last refusal).
 
         Exactly one of ``workload`` (a ``core.segments.SegmentedWorkload``,
         bound to the winning device) or ``body`` (a plain RTJob body)
-        must be given.  ``start=True`` releases the job immediately."""
+        must be given.  ``start=True`` releases the job immediately.
+
+        With a :class:`~repro.sched.store.JobStore` attached, the whole
+        transaction is journaled *inside the lock* (profile, decision
+        with WCRT evidence, winning device, and ``journal_meta``'s
+        workload spec / iteration count), so the journal's accepted-
+        decision order is exactly the admission order."""
         if (workload is None) == (body is None):
             raise ValueError("pass exactly one of workload= or body=")
+        meta = dict(journal_meta or {})
         with self._lock:
-            last: Optional[dict] = None
+            last: Optional[AdmissionDecision] = None
             for dev in self.candidates(prof, strategy):
                 cand = (prof if prof.device == dev
                         else dataclasses.replace(prof, device=dev))
@@ -175,13 +210,21 @@ class ClusterExecutor:
                         strategy is None and
                         self.placement == "round_robin"):
                     self._rr = (dev + 1) % self.n_devices
-                out = dict(res, device=dev, job=job)
+                out = AdmissionDecision(res).bound(dev, job)
+                if self.store is not None:
+                    self.store.record_decision(
+                        cand, out, device=dev,
+                        workload=meta.get("workload"),
+                        n_iterations=n_iterations)
                 if start:
                     job.start(self, stop_after_s)
                 return out
-            out = dict(last or {"admitted": False, "via": None,
-                                "wcrt": {}})
-            out.update(device=None, job=None)
+            out = AdmissionDecision(
+                last if last is not None else {}).bound(None, None)
+            if self.store is not None:
+                self.store.record_decision(prof, out, device=None,
+                                           workload=meta.get("workload"),
+                                           n_iterations=n_iterations)
             return out
 
     def bind_job(self, job: RTJob, device: Optional[int] = None
@@ -277,6 +320,15 @@ class ClusterExecutor:
                      for d in range(self.n_devices)},
         }
 
+    def find_job(self, name: str) -> Optional[RTJob]:
+        """The live (newest) RTJob submitted under ``name``, or None —
+        the daemon's status/MORT reporting looks jobs up by name."""
+        with self._lock:
+            for job in reversed(self._jobs):
+                if job.name == name:
+                    return job
+        return None
+
     def assert_migration_free(self) -> None:
         """Every job's dispatches all happened on its bound device.
         Checked against the executor traces when tracing is on; the
@@ -316,7 +368,10 @@ class ClusterExecutor:
             for job in [j for j in self._jobs if j.name == name]:
                 self._jobs.remove(job)
                 self._bindings.pop(job.uid, None)
-            return self.admission.release(name)
+            released = self.admission.release(name)
+            if released and self.store is not None:
+                self.store.record_release(name)
+            return released
 
     def join(self, timeout: Optional[float] = None) -> None:
         for job in self._jobs:

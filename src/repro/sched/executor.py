@@ -37,6 +37,7 @@ from __future__ import annotations
 
 import threading
 import time
+import warnings
 from dataclasses import dataclass, field
 from typing import Callable, List, Optional, Union
 
@@ -96,6 +97,15 @@ class DeviceExecutor:
         (``sched.cluster.ClusterExecutor`` owns one executor per device);
         ``trace`` attaches an :class:`ExecutorTrace` event recorder."""
         assert wait_mode in ("busy", "suspend")
+        if mode is not None:
+            # the seed executor's construction surface, superseded twice
+            # over: policy names come from the registry, submission goes
+            # through repro.sched.connect() -> SchedClient (DESIGN.md §9)
+            warnings.warn(
+                "DeviceExecutor(mode=...) is deprecated; pass a registry "
+                "policy name (policy=...) — and submit jobs through "
+                "repro.sched.connect() -> SchedClient",
+                DeprecationWarning, stacklevel=2)
         if policy is None:
             policy = mode if mode is not None else "ioctl"
         if isinstance(policy, str):

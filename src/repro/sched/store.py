@@ -1,0 +1,292 @@
+"""Journaled job store: the durable face of the cluster runtime.
+
+The store makes an admitted job's guarantee survive the process that
+admitted it (DESIGN.md §9).  It records, per job: the submitted
+``JobProfile``, the :class:`~repro.sched.admission.AdmissionDecision`
+with its WCRT evidence (journaled verbatim — the decision dict *is* the
+JSON record), the immutable device binding chosen by the
+admit→place→bind transaction, the workload spec (a registry name +
+kwargs the daemon can reconstruct the job body from), and the latest
+checkpointed carry pointer of a sliced job mid-segment.
+
+Durability discipline:
+
+  * **append-only journal** (``journal.jsonl``): one JSON record per
+    line, flushed + fsync'd per append.  The journal order of accepted
+    decisions IS the admission order — ``ClusterExecutor`` appends
+    inside its transaction lock — which is what lets recovery re-run
+    admission over the journaled taskset and assert it reproduces the
+    recorded decisions (`AdmissionController.rebuild`).
+  * **atomic snapshot compaction** (``snapshot.json``): the folded
+    state is written to a temp file and ``os.replace``'d into place
+    (the same tmp-rename discipline as ``checkpointer.save``), then the
+    journal is atomically replaced by an empty one.  A crash between
+    the two replaces leaves snapshot *and* old journal — replay is
+    idempotent (records fold by job name), so the double-apply is
+    harmless.
+  * **carries** live under ``<root>/carries/<job>/`` via
+    ``checkpointer.save_carry`` (itself tmp-rename atomic); the journal
+    only holds the pointer (iteration, slice index).
+"""
+from __future__ import annotations
+
+import json
+import os
+import threading
+from dataclasses import dataclass, field
+from typing import Dict, List, Mapping, Optional
+
+from .admission import (AdmissionDecision, JobProfile,
+                        RecoveryConformanceError)
+
+__all__ = ["JobStore", "StoreState", "JobRecord",
+           "RecoveryConformanceError"]
+
+_JOURNAL = "journal.jsonl"
+_SNAPSHOT = "snapshot.json"
+_FORMAT_VERSION = 1
+
+
+@dataclass
+class JobRecord:
+    """Folded state of one live (admitted, unreleased) job."""
+    profile: dict
+    decision: dict
+    device: Optional[int] = None
+    workload: Optional[dict] = None      # {"name": ..., "kwargs": {...}}
+    n_iterations: int = 1
+    done_iterations: int = 0
+    # latest mid-segment carry pointer: {"iteration": i, "slice": s},
+    # None when the job is between iterations (or never sliced)
+    carry: Optional[dict] = None
+
+    @property
+    def name(self) -> str:
+        return self.profile["name"]
+
+    def to_json(self) -> dict:
+        return {"profile": self.profile, "decision": self.decision,
+                "device": self.device, "workload": self.workload,
+                "n_iterations": self.n_iterations,
+                "done_iterations": self.done_iterations,
+                "carry": self.carry}
+
+    @classmethod
+    def from_json(cls, d: Mapping) -> "JobRecord":
+        return cls(**dict(d))
+
+
+@dataclass
+class StoreState:
+    """The folded view of snapshot + journal."""
+    config: Optional[dict] = None        # AdmissionController.export_config
+    cluster: Optional[dict] = None       # ClusterExecutor shape (n_devices…)
+    jobs: Dict[str, JobRecord] = field(default_factory=dict)  # insertion-
+    # ordered = admission-ordered (dicts preserve insertion order)
+    refusals: List[dict] = field(default_factory=list)
+    resumes: List[dict] = field(default_factory=list)
+
+    def admission_entries(self) -> List[dict]:
+        """``AdmissionController.rebuild`` input: the live jobs, in
+        admission order."""
+        return [{"profile": r.profile, "decision": r.decision}
+                for r in self.jobs.values()]
+
+
+class JobStore:
+    """Append-only journal + atomic snapshot of the scheduling state."""
+
+    def __init__(self, root: str, *, sync: bool = True):
+        self.root = root
+        self.sync = sync
+        os.makedirs(root, exist_ok=True)
+        os.makedirs(self.carries_root, exist_ok=True)
+        self._lock = threading.Lock()
+        self._journal_path = os.path.join(root, _JOURNAL)
+        self._fh = open(self._journal_path, "a", encoding="utf-8")
+
+    # ------------------------------------------------------------------
+    # paths
+    # ------------------------------------------------------------------
+    @property
+    def carries_root(self) -> str:
+        return os.path.join(self.root, "carries")
+
+    def carry_dir(self, job: str) -> str:
+        """Checkpoint directory for one job's carries; pass to
+        ``checkpointer.save_carry(dir, label=job, ...)``."""
+        return os.path.join(self.carries_root, job)
+
+    # ------------------------------------------------------------------
+    # journal writes
+    # ------------------------------------------------------------------
+    def _append(self, rec: dict) -> None:
+        line = json.dumps(rec, sort_keys=True)
+        with self._lock:
+            self._fh.write(line + "\n")
+            self._fh.flush()
+            if self.sync:
+                os.fsync(self._fh.fileno())
+
+    def record_config(self, admission_config: Mapping,
+                      cluster: Optional[Mapping] = None) -> None:
+        """Platform model (admission config + cluster shape): recovery
+        must rebuild an identically configured gatekeeper."""
+        self._append({"rec": "config", "v": _FORMAT_VERSION,
+                      "admission": dict(admission_config),
+                      "cluster": dict(cluster or {})})
+
+    def record_decision(self, prof: JobProfile, decision: Mapping, *,
+                        device: Optional[int] = None,
+                        workload: Optional[Mapping] = None,
+                        n_iterations: int = 1) -> None:
+        """One admission decision, verbatim (accepted or refused).
+        Accepted decisions fold into live-job state on replay; refusals
+        are kept as an audit trail only."""
+        dec = (decision.journal_form()
+               if isinstance(decision, AdmissionDecision)
+               else {k: v for k, v in dict(decision).items()
+                     if k != "job"})
+        self._append({"rec": "decision", "profile": prof.to_dict(),
+                      "decision": dec, "device": device,
+                      "workload": dict(workload) if workload else None,
+                      "n_iterations": n_iterations})
+
+    def record_release(self, name: str) -> None:
+        self._append({"rec": "release", "job": name})
+
+    def record_carry(self, name: str, iteration: int,
+                     slice_idx: int) -> None:
+        """Pointer to the latest checkpointed carry (the pytree itself
+        went through ``checkpointer.save_carry(self.carry_dir(name),
+        label=name, slice_idx=...)``)."""
+        self._append({"rec": "carry", "job": name,
+                      "iteration": iteration, "slice": slice_idx})
+
+    def record_iteration_done(self, name: str, iteration: int) -> None:
+        """An iteration finalized: its carry pointer is dead (resume
+        restarts the *next* iteration from scratch)."""
+        self._append({"rec": "iter_done", "job": name,
+                      "iteration": iteration})
+
+    def record_resume(self, name: str, iteration: int,
+                      slice_idx: int) -> None:
+        """Recovery resumed this job mid-segment (audit record the
+        kill-and-recover suite asserts on)."""
+        self._append({"rec": "resume", "job": name,
+                      "iteration": iteration, "slice": slice_idx})
+
+    # ------------------------------------------------------------------
+    # replay
+    # ------------------------------------------------------------------
+    @staticmethod
+    def _apply(state: StoreState, rec: Mapping) -> None:
+        kind = rec.get("rec")
+        if kind == "config":
+            state.config = rec["admission"]
+            state.cluster = rec.get("cluster") or None
+        elif kind == "decision":
+            if rec["decision"].get("admitted"):
+                name = rec["profile"]["name"]
+                # idempotent fold: compaction may crash between the
+                # snapshot replace and the journal replace, re-applying
+                # the same record — last write wins, state identical
+                state.jobs[name] = JobRecord(
+                    profile=rec["profile"], decision=rec["decision"],
+                    device=rec.get("device"),
+                    workload=rec.get("workload"),
+                    n_iterations=rec.get("n_iterations", 1))
+            else:
+                state.refusals.append(rec)
+        elif kind == "release":
+            state.jobs.pop(rec["job"], None)
+        elif kind == "carry":
+            job = state.jobs.get(rec["job"])
+            if job is not None:
+                job.carry = {"iteration": rec["iteration"],
+                             "slice": rec["slice"]}
+        elif kind == "iter_done":
+            job = state.jobs.get(rec["job"])
+            if job is not None:
+                job.carry = None
+                job.done_iterations = max(job.done_iterations,
+                                          rec["iteration"] + 1)
+        elif kind == "resume":
+            state.resumes.append(dict(rec))
+        elif kind == "snapshot_state":
+            # snapshot.json payload replayed through the same fold
+            state.config = rec.get("config")
+            state.cluster = rec.get("cluster")
+            state.jobs = {name: JobRecord.from_json(j)
+                          for name, j in rec.get("jobs", {}).items()}
+        # unknown record kinds are skipped: an old daemon must be able
+        # to read a journal a newer one appended audit records to
+
+    def load(self) -> StoreState:
+        """Fold snapshot + journal into the current state."""
+        state = StoreState()
+        snap_path = os.path.join(self.root, _SNAPSHOT)
+        if os.path.exists(snap_path):
+            with open(snap_path, encoding="utf-8") as f:
+                snap = json.load(f)
+            self._apply(state, dict(snap, rec="snapshot_state"))
+        if os.path.exists(self._journal_path):
+            with open(self._journal_path, encoding="utf-8") as f:
+                for line in f:
+                    line = line.strip()
+                    if not line:
+                        continue
+                    try:
+                        rec = json.loads(line)
+                    except json.JSONDecodeError:
+                        # a torn final line (crash mid-append) is not
+                        # state: everything before it was fsync'd
+                        continue
+                    self._apply(state, rec)
+        return state
+
+    # ------------------------------------------------------------------
+    # compaction
+    # ------------------------------------------------------------------
+    def compact(self) -> StoreState:
+        """Fold the journal into ``snapshot.json`` and truncate it.
+
+        Both steps are atomic replaces; the crash window between them
+        (snapshot new, journal old) double-applies records on the next
+        load, which the idempotent fold absorbs."""
+        with self._lock:
+            self._fh.flush()
+            os.fsync(self._fh.fileno())
+        state = self.load()
+        snap = {"v": _FORMAT_VERSION, "config": state.config,
+                "cluster": state.cluster,
+                "jobs": {name: r.to_json()
+                         for name, r in state.jobs.items()}}
+        snap_path = os.path.join(self.root, _SNAPSHOT)
+        tmp = snap_path + ".tmp"
+        with open(tmp, "w", encoding="utf-8") as f:
+            json.dump(snap, f, sort_keys=True)
+            f.flush()
+            os.fsync(f.fileno())
+        os.replace(tmp, snap_path)
+        with self._lock:
+            self._fh.close()
+            tmp_j = self._journal_path + ".tmp"
+            with open(tmp_j, "w", encoding="utf-8") as f:
+                f.flush()
+                os.fsync(f.fileno())
+            os.replace(tmp_j, self._journal_path)
+            self._fh = open(self._journal_path, "a", encoding="utf-8")
+        return state
+
+    def close(self) -> None:
+        with self._lock:
+            if not self._fh.closed:
+                self._fh.flush()
+                self._fh.close()
+
+    def __enter__(self) -> "JobStore":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()

@@ -1,0 +1,181 @@
+"""The unified submission facade (sched/client.py, DESIGN.md §9):
+``connect()`` against an in-process cluster and against a live daemon
+socket behaves identically; the historical direct paths keep working but
+emit DeprecationWarning."""
+import warnings
+
+import pytest
+
+from repro.sched import (ClusterExecutor, DeviceExecutor, JobProfile,
+                         SchedClient, connect)
+
+
+def prof(name, prio, device=0, exec_ms=4.0, period_ms=50.0, cpu=0,
+         best_effort=False):
+    return JobProfile(name, host_segments_ms=[1.0],
+                      device_segments_ms=[(0.5, exec_ms)],
+                      period_ms=period_ms, priority=prio, cpu=cpu,
+                      best_effort=best_effort, device=device)
+
+
+# ---------------------------------------------------------------------------
+# in-process backend
+# ---------------------------------------------------------------------------
+
+def test_connect_owns_fresh_cluster_and_shuts_it_down():
+    client = connect(n_devices=2, policy="ioctl")
+    assert isinstance(client, SchedClient)
+    assert client.cluster.n_devices == 2
+    dec = client.submit(prof("a", 1), body=lambda job, it: None)
+    assert dec.accepted and dec.device == 0
+    assert client.status()["admitted"] == ["a"]
+    assert client.per_device_mort() == {0: None, 1: None}
+    client.close()     # owned: close() shuts the cluster down
+
+
+def test_connect_adopts_existing_cluster_without_owning_it():
+    cl = ClusterExecutor(n_devices=1, policy="ioctl")
+    with connect(cl) as client:
+        assert client.cluster is cl
+        client.submit(prof("a", 1), body=lambda job, it: None)
+    # adopted: close() left the cluster alive
+    assert not cl.executors[0]._stop.is_set()
+    cl.shutdown()
+    with pytest.raises(ValueError, match="kwargs"):
+        connect(cl, n_devices=2)
+
+
+def test_submit_workload_spec_runs_and_journals_nothing_without_store():
+    with connect(n_devices=1, policy="ioctl") as client:
+        dec = client.submit(
+            prof("count", 1, exec_ms=10.0, period_ms=200.0),
+            workload_spec={"name": "demo.count",
+                           "kwargs": {"total": 16, "per_slice": 4}},
+            n_iterations=1, start=True)
+        assert dec.accepted
+        client.join(30)
+        assert client.cluster.find_job("count").stats.completions == 1
+
+
+def test_submit_spec_is_exclusive_with_body():
+    with connect(n_devices=1) as client:
+        with pytest.raises(ValueError, match="alone"):
+            client.submit(prof("a", 1), workload_spec="demo.spin",
+                          body=lambda job, it: None)
+
+
+def test_unknown_workload_spec_fails_fast():
+    with connect(n_devices=1) as client:
+        with pytest.raises(KeyError, match="unknown workload"):
+            client.submit(prof("a", 1), workload_spec="no.such.thing")
+
+
+def test_release_frees_name_on_both_faces():
+    with connect(n_devices=1) as client:
+        client.submit(prof("a", 1), body=lambda job, it: None)
+        assert client.release("a") is True
+        assert client.release("a") is False
+        assert client.submit(prof("a", 1),
+                             body=lambda job, it: None).accepted
+
+
+# ---------------------------------------------------------------------------
+# deprecation shims (the compat test of the acceptance criteria)
+# ---------------------------------------------------------------------------
+
+def test_direct_cluster_submit_warns_but_works():
+    cl = ClusterExecutor(n_devices=1, policy="ioctl")
+    with pytest.warns(DeprecationWarning, match="connect"):
+        res = cl.submit(prof("a", 1), body=lambda job, it: None)
+    assert res["admitted"] and res["device"] == 0   # historical face
+    cl.shutdown()
+
+
+def test_device_executor_mode_kwarg_warns_but_works():
+    with pytest.warns(DeprecationWarning, match="deprecated"):
+        ex = DeviceExecutor(mode="notify", wait_mode="suspend")
+    assert ex.policy.name == "ioctl"    # legacy name still resolves
+    ex.shutdown()
+
+
+def test_facade_submit_does_not_warn():
+    with connect(n_devices=1) as client:
+        with warnings.catch_warnings():
+            warnings.simplefilter("error", DeprecationWarning)
+            client.submit(prof("a", 1), body=lambda job, it: None)
+
+
+# ---------------------------------------------------------------------------
+# socket backend, against an in-thread daemon
+# ---------------------------------------------------------------------------
+
+@pytest.fixture
+def daemon(tmp_path):
+    from repro.sched.daemon import SchedDaemon
+    d = SchedDaemon(str(tmp_path / "store"),
+                    str(tmp_path / "sock"), n_devices=1)
+    d.start()
+    yield d
+    d.stop()
+
+
+def test_socket_round_trip_matches_local_semantics(daemon):
+    client = connect(daemon.socket_path)
+    assert client.ping()["ok"] is True
+    dec = client.submit(
+        prof("count", 1, exec_ms=10.0, period_ms=200.0),
+        workload_spec={"name": "demo.count",
+                       "kwargs": {"total": 16, "per_slice": 4}},
+        n_iterations=1, start=True)
+    assert dec.accepted and dec.reason == "accepted" and dec.device == 0
+    assert dec.wcrt["count"] > 0
+    st = client.status()
+    assert st["backend"] == "daemon" and st["admitted"] == ["count"]
+    daemon.cluster.join(30)
+    jobs = client.jobs()
+    assert jobs["count"]["done_iterations"] == 1
+    assert jobs["count"]["wcrt_ms"] == dec.wcrt["count"]
+    assert set(client.per_device_mort()) == {0}     # int keys restored
+    assert client.release("count") is True
+
+
+def test_socket_refuses_live_workload_objects(daemon):
+    client = connect(daemon.socket_path)
+    with pytest.raises(ValueError, match="registered workload spec"):
+        client.submit(prof("a", 1), body=lambda job, it: None)
+    with pytest.raises(ValueError, match="workload_spec"):
+        client.submit(prof("a", 1))
+
+
+def test_socket_submit_unknown_workload_is_validation_refused(daemon):
+    client = connect(daemon.socket_path)
+    dec = daemon.handle({"op": "submit",
+                         "profile": prof("a", 1).to_dict(),
+                         "workload": "no.such.thing"})
+    assert not dec["admitted"]
+    assert dec["reason"] == "validation-refused"
+    assert client.status()["admitted"] == []
+
+
+def test_socket_env_routes_connect(daemon, monkeypatch):
+    from repro.sched.client import SOCKET_ENV
+    monkeypatch.setenv(SOCKET_ENV, daemon.socket_path)
+    client = connect()
+    assert client.status()["backend"] == "daemon"
+    with pytest.raises(ValueError, match="kwargs"):
+        connect(n_devices=2)
+
+
+def test_client_cli_round_trip(daemon, capsys):
+    from repro.sched.client import main
+    assert main(["--socket", daemon.socket_path, "ping"]) == 0
+    assert main(["--socket", daemon.socket_path, "submit",
+                 "--name", "cli", "--workload", "demo.count",
+                 "--workload-kwargs", '{"total": 8, "per_slice": 4}',
+                 "--period-ms", "200", "--priority", "1",
+                 "--exec-ms", "10", "--start"]) == 0
+    out = capsys.readouterr().out
+    assert '"admitted": true' in out
+    daemon.cluster.join(30)
+    assert main(["--socket", daemon.socket_path, "jobs"]) == 0
+    assert '"done_iterations": 1' in capsys.readouterr().out

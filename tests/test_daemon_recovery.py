@@ -1,0 +1,206 @@
+"""Kill-and-recover: an admitted RT job survives ``kill -9`` of the
+scheduling daemon with its guarantee intact (DESIGN.md §9).
+
+Subprocess-driven: a real ``python -m repro.sched.daemon`` process, a
+real unix socket, a real SIGKILL mid-slice.  Asserts the three recovery
+invariants:
+
+  (a) the rebuilt admission state is decision-identical to the journal
+      (checked both by the daemon's own conformance pass and
+      independently by ``AdmissionController.rebuild`` in this process);
+  (b) the sliced job resumes from the latest checkpointed carry at the
+      journaled slice index — not from scratch;
+  (c) post-recovery MORT stays within the admitted WCRT.
+"""
+import json
+import os
+import signal
+import subprocess
+import sys
+import time
+
+from repro.sched import AdmissionController, JobStore, connect
+
+SRC = os.path.abspath(os.path.join(os.path.dirname(__file__),
+                                   os.pardir, "src"))
+ENV = dict(os.environ, REPRO_PALLAS="interpret",
+           PYTHONPATH=SRC + os.pathsep + os.environ.get("PYTHONPATH", ""))
+
+# the subject job: 25 sleep-slices of 80 ms — long enough to SIGKILL
+# mid-iteration, cheap enough for CI
+SLICES, SLICE_MS = 25, 80.0
+EXEC_MS, PERIOD_MS = 3000.0, 6000.0
+N_ITER = 2
+
+
+def start_daemon(store, sock):
+    proc = subprocess.Popen(
+        [sys.executable, "-m", "repro.sched.daemon",
+         "--store", store, "--socket", sock, "--n-devices", "1"],
+        env=ENV, stdout=subprocess.PIPE, stderr=subprocess.STDOUT,
+        text=True)
+    deadline = time.monotonic() + 120
+    client = connect(sock)
+    while time.monotonic() < deadline:
+        if proc.poll() is not None:
+            raise AssertionError(
+                f"daemon died during startup (rc={proc.returncode}):\n"
+                f"{proc.stdout.read()}")
+        try:
+            client.ping()
+            return proc, client
+        except (OSError, RuntimeError):
+            time.sleep(0.2)
+    proc.kill()
+    raise AssertionError("daemon never became ready")
+
+
+def journal_records(store, kind, job=None):
+    path = os.path.join(store, "journal.jsonl")
+    out = []
+    if not os.path.exists(path):
+        return out
+    with open(path) as f:
+        for line in f:
+            try:
+                rec = json.loads(line)
+            except json.JSONDecodeError:
+                continue
+            if rec.get("rec") == kind and (job is None
+                                           or rec.get("job") == job):
+                out.append(rec)
+    return out
+
+
+def wait_for(pred, timeout, what):
+    deadline = time.monotonic() + timeout
+    while time.monotonic() < deadline:
+        got = pred()
+        if got:
+            return got
+        time.sleep(0.2)
+    raise AssertionError(f"timed out waiting for {what}")
+
+
+def test_kill_minus_nine_and_recover(tmp_path):
+    store = str(tmp_path / "store")
+    sock = str(tmp_path / "sock")
+    proc, client = start_daemon(store, sock)
+    try:
+        dec = client.submit(
+            _spin_profile("spin"),
+            workload_spec={"name": "demo.spin",
+                           "kwargs": {"slices": SLICES,
+                                      "slice_ms": SLICE_MS}},
+            n_iterations=N_ITER, start=True)
+        assert dec.accepted, dec
+        wcrt_ms = dec.wcrt["spin"]
+        be = client.submit(
+            _spin_profile("background", best_effort=True),
+            workload_spec={"name": "demo.spin",
+                           "kwargs": {"slices": 4, "slice_ms": 10.0}},
+            n_iterations=1, start=True)
+        assert be.accepted and be.via == "best_effort"
+
+        # SIGKILL mid-slice: wait until a few slices of iteration 0
+        # are checkpointed, then no clean shutdown whatsoever
+        wait_for(lambda: [r for r in
+                          journal_records(store, "carry", "spin")
+                          if r["iteration"] == 0 and r["slice"] >= 3],
+                 90, "3 checkpointed slices")
+        os.kill(proc.pid, signal.SIGKILL)
+        proc.wait(30)
+    finally:
+        if proc.poll() is None:
+            proc.kill()
+
+    carries = [r for r in journal_records(store, "carry", "spin")
+               if r["iteration"] == 0]
+    last_slice = max(r["slice"] for r in carries)
+    assert 1 <= last_slice < SLICES, "kill was not mid-iteration"
+
+    # (a) independent decision-conformance: re-run admission over the
+    # journaled taskset in this process; identity or it raises
+    state = JobStore(store).load()
+    ctl = AdmissionController.rebuild(state.config,
+                                      state.admission_entries(),
+                                      conform=True)
+    assert [p.name for p in ctl.admitted] == ["spin", "background"]
+    assert state.jobs["spin"].carry["slice"] == last_slice
+
+    # restart: the daemon must rebuild + resume on its own
+    proc, client = start_daemon(store, sock)
+    try:
+        st = client.status()
+        # (a) the daemon's own conformance pass ran and passed
+        assert st["recovery"]["conformance"] == "checked"
+        assert sorted(st["recovery"]["recovered"]) == ["background",
+                                                       "spin"]
+        assert st["admitted"] == ["spin", "background"]
+        # (b) resumed mid-segment at the journaled slice, not slice 0
+        resumed = st["recovery"]["resumed"]["spin"]
+        assert resumed == {"device": 0, "iteration": 0,
+                           "slice": last_slice,
+                           "remaining_iterations": N_ITER}
+
+        jobs = wait_for(
+            lambda: (lambda j: j if j["spin"]["done_iterations"]
+                     == N_ITER else None)(client.jobs()),
+            120, "resumed job to finish both iterations")
+        # (b) the resume audit record agrees with the last checkpoint
+        resumes = journal_records(store, "resume", "spin")
+        assert resumes == [{"rec": "resume", "job": "spin",
+                            "iteration": 0, "slice": last_slice}]
+        # (c) MORT <= admitted WCRT, across the crash
+        mort_ms = jobs["spin"]["mort_s"] * 1e3
+        assert mort_ms <= wcrt_ms + 1e-6, \
+            f"recovered MORT {mort_ms:.1f}ms exceeds WCRT {wcrt_ms:.1f}ms"
+        assert jobs["spin"]["deadline_misses"] == 0
+        client.close(shutdown=True)
+        proc.wait(30)
+    finally:
+        if proc.poll() is None:
+            proc.kill()
+
+
+def test_daemon_refuses_tampered_journal(tmp_path):
+    """Drifted WCRT evidence in the journal must abort recovery: the
+    daemon exits rather than serving guarantees it cannot re-prove."""
+    store = str(tmp_path / "store")
+    sock = str(tmp_path / "sock")
+    proc, client = start_daemon(store, sock)
+    try:
+        assert client.submit(
+            _spin_profile("spin"),
+            workload_spec={"name": "demo.spin",
+                           "kwargs": {"slices": 2, "slice_ms": 5.0}},
+            n_iterations=1).accepted
+        client.close(shutdown=True)
+        proc.wait(30)
+    finally:
+        if proc.poll() is None:
+            proc.kill()
+    path = os.path.join(store, "journal.jsonl")
+    with open(path) as f:
+        lines = f.readlines()
+    for i, line in enumerate(lines):
+        rec = json.loads(line)
+        if rec.get("rec") == "decision":
+            rec["decision"]["wcrt"]["spin"] = 1.0    # forged evidence
+            lines[i] = json.dumps(rec, sort_keys=True) + "\n"
+    with open(path, "w") as f:
+        f.writelines(lines)
+    out = subprocess.run(
+        [sys.executable, "-m", "repro.sched.daemon",
+         "--store", store, "--socket", sock, "--n-devices", "1"],
+        env=ENV, capture_output=True, text=True, timeout=120)
+    assert out.returncode != 0
+    assert "RecoveryConformanceError" in out.stderr
+
+
+def _spin_profile(name, best_effort=False):
+    from repro.sched import JobProfile
+    return JobProfile(name, host_segments_ms=[1.0],
+                      device_segments_ms=[(0.5, EXEC_MS)],
+                      period_ms=PERIOD_MS, priority=10, cpu=0,
+                      best_effort=best_effort, device=0)

@@ -63,7 +63,7 @@ def test_decode_segment_under_executor(engine):
     _prefill(engine)
     want = engine.decode_chunk(5)
     _prefill(engine)
-    ex = DeviceExecutor(mode="notify", wait_mode="suspend")
+    ex = DeviceExecutor(policy="notify", wait_mode="suspend")
     got = []
 
     def body(job, it):
