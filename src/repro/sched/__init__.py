@@ -3,10 +3,14 @@ from .admission import (AdmissionController, AdmissionDecision, JobProfile,
 from .checkpointer import (AsyncCheckpointer, latest_carry, latest_step,
                            restore, save, save_carry)
 from .cluster import ClusterExecutor
+from .elastic import ShedPolicy
 from .executor import DeviceExecutor, ExecutorTrace, TraceEvent
-from .fault import FaultTolerantLoop, Heartbeat, StallError, with_retry
+from .fault import (DeviceFailedError, DeviceHealth, FaultContained,
+                    FaultTolerantLoop, HealthConfig, Heartbeat, JobEvicted,
+                    StallError, with_retry)
+from .faultinject import FaultInjector, FaultSpec, InjectedFault
 from .job import RTJob
-from .store import JobRecord, JobStore, StoreState
+from .store import CompactionPolicy, JobRecord, JobStore, StoreState
 from .workloads import register_workload
 
 __all__ = ["AdmissionController", "AdmissionDecision", "JobProfile",
@@ -16,7 +20,10 @@ __all__ = ["AdmissionController", "AdmissionDecision", "JobProfile",
            "connect", "ClusterExecutor", "DeviceExecutor", "ExecutorTrace",
            "TraceEvent", "FaultTolerantLoop", "Heartbeat", "StallError",
            "with_retry", "RTJob", "JobRecord", "JobStore", "StoreState",
-           "register_workload"]
+           "register_workload", "FaultContained", "JobEvicted",
+           "DeviceFailedError", "DeviceHealth", "HealthConfig",
+           "ShedPolicy", "CompactionPolicy", "FaultInjector", "FaultSpec",
+           "InjectedFault", "Supervisor"]
 
 
 def __getattr__(name):
@@ -26,6 +33,9 @@ def __getattr__(name):
     if name == "SchedDaemon":
         from .daemon import SchedDaemon
         return SchedDaemon
+    if name == "Supervisor":
+        from .supervisor import Supervisor
+        return Supervisor
     if name in ("SchedClient", "connect", "SOCKET_ENV"):
         from . import client
         return getattr(client, name)

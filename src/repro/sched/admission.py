@@ -428,6 +428,21 @@ class AdmissionController:
                 return True
         return False
 
+    def on_device(self, device: int) -> List[JobProfile]:
+        """Admitted profiles bound to ``device`` (RT and best-effort)."""
+        return [p for p in self.admitted if p.device == device]
+
+    def device_utilization(self, device: int, *,
+                           include_best_effort: bool = True) -> float:
+        """Total admitted GPU utilization on ``device`` — the overload
+        metric of the shedding ladder (`sched.elastic`).  Unlike every
+        RTA input, this *includes* best-effort demand by default: BE
+        tasks never interfere analytically, but they do occupy the
+        device at runtime."""
+        from .elastic import profile_utilization
+        return sum(profile_utilization(p) for p in self.on_device(device)
+                   if include_best_effort or not p.best_effort)
+
     # ------------------------------------------------------------------
     # durable state: export / rebuild (sched/store.py, sched/daemon.py)
     # ------------------------------------------------------------------

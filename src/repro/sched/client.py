@@ -30,7 +30,10 @@ from __future__ import annotations
 
 import json
 import os
+import random
 import socket as socketlib
+import time
+import uuid
 from typing import Any, Dict, Mapping, Optional, Union
 
 from .admission import AdmissionDecision, JobProfile
@@ -102,15 +105,29 @@ class _LocalBackend:
 
 
 class _SocketBackend:
-    """Facade over the daemon's unix socket (one JSON line per call)."""
+    """Facade over the daemon's unix socket (one JSON line per call).
 
-    def __init__(self, path: Union[str, os.PathLike]):
+    Transport failures — the daemon restarting under its supervisor,
+    a connection refused on a half-created socket, a timeout — are
+    retried with jittered exponential backoff.  Retrying is safe even
+    for ``submit``: every logical submission carries a ``request_id``
+    (a fresh UUID per ``submit()`` call), and the daemon dedups by id
+    against its journal, so a retry that races a restart returns the
+    journaled decision instead of double-admitting the job."""
+
+    def __init__(self, path: Union[str, os.PathLike], *,
+                 retries: int = 3, backoff_s: float = 0.1,
+                 max_backoff_s: float = 2.0,
+                 timeout_s: float = 60.0):
         self.path = os.fspath(path)
         self.cluster = None   # execution lives in the daemon process
+        self.retries = retries
+        self.backoff_s = backoff_s
+        self.max_backoff_s = max_backoff_s
+        self.timeout_s = timeout_s
+        self._rng = random.Random()
 
-    def request(self, op: str, timeout: float = 60.0,
-                **payload) -> Any:
-        req = dict(payload, op=op)
+    def _request_once(self, req: dict, op: str, timeout: float) -> Any:
         with socketlib.socket(socketlib.AF_UNIX,
                               socketlib.SOCK_STREAM) as s:
             s.settimeout(timeout)
@@ -124,13 +141,33 @@ class _SocketBackend:
                     break
                 buf += chunk
         if not buf.strip():
-            raise RuntimeError(f"no response from daemon for {op!r} "
-                               "(connection closed)")
+            raise ConnectionError(f"no response from daemon for {op!r} "
+                                  "(connection closed)")
         resp = json.loads(buf.decode())
         if not resp.get("ok"):
+            # an application-level refusal: the daemon IS alive and
+            # answered — never retried (only transport errors are)
             raise RuntimeError(f"daemon refused {op!r}: "
                                f"{resp.get('error')}")
         return resp.get("result")
+
+    def request(self, op: str, timeout: Optional[float] = None,
+                **payload) -> Any:
+        req = dict(payload, op=op)
+        timeout = self.timeout_s if timeout is None else timeout
+        err: Optional[BaseException] = None
+        for i in range(self.retries + 1):
+            try:
+                return self._request_once(req, op, timeout)
+            except (ConnectionError, FileNotFoundError, socketlib.timeout,
+                    OSError) as e:
+                err = e
+            if i < self.retries:
+                delay = min(self.backoff_s * (2 ** i), self.max_backoff_s)
+                time.sleep(delay * self._rng.uniform(0.5, 1.5))
+        raise RuntimeError(
+            f"daemon unreachable for {op!r} after "
+            f"{self.retries + 1} attempts: {err}") from err
 
     def submit(self, prof: JobProfile, *, workload=None, body=None,
                workload_spec=None, n_iterations=1, start=False,
@@ -147,7 +184,8 @@ class _SocketBackend:
             "submit", profile=prof.to_dict(),
             workload=normalize_spec(workload_spec, check=False),
             n_iterations=n_iterations, start=start,
-            stop_after_s=stop_after_s, strategy=strategy)
+            stop_after_s=stop_after_s, strategy=strategy,
+            request_id=uuid.uuid4().hex)
         return AdmissionDecision(result)
 
     def release(self, name: str) -> bool:
@@ -304,10 +342,15 @@ def main(argv=None) -> int:
                     help=f"daemon unix socket (default: ${SOCKET_ENV})")
     sub = ap.add_subparsers(dest="cmd", required=True)
     for simple in ("ping", "status", "jobs", "mort", "shutdown",
-                   "compact"):
+                   "compact", "audit"):
         sub.add_parser(simple)
     rel = sub.add_parser("release")
     rel.add_argument("name")
+    fd = sub.add_parser("fail-device",
+                        help="declare a device failed (opens a new "
+                             "binding epoch; jobs fail over)")
+    fd.add_argument("device", type=int)
+    fd.add_argument("--reason", default="operator")
     sb = sub.add_parser("submit")
     sb.add_argument("--name", required=True)
     sb.add_argument("--workload", required=True,
@@ -344,6 +387,11 @@ def main(argv=None) -> int:
         out = {"released": client.release(args.name)}
     elif args.cmd == "compact":
         out = client._backend.request("compact")
+    elif args.cmd == "audit":
+        out = client._backend.request("audit")
+    elif args.cmd == "fail-device":
+        out = client._backend.request("fail_device", device=args.device,
+                                      reason=args.reason)
     elif args.cmd == "shutdown":
         client.close(shutdown=True)
         out = {"ok": True}

@@ -24,6 +24,28 @@ admission was proven on.  The binding is immutable — the migration-free
 invariant — so the per-device RTAs' assumption that a task's device
 segments all execute on ``task.device`` holds by construction, and
 ``assert_migration_free()`` re-verifies it from the executor traces.
+
+Fault containment (DESIGN.md §10) layers on top without weakening any
+of the above:
+
+  * a :class:`~repro.sched.fault.HealthConfig` attaches a slice-level
+    heartbeat (:class:`~repro.sched.fault.DeviceHealth`) to every
+    executor and a monitor thread that walks the stall → suspect →
+    failed ladder;
+  * ``fail_device`` opens a new **binding epoch**: the failed device's
+    jobs are evicted (orderly, via :class:`DeviceFailedError` at their
+    next preemption point), every surviving job's admission is
+    re-derived and re-journaled in the new epoch, and the displaced
+    jobs are re-run through ``try_admit_many`` against the survivors —
+    re-bound with fresh WCRT evidence or explicitly refused, never
+    silently dropped.  Bindings stay immutable *within* an epoch (a
+    re-bound job is a new ``RTJob`` with a new uid, so the traces still
+    prove migration-freedom);
+  * a :class:`~repro.sched.elastic.ShedPolicy` arms the overload
+    degradation ladder: when an admission pushes a device's total
+    (RT + best-effort) utilization past ``shed_at``, best-effort jobs
+    are shed (journaled, resumable) before the device is oversubscribed;
+    shed jobs resume hysteretically as ``release`` frees capacity.
 """
 from __future__ import annotations
 
@@ -34,7 +56,9 @@ from typing import TYPE_CHECKING, Dict, List, Mapping, Optional, Sequence, Union
 
 from ..core.policy import LEGACY_MODES
 from .admission import AdmissionController, AdmissionDecision, JobProfile
+from .elastic import ShedPolicy, can_resume, plan_shedding
 from .executor import DeviceExecutor, ExecutorTrace
+from .fault import FAILED, DeviceHealth, HealthConfig
 from .job import RTJob
 
 if TYPE_CHECKING:  # pragma: no cover
@@ -63,7 +87,9 @@ class ClusterExecutor:
                  try_gpu_priorities: bool = True,
                  trace: bool = False,
                  admission: Optional[AdmissionController] = None,
-                 store: Optional["JobStore"] = None):
+                 store: Optional["JobStore"] = None,
+                 health: Optional[HealthConfig] = None,
+                 shed_policy: Optional[ShedPolicy] = None):
         if n_devices < 1:
             raise ValueError("a cluster needs at least one device")
         if placement not in PLACEMENTS:
@@ -77,10 +103,16 @@ class ClusterExecutor:
         names = [LEGACY_MODES.get(n, n) for n in names]
         self.n_devices = n_devices
         self.placement = placement
+        self.health_config = health
+        self.shed_policy = shed_policy
+        self._health: List[Optional[DeviceHealth]] = [
+            DeviceHealth(d, health) if health is not None else None
+            for d in range(n_devices)]
         self.executors: List[DeviceExecutor] = [
             DeviceExecutor(policy=name, wait_mode=wait_mode,
                            poll_interval=poll_interval, device_index=d,
-                           trace=ExecutorTrace() if trace else None)
+                           trace=ExecutorTrace() if trace else None,
+                           health=self._health[d])
             for d, name in enumerate(names)]
         if admission is None:
             if len(set(names)) != 1:
@@ -108,6 +140,27 @@ class ClusterExecutor:
         self._bindings: Dict[int, int] = {}   # job.uid -> device
         self._jobs: List[RTJob] = []
         self._rr = 0                      # round-robin cursor
+        # ---- fault-containment state (DESIGN.md §10) ----
+        self.epoch = 0                    # binding epoch (0 = pristine)
+        self._failed: set = set()         # failed device indices
+        # uid -> device tombstones: an evicted/displaced job's dying
+        # thread still routes on_job_complete to the executor it ran on
+        # (without this, _route would fall through to bind_job and
+        # resurrect the binding the fail-over just severed)
+        self._dead: Dict[int, int] = {}
+        # per-name resubmission material: profile as admitted, workload
+        # spec + live body/workload object, iteration count, started
+        # flag — what fail-over rebinding and shed-resume rebuild a job
+        # from (jobs bound via bind_job bypass admission and have none)
+        self._meta: Dict[str, dict] = {}
+        self._shed_meta: Dict[str, dict] = {}   # name -> meta of shed jobs
+        self._mon_stop = threading.Event()
+        self._monitor: Optional[threading.Thread] = None
+        if health is not None:
+            self._monitor = threading.Thread(
+                target=self._health_loop, daemon=True,
+                name="cluster-health")
+            self._monitor.start()
 
     # ------------------------------------------------------------------
     # placement
@@ -129,14 +182,23 @@ class ClusterExecutor:
         admission-tested before committing (see :meth:`submit`)."""
         s = strategy or self.placement
         if s == "pinned":
-            return [prof.device]
+            return [prof.device] if prof.device not in self._failed else []
         if s == "round_robin":
-            return [(self._rr + i) % self.n_devices
-                    for i in range(self.n_devices)]
+            return [d for d in ((self._rr + i) % self.n_devices
+                                for i in range(self.n_devices))
+                    if d not in self._failed]
         if s == "least_loaded":
-            return sorted(range(self.n_devices),
+            return sorted((d for d in range(self.n_devices)
+                           if d not in self._failed),
                           key=lambda d: (self._admitted_load(d), d))
         raise ValueError(f"unknown placement {s!r}")
+
+    def live_devices(self) -> List[int]:
+        """Devices not declared failed, least-loaded first — the
+        candidate order fail-over rebinding and shed-resume use."""
+        return sorted((d for d in range(self.n_devices)
+                       if d not in self._failed),
+                      key=lambda d: (self._admitted_load(d), d))
 
     # ------------------------------------------------------------------
     # the admit→place→bind transaction
@@ -211,20 +273,41 @@ class ClusterExecutor:
                         self.placement == "round_robin"):
                     self._rr = (dev + 1) % self.n_devices
                 out = AdmissionDecision(res).bound(dev, job)
+                self._meta[prof.name] = {
+                    "profile": cand, "workload": meta.get("workload"),
+                    "workload_obj": workload, "body": body,
+                    "n_iterations": n_iterations,
+                    "started": bool(start), "stop_after_s": stop_after_s}
                 if self.store is not None:
                     self.store.record_decision(
                         cand, out, device=dev,
                         workload=meta.get("workload"),
-                        n_iterations=n_iterations)
+                        n_iterations=n_iterations,
+                        epoch=self.epoch or None,
+                        request_id=meta.get("request_id"))
+                # overload degradation ladder: the RT guarantee is
+                # analytical (BE never interferes in any RTA) but the
+                # device is physical — shed best-effort work before
+                # the admission leaves it oversubscribed
+                self._maybe_shed_locked(dev, exclude=prof.name)
                 if start:
                     job.start(self, stop_after_s)
                 return out
-            out = AdmissionDecision(
-                last if last is not None else {}).bound(None, None)
+            if last is None:
+                # every candidate device is failed (or pinned to one):
+                # an explicit refusal, not a misleading rta-reject
+                last = AdmissionDecision.refuse(
+                    "validation-refused",
+                    error=f"no live device for job {prof.name!r} "
+                          f"(failed: {sorted(self._failed)})")
+            out = AdmissionDecision(last).bound(None, None)
             if self.store is not None:
                 self.store.record_decision(prof, out, device=None,
                                            workload=meta.get("workload"),
-                                           n_iterations=n_iterations)
+                                           n_iterations=n_iterations,
+                                           epoch=self.epoch or None,
+                                           request_id=meta.get(
+                                               "request_id"))
             return out
 
     def bind_job(self, job: RTJob, device: Optional[int] = None
@@ -253,6 +336,255 @@ class ClusterExecutor:
         return self.executors[dev]
 
     # ------------------------------------------------------------------
+    # fault containment: device fail-over (binding epochs) and the
+    # overload degradation ladder (DESIGN.md §10)
+    # ------------------------------------------------------------------
+    def fail_device(self, device: int, reason: str = "") -> dict:
+        """Declare ``device`` failed and open a new binding epoch.
+
+        Everything happens in one transaction under the cluster lock,
+        mirroring admit→place→bind:
+
+          1. the fail-over marker is journaled (on replay it moves the
+             device's jobs to the *displaced* ledger — nothing may stay
+             there, the no-silent-job-loss audit);
+          2. the device's executor is failed (in-flight and future
+             dispatches raise :class:`DeviceFailedError` — the orderly
+             stop ``RTJob`` absorbs) and its jobs are evicted, unbound,
+             and tombstoned;
+          3. the new epoch re-derives **every** surviving job's
+             admission afresh, in the original admission order, on the
+             original devices — guaranteed to re-accept (removing a
+             task only decreases interference) — and journals the fresh
+             WCRT evidence, so recovery's decision-conformance replay
+             holds in the new epoch too.  The surviving ``RTJob``\\ s
+             are untouched: no migration, and their MORT stays bounded
+             by (now provably slack) WCRT;
+          4. the displaced jobs are re-run through ``try_admit_many``
+             against the surviving devices; each outcome — re-bound as
+             a *new* job with fresh evidence, or explicitly refused —
+             is journaled, settling its displaced-ledger entry.
+
+        Returns a summary dict (``epoch``, ``kept``, ``rebound``,
+        ``refused``).  Idempotent: failing a failed device is a no-op.
+        """
+        with self._lock:
+            return self._fail_device_locked(device, reason)
+
+    def _fail_device_locked(self, device: int, reason: str) -> dict:
+        if not (0 <= device < self.n_devices):
+            raise ValueError(f"device {device} out of range for "
+                             f"{self.n_devices}-device cluster")
+        if device in self._failed:
+            return {"device": device, "epoch": self.epoch,
+                    "already_failed": True, "kept": [], "rebound": [],
+                    "refused": []}
+        self._failed.add(device)
+        self.epoch += 1
+        epoch = self.epoch
+        if self.store is not None:
+            self.store.record_failover(device, epoch, reason)
+        self.executors[device].fail(reason)
+        # sever the victims' bindings (their threads die orderly at the
+        # next preemption point; tombstones keep their completion path
+        # routed to the executor they actually ran on)
+        for job in [j for j in self._jobs
+                    if self._bindings.get(j.uid) == device]:
+            job.evict(f"device {device} failed"
+                      + (f": {reason}" if reason else ""))
+            self._dead[job.uid] = device
+            self._jobs.remove(job)
+            self._bindings.pop(job.uid, None)
+        displaced = [p for p in self.admission.admitted
+                     if p.device == device]
+        unaffected = [p for p in self.admission.admitted
+                      if p.device != device]
+        # -- step 3: fresh evidence for every survivor ------------------
+        self.admission.admitted = []
+        kept: List[str] = []
+        for p in unaffected:
+            dec = self.admission.try_admit(p)
+            if not dec["admitted"]:  # pragma: no cover — monotonicity
+                raise RuntimeError(
+                    f"fail-over invariant violated: surviving job "
+                    f"{p.name!r} refused on re-admission in epoch "
+                    f"{epoch}: {dec.get('error') or dec['wcrt']}")
+            if self.store is not None:
+                m = self._meta.get(p.name, {})
+                self.store.record_decision(
+                    p, dec.bound(p.device, None), device=p.device,
+                    workload=m.get("workload"),
+                    n_iterations=m.get("n_iterations", 1), epoch=epoch)
+            kept.append(p.name)
+        # -- step 4: displaced jobs vs the survivors --------------------
+        rebound: List[dict] = []
+        refused: List[str] = []
+        survivors = self.live_devices()
+        cands = [dataclasses.replace(p, device=survivors[
+            i % len(survivors)]) if survivors else p
+            for i, p in enumerate(displaced)]
+        decs = (self.admission.try_admit_many(cands)
+                if survivors else
+                [AdmissionDecision.refuse(
+                    "validation-refused",
+                    error="no surviving device") for _ in cands])
+        for p, cand, dec in zip(displaced, cands, decs):
+            if not dec["admitted"]:
+                # first placement refused: try the remaining survivors
+                for d in survivors:
+                    if d == cand.device:
+                        continue
+                    retry = dataclasses.replace(p, device=d)
+                    rdec = self.admission.try_admit(retry)
+                    if rdec["admitted"]:
+                        cand, dec = retry, rdec
+                        break
+            if dec["admitted"]:
+                out = self._spawn_locked(cand, dec, epoch=epoch)
+                rebound.append({"job": p.name, "from": device,
+                                "to": cand.device,
+                                "wcrt": out.get("wcrt", {})})
+            else:
+                if self.store is not None:
+                    m = self._meta.get(p.name, {})
+                    self.store.record_decision(
+                        cand, AdmissionDecision(dec).bound(None, None),
+                        device=None, workload=m.get("workload"),
+                        n_iterations=m.get("n_iterations", 1),
+                        epoch=epoch)
+                self._meta.pop(p.name, None)
+                refused.append(p.name)
+        return {"device": device, "epoch": epoch, "reason": reason,
+                "kept": kept, "rebound": rebound, "refused": refused}
+
+    def _spawn_locked(self, prof: JobProfile, dec: AdmissionDecision,
+                      *, epoch: Optional[int]) -> AdmissionDecision:
+        """Build + bind + journal a job from its stored resubmission
+        material — the rebinding path of fail-over and shed-resume.
+        The admission (``try_admit``) has already accepted ``prof`` on
+        ``prof.device``; caller holds the cluster lock."""
+        m = self._meta.get(prof.name, {})
+        wl, body = m.get("workload_obj"), m.get("body")
+        job_body = (wl.bind(self, device=prof.device)
+                    if wl is not None else body)
+        n_iterations = m.get("n_iterations", 1)
+        job = RTJob(prof.name, job_body,
+                    period_s=prof.period_ms / 1e3,
+                    priority=prof.priority,
+                    deadline_s=(prof.deadline_ms or
+                                prof.period_ms) / 1e3,
+                    best_effort=prof.best_effort,
+                    n_iterations=n_iterations, device=prof.device)
+        self._bindings[job.uid] = prof.device
+        self._jobs.append(job)
+        out = AdmissionDecision(dec).bound(prof.device, job)
+        self._meta[prof.name] = dict(m, profile=prof)
+        if self.store is not None:
+            self.store.record_decision(
+                prof, out, device=prof.device,
+                workload=m.get("workload"),
+                n_iterations=n_iterations, epoch=epoch)
+        if m.get("started") and job_body is not None:
+            job.start(self, m.get("stop_after_s"))
+        return out
+
+    def _maybe_shed_locked(self, device: int,
+                           exclude: Optional[str] = None) -> List[str]:
+        """Run the degradation ladder on ``device``: evict best-effort
+        jobs (lowest tier first) until total utilization is back under
+        ``shed_policy.shed_at``.  ``exclude`` protects the job whose
+        admission triggered the check from being its own victim."""
+        pol = self.shed_policy
+        if pol is None:
+            return []
+        victims = [v for v in plan_shedding(
+            self.admission.on_device(device), pol.shed_at)
+            if v.name != exclude]
+        for v in victims:
+            self._shed_job_locked(v, f"overload on device {device}: "
+                                     f"shed_at={pol.shed_at:g}")
+        return [v.name for v in victims]
+
+    def _shed_job_locked(self, prof: JobProfile, reason: str) -> None:
+        self.admission.release(prof.name)
+        if self.store is not None:
+            self.store.record_shed(prof.name, reason)
+        for job in [j for j in self._jobs if j.name == prof.name]:
+            job.evict(f"shed: {reason}")
+            self._dead[job.uid] = self._bindings.pop(job.uid,
+                                                     prof.device)
+            self._jobs.remove(job)
+        self._shed_meta[prof.name] = dict(self._meta.get(prof.name, {}),
+                                          profile=prof)
+
+    def _maybe_resume_locked(self) -> List[str]:
+        """Hysteretic re-admission of shed jobs: a victim comes back
+        only onto a live device whose total utilization *with it
+        re-included* stays under ``resume_at < shed_at``, so the ladder
+        cannot oscillate at the shed boundary.  Called whenever
+        capacity frees up (``release``)."""
+        pol = self.shed_policy
+        resumed: List[str] = []
+        if pol is None or not self._shed_meta:
+            return resumed
+        for name in list(self._shed_meta):
+            m = self._shed_meta[name]
+            prof = m.get("profile")
+            if prof is None:
+                continue
+            for dev in self.live_devices():
+                cand = (prof if prof.device == dev
+                        else dataclasses.replace(prof, device=dev))
+                if not can_resume(cand, self.admission.on_device(dev),
+                                  pol.resume_at):
+                    continue
+                dec = self.admission.try_admit(cand)
+                if dec["admitted"]:
+                    del self._shed_meta[name]
+                    self._meta[name] = dict(m, profile=cand)
+                    self._spawn_locked(cand, dec,
+                                       epoch=self.epoch or None)
+                    resumed.append(name)
+                    break
+        return resumed
+
+    def _health_loop(self) -> None:
+        cfg = self.health_config
+        while not self._mon_stop.is_set():
+            for d, h in enumerate(self._health):
+                if h is None or d in self._failed:
+                    continue
+                if h.check() == FAILED and cfg.auto_failover:
+                    self.fail_device(d, reason=h.reason
+                                     or "health monitor verdict")
+            self._mon_stop.wait(cfg.poll_interval_s)
+
+    def restore_fault_state(self, epoch: int,
+                            failed_devices) -> None:
+        """Recovery hook (``SchedDaemon``): a device the journal says
+        failed stays failed across restarts — the journaled epoch's
+        re-admissions were proven against the surviving platform, so
+        the recovered daemon must come back AS that platform."""
+        with self._lock:
+            self.epoch = max(self.epoch, int(epoch))
+            for d in failed_devices:
+                if 0 <= d < self.n_devices and d not in self._failed:
+                    self._failed.add(d)
+                    self.executors[d].fail("journaled device failure "
+                                           "(restored on recovery)")
+
+    def device_health(self, device: int) -> Optional[DeviceHealth]:
+        return self._health[device]
+
+    @property
+    def failed_devices(self) -> List[int]:
+        return sorted(self._failed)
+
+    @property
+    def shed_jobs(self) -> List[str]:
+        return sorted(self._shed_meta)
+
+    # ------------------------------------------------------------------
     # executor protocol (routed by the job's binding) — an RTJob can be
     # started on the cluster, and SegmentedWorkload.run() dispatches
     # through these without knowing the platform is multi-device
@@ -266,6 +598,12 @@ class ClusterExecutor:
     def _route(self, job: RTJob) -> DeviceExecutor:
         dev = self._bindings.get(job.uid)
         if dev is None:
+            # a job whose binding was severed by fail-over or shedding
+            # is tombstoned: its dying thread's on_job_complete must
+            # reach the executor it actually ran on, not re-bind
+            dead = self._dead.get(job.uid)
+            if dead is not None:
+                return self.executors[dead]
             return self.bind_job(job)   # adopts job.device (raises if unset)
         if job.device is not None and job.device != dev:
             raise RuntimeError(
@@ -318,6 +656,11 @@ class ClusterExecutor:
             "jobs": {d: sorted(j.name for j in self._jobs
                                if self._bindings[j.uid] == d)
                      for d in range(self.n_devices)},
+            "epoch": self.epoch,
+            "failed_devices": self.failed_devices,
+            "shed": self.shed_jobs,
+            "health": {d: (h.state if h is not None else None)
+                       for d, h in enumerate(self._health)},
         }
 
     def find_job(self, name: str) -> Optional[RTJob]:
@@ -369,14 +712,22 @@ class ClusterExecutor:
                 self._jobs.remove(job)
                 self._bindings.pop(job.uid, None)
             released = self.admission.release(name)
-            if released and self.store is not None:
+            self._meta.pop(name, None)
+            was_shed = self._shed_meta.pop(name, None) is not None
+            if (released or was_shed) and self.store is not None:
                 self.store.record_release(name)
-            return released
+            # freed capacity may let a shed best-effort job climb back
+            # up the degradation ladder (hysteresis in resume_at)
+            self._maybe_resume_locked()
+            return released or was_shed
 
     def join(self, timeout: Optional[float] = None) -> None:
         for job in self._jobs:
             job.join(timeout)
 
     def shutdown(self) -> None:
+        self._mon_stop.set()
+        if self._monitor is not None:
+            self._monitor.join(timeout=1.0)
         for ex in self.executors:
             ex.shutdown()

@@ -36,13 +36,16 @@ import os
 import signal
 import socket as socketlib
 import threading
+import time
 from typing import Mapping, Optional
 
 from .admission import (AdmissionController, AdmissionDecision,
                         JobProfile, RecoveryConformanceError)
 from .cluster import ClusterExecutor
+from .elastic import ShedPolicy
+from .fault import HealthConfig
 from .job import RTJob
-from .store import JobRecord, JobStore
+from .store import CompactionPolicy, JobRecord, JobStore
 from .workloads import make_body, normalize_spec
 
 __all__ = ["SchedDaemon", "RecoveryConformanceError"]
@@ -59,10 +62,18 @@ class SchedDaemon:
                  epsilon_ms: float = 1.0, placement: str = "pinned",
                  headroom: float = 1.0, try_gpu_priorities: bool = True,
                  checkpoint_every: int = 1, conform: bool = True,
-                 resume_jobs: bool = True):
+                 resume_jobs: bool = True,
+                 health: Optional[HealthConfig] = None,
+                 shed_policy: Optional[ShedPolicy] = None,
+                 heartbeat_file: Optional[str] = None,
+                 auto_compact: Optional[CompactionPolicy] = None):
         self.socket_path = socket_path or os.path.join(store_dir, "sock")
         self.checkpoint_every = checkpoint_every
-        self.store = JobStore(store_dir)
+        # liveness beacon for sched.supervisor: touched every loop turn
+        # of serve_forever; a stale mtime means a hung (not just dead)
+        # daemon, which a poll-based waitpid watchdog cannot see
+        self.heartbeat_file = heartbeat_file
+        self.store = JobStore(store_dir, auto_compact=auto_compact)
         state = self.store.load()
         self.recovery = {"recovered": [], "resumed": {},
                          "conformance": None}
@@ -92,7 +103,19 @@ class SchedDaemon:
             n_devices=n_devices, policy=policy, wait_mode=wait_mode,
             n_cpus=n_cpus, epsilon_ms=epsilon_ms, placement=placement,
             try_gpu_priorities=try_gpu_priorities, admission=admission,
-            store=self.store)
+            store=self.store, health=health, shed_policy=shed_policy)
+        if state.epoch or state.failed_devices:
+            # a device failed in a previous life stays failed: the
+            # journaled re-admissions were proven against the surviving
+            # platform, so recovery must come back AS that platform
+            self.cluster.restore_fault_state(state.epoch,
+                                             state.failed_devices)
+            self.recovery["epoch"] = state.epoch
+            self.recovery["failed_devices"] = sorted(state.failed_devices)
+        # idempotent-submission dedup table, rebuilt from the journal:
+        # a client retrying across a daemon restart gets the journaled
+        # decision back instead of a double admission
+        self._requests = dict(state.requests)
         if state.config is None:
             # the cluster-built controller defaults headroom=1.0; apply
             # the daemon's before anything is admitted or journaled
@@ -105,6 +128,13 @@ class SchedDaemon:
         if resume_jobs:
             for rec in state.jobs.values():
                 self._resume(rec)
+            # a crash mid-fail-over leaves jobs on the displaced ledger
+            # (failover journaled, outcome not): settle every one now —
+            # re-admitted onto a survivor or explicitly refused on the
+            # record — so state.unaccounted() drains to [] and no job
+            # is silently lost
+            for rec in list(state.displaced.values()):
+                self._settle_displaced(rec)
         self._sock: Optional[socketlib.socket] = None
         self._stop = threading.Event()
         self._acceptor: Optional[threading.Thread] = None
@@ -148,6 +178,37 @@ class SchedDaemon:
             "slice": resume["slice"] if resume else 0,
             "remaining_iterations": remaining}
 
+    def _settle_displaced(self, rec: JobRecord) -> None:
+        """Settle one displaced-ledger entry left by a crash that
+        interrupted a fail-over: re-submit the job through the normal
+        admit→place→bind path (which journals the outcome, clearing
+        the ledger), or journal an explicit refusal when the body
+        cannot be reconstructed."""
+        prof = JobProfile.from_dict(rec.profile)
+        outcome = self.recovery.setdefault("displaced_settled", {})
+        if rec.workload is None:
+            self.store.record_decision(
+                prof, AdmissionDecision.refuse(
+                    "validation-refused",
+                    error="displaced by device failure; closure-based "
+                          "body not reconstructible").bound(None, None),
+                device=None, epoch=self.cluster.epoch or None)
+            outcome[rec.name] = "refused (unresumable)"
+            return
+        remaining = max(rec.n_iterations - rec.done_iterations, 1)
+        body = make_body(self.cluster, rec.name, rec.workload,
+                         store=self.store,
+                         checkpoint_every=self.checkpoint_every,
+                         offset=rec.done_iterations, resume=rec.carry)
+        dec = self.cluster._submit(
+            prof, None, body, strategy="least_loaded",
+            n_iterations=remaining, start=True,
+            journal_meta={"workload": rec.workload})
+        outcome[rec.name] = ("rebound to device "
+                             f"{dec.get('device')}"
+                             if dec["admitted"] else
+                             f"refused ({dec.get('error') or dec.reason})")
+
     # ------------------------------------------------------------------
     # request handling (directly callable — tests drive it in-process)
     # ------------------------------------------------------------------
@@ -157,6 +218,15 @@ class SchedDaemon:
             return {"ok": True, "pid": os.getpid(),
                     "socket": self.socket_path}
         if op == "submit":
+            rid = req.get("request_id")
+            if rid is not None and rid in self._requests:
+                # idempotent resubmission (client retry across a
+                # restart/transport failure): return the journaled
+                # decision — the job was NOT admitted twice
+                prev = self._requests[rid]
+                out = dict(prev.get("decision") or prev)
+                out["deduped"] = True
+                return out
             prof = JobProfile.from_dict(req["profile"])
             try:
                 spec = normalize_spec(req["workload"])
@@ -171,10 +241,24 @@ class SchedDaemon:
                 prof, None, body, strategy=req.get("strategy"),
                 n_iterations=n_iter, start=bool(req.get("start")),
                 stop_after_s=req.get("stop_after_s"),
-                journal_meta={"workload": spec})
+                journal_meta={"workload": spec, "request_id": rid})
+            if rid is not None:
+                self._requests[rid] = {"job": prof.name,
+                                       "admitted": bool(dec["admitted"]),
+                                       "decision": dec.journal_form()}
             return dec.journal_form()
         if op == "release":
             return self.cluster.release(req["name"])
+        if op == "fail_device":
+            return self.cluster.fail_device(
+                int(req["device"]), reason=req.get("reason", ""))
+        if op == "audit":
+            st = self.store.load()
+            return {"epoch": st.epoch,
+                    "failed_devices": sorted(st.failed_devices),
+                    "unaccounted": st.unaccounted(),
+                    "shed": sorted(st.shed),
+                    "live": sorted(st.jobs)}
         if op == "status":
             return {"pid": os.getpid(), "backend": "daemon",
                     "n_devices": self.cluster.n_devices,
@@ -273,11 +357,25 @@ class SchedDaemon:
             except OSError:
                 pass
 
+    def _touch_heartbeat(self) -> None:
+        if self.heartbeat_file is None:
+            return
+        try:
+            tmp = self.heartbeat_file + ".tmp"
+            with open(tmp, "w", encoding="utf-8") as f:
+                f.write(json.dumps({"pid": os.getpid(),
+                                    "t": time.time()}))
+            os.replace(tmp, self.heartbeat_file)
+        except OSError:
+            pass
+
     def serve_forever(self) -> None:
         if self._acceptor is None:
             self.start()
+        self._touch_heartbeat()
         while not self._stop.is_set():
             self._stop.wait(0.25)
+            self._touch_heartbeat()
         self.stop()
 
     def stop(self) -> None:
@@ -333,14 +431,46 @@ def main(argv=None) -> int:
                          "(debugging only)")
     ap.add_argument("--compact", action="store_true",
                     help="compact the journal into a snapshot on start")
+    ap.add_argument("--health", action="store_true",
+                    help="attach per-device health monitoring (slice "
+                         "heartbeats, stall→suspect→failed ladder, "
+                         "auto fail-over)")
+    ap.add_argument("--health-stall-s", type=float, default=5.0,
+                    help="stalled-slice seconds before a device turns "
+                         "suspect")
+    ap.add_argument("--health-fail-s", type=float, default=5.0,
+                    help="additional suspect seconds before failed")
+    ap.add_argument("--shed-at", type=float, default=None,
+                    help="total device utilization above which best-"
+                         "effort jobs are shed (enables the overload "
+                         "degradation ladder)")
+    ap.add_argument("--resume-at", type=float, default=None,
+                    help="utilization under which shed jobs resume "
+                         "(default: 0.8 * shed-at)")
+    ap.add_argument("--heartbeat-file", default=None,
+                    help="liveness beacon touched every loop turn "
+                         "(sched.supervisor watches its mtime)")
+    ap.add_argument("--auto-compact-bytes", type=int, default=None,
+                    help="auto-compact the journal past this size")
     args = ap.parse_args(argv)
 
+    health = (HealthConfig(stall_timeout_s=args.health_stall_s,
+                           fail_timeout_s=args.health_fail_s)
+              if args.health else None)
+    shed = (ShedPolicy(shed_at=args.shed_at,
+                       resume_at=(args.resume_at
+                                  if args.resume_at is not None
+                                  else 0.8 * args.shed_at))
+            if args.shed_at is not None else None)
+    auto_compact = (CompactionPolicy(max_bytes=args.auto_compact_bytes)
+                    if args.auto_compact_bytes is not None else None)
     daemon = SchedDaemon(
         args.store, args.socket, n_devices=args.n_devices,
         policy=args.policy, wait_mode=args.wait_mode, n_cpus=args.n_cpus,
         epsilon_ms=args.epsilon_ms, placement=args.placement,
         headroom=args.headroom, checkpoint_every=args.checkpoint_every,
-        conform=not args.no_conform)
+        conform=not args.no_conform, health=health, shed_policy=shed,
+        heartbeat_file=args.heartbeat_file, auto_compact=auto_compact)
     if args.compact:
         daemon.store.compact()
     daemon.start()

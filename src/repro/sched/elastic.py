@@ -1,19 +1,108 @@
-"""Elastic scaling: re-shard a training state onto a different mesh.
+"""Elastic capacity management: best-effort degradation under overload,
+and mesh re-scaling for training state.
 
-When nodes join or leave, the framework rebuilds the mesh and re-places the
-(checkpointed) state under the new sharding rules.  Because checkpoints are
-stored as full logical arrays (checkpointer.py) and sharding rules are pure
-functions of (config, mesh), rescaling is: save -> new mesh -> restore with
-the new NamedShardings -> recompile steps.  ``rescale`` packages that."""
+Two faces of the same idea — capacity is not fixed, so the platform
+degrades gracefully instead of falling over:
+
+  * **scheduling** (DESIGN.md §10): :class:`ShedPolicy` +
+    :func:`plan_shedding` form the overload degradation ladder.  When a
+    device's *total* admitted utilization (RT + best-effort) crosses
+    ``shed_at``, best-effort jobs are evicted — lowest tier first — to
+    bring the device back under the bound, so an RT arrival that fits
+    residual RT capacity is admitted with the device actually able to
+    serve it, and best-effort work is *shed* (resumable from its
+    checkpointed carry) rather than silently starved.  Resumption is
+    hysteretic: a shed job only comes back when total utilization with
+    it re-included stays under ``resume_at < shed_at``, so the ladder
+    does not oscillate at the boundary.  Best-effort tasks never appear
+    in any RTA (they are provably non-interfering at analysis level) —
+    shedding is a *runtime* capacity decision layered under the
+    analytical admission gate, never a substitute for it.
+
+  * **training**: when nodes join or leave, the framework rebuilds the
+    mesh and re-places the (checkpointed) state under the new sharding
+    rules.  Because checkpoints are stored as full logical arrays
+    (checkpointer.py) and sharding rules are pure functions of
+    (config, mesh), rescaling is: save -> new mesh -> restore with the
+    new NamedShardings -> recompile steps.  ``rescale`` packages that.
+"""
 from __future__ import annotations
 
-from typing import Any, Tuple
+from dataclasses import dataclass
+from typing import TYPE_CHECKING, Any, Iterable, List, Tuple
 
 import jax
 
 from ..models.blocks import ModelConfig
 from ..parallel import sharding as shd
 from . import checkpointer
+
+if TYPE_CHECKING:  # pragma: no cover
+    from .admission import JobProfile
+
+
+# --------------------------------------------------------------------------
+# scheduling face: the overload degradation ladder (DESIGN.md §10)
+# --------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class ShedPolicy:
+    """Overload thresholds on a device's total admitted utilization
+    (RT + best-effort GPU demand, Σ (G^m+G^e)/T per profile).
+
+    ``shed_at``: shedding starts when total utilization would exceed
+    this after the arriving job is admitted.  ``resume_at``: a shed job
+    is re-admitted only while total utilization with it included stays
+    at or under this (hysteresis — must be < ``shed_at``)."""
+    shed_at: float = 1.0
+    resume_at: float = 0.8
+
+    def __post_init__(self):
+        if not (0.0 < self.resume_at < self.shed_at):
+            raise ValueError(
+                f"need 0 < resume_at < shed_at, got resume_at="
+                f"{self.resume_at:g}, shed_at={self.shed_at:g}")
+
+
+def profile_utilization(prof: "JobProfile") -> float:
+    """One profile's device utilization: Σ (G^m + G^e) / T."""
+    return sum(m + e for m, e in prof.device_segments_ms) / prof.period_ms
+
+
+def shed_order(profs: Iterable["JobProfile"]) -> List["JobProfile"]:
+    """Victim order of the degradation ladder: best-effort only, lowest
+    tier (priority) first, then largest demand first — each rung frees
+    the most capacity from the least valuable work."""
+    return sorted((p for p in profs if p.best_effort),
+                  key=lambda p: (p.priority, -profile_utilization(p),
+                                 p.name))
+
+
+def plan_shedding(profs: Iterable["JobProfile"], shed_at: float
+                  ) -> List["JobProfile"]:
+    """The victims to evict so Σ utilization over ``profs`` drops to
+    ``shed_at`` or below — fewest rungs first (the ladder stops as soon
+    as the device fits).  Returns [] when the device already fits, and
+    every best-effort profile when even that cannot fit (RT demand
+    alone exceeds the bound — shedding has done all it can; the RT
+    admission gate is the authority on whether that is acceptable)."""
+    profs = list(profs)
+    total = sum(profile_utilization(p) for p in profs)
+    victims: List["JobProfile"] = []
+    for p in shed_order(profs):
+        if total <= shed_at + 1e-9:
+            break
+        victims.append(p)
+        total -= profile_utilization(p)
+    return victims
+
+
+def can_resume(prof: "JobProfile", live: Iterable["JobProfile"],
+               resume_at: float) -> bool:
+    """Hysteretic re-admission check for one shed job against the
+    currently admitted profiles on its device."""
+    total = sum(profile_utilization(p) for p in live)
+    return total + profile_utilization(prof) <= resume_at + 1e-9
 
 
 def state_shardings(cfg: ModelConfig, mesh, state_specs) -> Any:

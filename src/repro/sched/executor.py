@@ -44,6 +44,8 @@ from typing import Callable, List, Optional, Union
 import jax
 
 from ..core.policy import (LEGACY_MODES, SchedulingPolicy, make_policy)
+from . import faultinject
+from .fault import DeviceFailedError, DeviceHealth, JobEvicted
 from .job import RTJob
 
 
@@ -89,13 +91,21 @@ class DeviceExecutor:
                  poll_interval: float = 0.001,
                  policy: Union[str, SchedulingPolicy, None] = None,
                  device_index: int = 0,
-                 trace: Optional[ExecutorTrace] = None):
+                 trace: Optional[ExecutorTrace] = None,
+                 health: Optional[DeviceHealth] = None,
+                 fault_injector: Optional[
+                     "faultinject.FaultInjector"] = None):
         """``policy`` is a registry name (or instance); the historical
         ``mode`` argument ("notify"/"poll"/"unmanaged") keeps working and
         maps onto the registry names.  ``device_index`` names the
         accelerator this executor drives on a multi-device platform
         (``sched.cluster.ClusterExecutor`` owns one executor per device);
-        ``trace`` attaches an :class:`ExecutorTrace` event recorder."""
+        ``trace`` attaches an :class:`ExecutorTrace` event recorder.
+        ``health`` attaches a :class:`~repro.sched.fault.DeviceHealth`
+        slice-level heartbeat (armed around every dispatch);
+        ``fault_injector`` installs a deterministic fault plan — when
+        omitted, ``$REPRO_FAULT_PLAN`` is consulted so a daemon under
+        chaos test injects its own faults (DESIGN.md §10)."""
         assert wait_mode in ("busy", "suspend")
         if mode is not None:
             # the seed executor's construction surface, superseded twice
@@ -125,6 +135,11 @@ class DeviceExecutor:
         self.poll_interval = poll_interval
         self.device_index = device_index
         self.trace = trace
+        self.health = health
+        self.fault_injector = (fault_injector if fault_injector is not None
+                               else faultinject.from_env())
+        self.failed = False               # set by fail(); never cleared
+        self.fail_reason = ""
         self._mutex = threading.Lock()      # runlist-update rt_mutex
         self._cv = threading.Condition(self._mutex)
         self._active: List[RTJob] = []       # jobs currently in a release
@@ -176,6 +191,19 @@ class DeviceExecutor:
         self._stop.set()
         if self._poller:
             self._poller.join(timeout=1.0)
+
+    def fail(self, reason: str = "") -> None:
+        """Declare this device failed (fail-over entry point): every
+        dispatch — in flight, waiting, or future — raises
+        :class:`DeviceFailedError`, and suspended waiters are woken so
+        they observe the verdict immediately.  Permanent: a failed
+        device never rejoins an epoch (the cluster would need a fresh
+        executor, i.e. a fresh binding epoch, anyway)."""
+        with self._mutex:
+            self.failed = True
+            self.fail_reason = reason
+            self._emit("device_failed", None, reason=reason)
+            self._cv.notify_all()
 
     # ------------------------------------------------------------------
     # poll mode: Algorithm 1 (job-granular reservation, shared rule)
@@ -248,6 +276,7 @@ class DeviceExecutor:
         if self.wait_mode == "busy":
             while True:
                 with self._mutex:
+                    self._check_containment(job)
                     if self._admitted(job):
                         if blocked:
                             self._emit("resume", job)
@@ -264,7 +293,10 @@ class DeviceExecutor:
                 time.sleep(0.0005)
         else:
             with self._cv:
-                while not self._admitted(job):
+                while True:
+                    self._check_containment(job)
+                    if self._admitted(job):
+                        break
                     if not blocked:
                         blocked = True
                         self._emit("preempt", job)
@@ -272,6 +304,20 @@ class DeviceExecutor:
                 if blocked:
                     self._emit("resume", job)
                 self._emit("dispatch", job, uid=job.uid)
+
+    def _check_containment(self, job: RTJob) -> None:
+        """Raise the orderly-stop verdict at a preemption point: a
+        failed device (fail-over) or an evicted job (load shedding)
+        must not dispatch again — the containment boundary of
+        DESIGN.md §10.  Called with the mutex held or not; reads only
+        monotonic flags."""
+        if self.failed:
+            raise DeviceFailedError(
+                f"device {self.device_index} failed"
+                + (f": {self.fail_reason}" if self.fail_reason else ""))
+        if job.evicted:
+            raise JobEvicted(f"job {job.name!r} evicted "
+                             f"({job.evict_reason or 'shed'})")
 
     # ------------------------------------------------------------------
     # public API
@@ -302,8 +348,23 @@ class DeviceExecutor:
         self._wait_admitted(job)
         with self._device_lock:
             self.dispatches += 1
-            out = program(*args, **kw)
-            jax.block_until_ready(out)
+            if self.health is not None:
+                self.health.slice_begin(job.name, -1)
+            try:
+                if self.fault_injector is not None:
+                    self.fault_injector.fire(device=self.device_index,
+                                             job=job.name, slice_idx=-1)
+                out = program(*args, **kw)
+                jax.block_until_ready(out)
+            except (DeviceFailedError, JobEvicted):
+                raise
+            except Exception as e:  # noqa: BLE001 — health accounting
+                if self.health is not None:
+                    self.health.record_error(job.name, e)
+                raise
+            finally:
+                if self.health is not None:
+                    self.health.slice_end()
         return out
 
     def run_sliced(self, job: RTJob, op, *,
@@ -328,20 +389,39 @@ class DeviceExecutor:
             carry = op.init()
         for i in range(start, op.n_slices):
             self._wait_admitted(job)
-            with self._device_lock:
-                self.dispatches += 1
-                t0 = time.perf_counter()
-                carry = op.step(carry, i)
-                jax.block_until_ready(carry)
-                job.stats.slice_times.append(time.perf_counter() - t0)
+            carry = self._dispatch_slice(job, op.step, carry, i)
             if checkpoint is not None and checkpoint_every > 0 \
                     and (i + 1) % checkpoint_every == 0:
                 checkpoint(i + 1, carry)
         self._wait_admitted(job)
+        return self._dispatch_slice(job, lambda c, _i: op.finalize(c),
+                                    carry, op.n_slices)
+
+    def _dispatch_slice(self, job: RTJob, step, carry, i: int):
+        """One slice under the device lock: the health heartbeat is
+        armed for exactly the in-flight window (a hung kernel reads as
+        a stalled armed beat), the fault injector fires at the dispatch
+        point, and a slice exception lands in the device's health
+        record before propagating (DESIGN.md §10)."""
         with self._device_lock:
             self.dispatches += 1
+            if self.health is not None:
+                self.health.slice_begin(job.name, i)
             t0 = time.perf_counter()
-            out = op.finalize(carry)
-            jax.block_until_ready(out)
+            try:
+                if self.fault_injector is not None:
+                    self.fault_injector.fire(device=self.device_index,
+                                             job=job.name, slice_idx=i)
+                out = step(carry, i)
+                jax.block_until_ready(out)
+            except (DeviceFailedError, JobEvicted):
+                raise
+            except Exception as e:  # noqa: BLE001 — health accounting
+                if self.health is not None:
+                    self.health.record_error(job.name, e)
+                raise
+            finally:
+                if self.health is not None:
+                    self.health.slice_end()
             job.stats.slice_times.append(time.perf_counter() - t0)
         return out

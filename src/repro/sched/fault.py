@@ -1,5 +1,5 @@
-"""Fault tolerance: heartbeat watchdog, restart-from-checkpoint, and
-straggler mitigation for the training loop.
+"""Fault tolerance: heartbeat watchdog, device health escalation,
+restart-from-checkpoint, and straggler mitigation.
 
 On a real pod, node failure surfaces as a stuck or failed collective; here
 the same control flow is driven by exceptions from the step function and by
@@ -7,13 +7,25 @@ heartbeat staleness.  The contract: the trainer's step loop is wrapped by
 ``FaultTolerantLoop.run_step`` — any step failure rolls back to the newest
 checkpoint and replays; ``Heartbeat`` detects silent stalls (deadlocked
 collectives) and raises in the main loop; chunk-level re-dispatch
-(``with_retry``) bounds straggler impact for idempotent device work."""
+(``with_retry``) bounds straggler impact for idempotent device work.
+
+The scheduler-side failure model (DESIGN.md §10) builds on the same
+primitives: :class:`DeviceHealth` is the per-device slice-level heartbeat
+with a **stall → suspect → failed** escalation ladder —
+``sched.executor.DeviceExecutor.run_sliced`` arms it around every
+dispatch, ``sched.cluster.ClusterExecutor``'s health monitor polls it and
+opens a fail-over binding epoch when a device is declared failed.
+:class:`FaultContained` is the exception family an ``RTJob`` absorbs as
+an *orderly* stop (eviction under load shedding, a failed device) rather
+than an anonymous dead thread.
+"""
 from __future__ import annotations
 
+import random
 import threading
 import time
 from dataclasses import dataclass, field
-from typing import Any, Callable, List, Optional
+from typing import Any, Callable, List, Optional, Tuple
 
 from . import checkpointer
 
@@ -22,9 +34,28 @@ class StallError(RuntimeError):
     pass
 
 
+class FaultContained(RuntimeError):
+    """Base of the orderly-stop exception family: raised through a job
+    body when the platform (not the job) decided the job must stop —
+    ``RTJob`` catches it, records the reason, and ends the job cleanly
+    instead of leaking a dead thread (no silent job loss)."""
+
+
+class JobEvicted(FaultContained):
+    """The job was evicted mid-segment (load shedding / drain): its
+    latest checkpointed carry is the resume point."""
+
+
+class DeviceFailedError(FaultContained):
+    """The device this job is bound to was declared failed; the cluster
+    re-runs the job's admission against the surviving devices."""
+
+
 class Heartbeat:
     """Watchdog: the worker beats every step; a monitor thread flags a
-    stall when the last beat is older than ``timeout_s``."""
+    stall when the last beat is older than ``timeout_s``.  A beat clears
+    a previously flagged stall — a recovered worker is not permanently
+    poisoned (``check()`` only raises while the stall is current)."""
 
     def __init__(self, timeout_s: float = 30.0):
         self.timeout_s = timeout_s
@@ -36,6 +67,7 @@ class Heartbeat:
 
     def beat(self) -> None:
         self._last = time.monotonic()
+        self._stalled = False
 
     def check(self) -> None:
         if self._stalled:
@@ -52,21 +84,168 @@ class Heartbeat:
 
 
 def with_retry(fn: Callable, n_retries: int = 2,
-               timeout_s: Optional[float] = None) -> Callable:
+               timeout_s: Optional[float] = None,
+               backoff_s: float = 0.05, max_backoff_s: float = 2.0,
+               rng: Optional[random.Random] = None) -> Callable:
     """Straggler mitigation for idempotent device work: re-dispatch on
     failure (the REEF-style reset degenerates to re-running idempotent
-    programs, cf. DESIGN.md)."""
+    programs, cf. DESIGN.md).
+
+    ``timeout_s`` is a *per-attempt* deadline, enforced: the call runs on
+    a worker thread and an attempt that exceeds the deadline counts as a
+    failure (``StallError``) and is retried.  Because the stalled attempt
+    cannot be interrupted, the wrapped work must be idempotent — which is
+    this helper's contract anyway.  Retries are spaced by jittered
+    exponential backoff (``backoff_s * 2**attempt``, capped at
+    ``max_backoff_s``, jittered uniformly in [0.5x, 1.5x]) so a burst of
+    stragglers does not re-dispatch in lockstep."""
+    rng = rng or random.Random()
+
+    def attempt(a, kw):
+        if timeout_s is None:
+            return fn(*a, **kw)
+        box: dict = {}
+
+        def work():
+            try:
+                box["ret"] = fn(*a, **kw)
+            except Exception as e:  # noqa: BLE001 — relayed to caller
+                box["err"] = e
+
+        t = threading.Thread(target=work, daemon=True)
+        t.start()
+        t.join(timeout_s)
+        if t.is_alive():
+            raise StallError(
+                f"attempt exceeded timeout_s={timeout_s:g} — presumed "
+                "straggler; re-dispatching (work must be idempotent)")
+        if "err" in box:
+            raise box["err"]
+        return box.get("ret")
 
     def wrapped(*a, **kw):
-        err = None
-        for _ in range(n_retries + 1):
+        err: Optional[BaseException] = None
+        for i in range(n_retries + 1):
             try:
-                return fn(*a, **kw)
+                return attempt(a, kw)
+            except FaultContained:
+                raise           # an orderly platform stop is not a straggler
             except Exception as e:  # noqa: BLE001 — deliberate catch-all
                 err = e
+            if i < n_retries:
+                delay = min(backoff_s * (2 ** i), max_backoff_s)
+                time.sleep(delay * rng.uniform(0.5, 1.5))
         raise err
 
     return wrapped
+
+
+# --------------------------------------------------------------------------
+# per-device health: slice-level heartbeat + stall→suspect→failed ladder
+# --------------------------------------------------------------------------
+
+HEALTHY, SUSPECT, FAILED = "healthy", "suspect", "failed"
+
+
+@dataclass
+class HealthConfig:
+    """Escalation thresholds for :class:`DeviceHealth` (DESIGN.md §10).
+
+    A slice in flight longer than ``stall_timeout_s`` without a beat
+    moves the device to *suspect*; a suspect device that still has not
+    beaten after another ``fail_timeout_s`` is declared *failed*.  A beat
+    while suspect de-escalates back to healthy.  ``error_threshold``
+    slice exceptions (cumulative) also declare the device failed.
+    ``poll_interval_s`` is the cluster health monitor's cadence;
+    ``auto_failover`` lets the monitor call
+    ``ClusterExecutor.fail_device`` itself on a failed verdict."""
+    stall_timeout_s: float = 5.0
+    fail_timeout_s: float = 5.0
+    error_threshold: int = 3
+    poll_interval_s: float = 0.1
+    auto_failover: bool = True
+
+
+class DeviceHealth:
+    """Slice-level health of one device executor.
+
+    Armed only while a dispatch is in flight (an idle device is not
+    stalling); every slice completion beats.  ``check()`` advances the
+    stall → suspect → failed ladder and returns the current state —
+    transitions are recorded in ``transitions`` for the audit trail."""
+
+    def __init__(self, device: int, config: Optional[HealthConfig] = None):
+        self.device = device
+        self.config = config or HealthConfig()
+        self.state = HEALTHY
+        self.errors: List[str] = []
+        self.transitions: List[Tuple[float, str, str, str]] = []
+        self._lock = threading.Lock()
+        self._inflight: Optional[Tuple[str, int]] = None  # (job, slice)
+        self._last_beat = time.monotonic()
+        self._suspect_since: Optional[float] = None
+
+    # -- executor-side hooks (called around every dispatch) -------------
+    def slice_begin(self, job: str, slice_idx: int) -> None:
+        with self._lock:
+            self._inflight = (job, slice_idx)
+            self._last_beat = time.monotonic()
+
+    def beat(self) -> None:
+        with self._lock:
+            self._last_beat = time.monotonic()
+            if self.state == SUSPECT:
+                # the ladder runs both ways: a beat from a recovered
+                # device clears the suspicion (cf. Heartbeat.beat)
+                self._to(HEALTHY, "beat received while suspect")
+                self._suspect_since = None
+
+    def slice_end(self) -> None:
+        with self._lock:
+            self._inflight = None
+            self._last_beat = time.monotonic()
+            if self.state == SUSPECT:
+                self._to(HEALTHY, "slice completed while suspect")
+                self._suspect_since = None
+
+    def record_error(self, job: str, exc: BaseException) -> None:
+        with self._lock:
+            self.errors.append(f"{job}: {type(exc).__name__}: {exc}")
+            if (self.state != FAILED
+                    and len(self.errors) >= self.config.error_threshold):
+                self._to(FAILED,
+                         f"{len(self.errors)} slice exceptions "
+                         f"(threshold {self.config.error_threshold})")
+
+    # -- monitor-side ----------------------------------------------------
+    def check(self, now: Optional[float] = None) -> str:
+        now = time.monotonic() if now is None else now
+        with self._lock:
+            if self.state == FAILED or self._inflight is None:
+                return self.state
+            stale = now - self._last_beat
+            if self.state == HEALTHY \
+                    and stale > self.config.stall_timeout_s:
+                job, s = self._inflight
+                self._to(SUSPECT, f"slice {s} of {job!r} stalled "
+                                  f"{stale:.2f}s")
+                self._suspect_since = now
+            elif self.state == SUSPECT and self._suspect_since is not None \
+                    and now - self._suspect_since \
+                    > self.config.fail_timeout_s:
+                job, s = self._inflight
+                self._to(FAILED, f"slice {s} of {job!r} still stalled "
+                                 f"{stale:.2f}s after suspect")
+            return self.state
+
+    @property
+    def reason(self) -> str:
+        return self.transitions[-1][3] if self.transitions else ""
+
+    def _to(self, state: str, why: str) -> None:
+        # caller holds self._lock
+        self.transitions.append((time.monotonic(), self.state, state, why))
+        self.state = state
 
 
 @dataclass

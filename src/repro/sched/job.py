@@ -20,6 +20,8 @@ import time
 from dataclasses import dataclass, field
 from typing import Callable, List, Optional
 
+from .fault import FaultContained
+
 BEST_EFFORT = -1_000_000
 
 
@@ -89,6 +91,14 @@ class RTJob:
         self.state = JobState.IDLE
         self.stats = JobStats()
         self.release_time = 0.0
+        # containment bookkeeping (DESIGN.md §10): evicted is the
+        # platform's orderly-stop verdict (load shedding / fail-over
+        # drain) — the executor raises FaultContained at the next
+        # preemption point; error records why a job ended abnormally,
+        # so a dead body is observable instead of a silently lost thread
+        self.evicted = False
+        self.evict_reason = ""
+        self.error: Optional[BaseException] = None
         self._stop = threading.Event()
         self._thread: Optional[threading.Thread] = None
 
@@ -104,6 +114,15 @@ class RTJob:
         self._thread.start()
 
     def stop(self) -> None:
+        self._stop.set()
+
+    def evict(self, reason: str = "") -> None:
+        """Orderly mid-segment stop: the executor raises ``JobEvicted``
+        at the job's next preemption point (slice boundary), so an
+        evicted sliced job loses at most the slices since its last
+        checkpointed carry — the resume point of a shed job."""
+        self.evicted = True
+        self.evict_reason = reason
         self._stop.set()
 
     def join(self, timeout: Optional[float] = None) -> None:
@@ -129,6 +148,18 @@ class RTJob:
             executor.on_job_start(self)
             try:
                 self.body(self, it)
+            except FaultContained as e:
+                # orderly platform stop (eviction / device fail-over):
+                # the iteration did not complete — no completion, no
+                # response-time sample — but the job ends cleanly and
+                # the verdict is observable on job.error
+                self.error = e
+                break
+            except Exception as e:  # noqa: BLE001 — no silent job loss
+                # a body failure must surface as state, not as a dead
+                # thread whose traceback nobody joined on
+                self.error = e
+                break
             finally:
                 executor.on_job_complete(self)
             resp = time.monotonic() - self.release_time

@@ -33,18 +33,39 @@ from __future__ import annotations
 import json
 import os
 import threading
+import time
 from dataclasses import dataclass, field
-from typing import Dict, List, Mapping, Optional
+from typing import Dict, List, Mapping, Optional, Set
 
 from .admission import (AdmissionDecision, JobProfile,
                         RecoveryConformanceError)
 
-__all__ = ["JobStore", "StoreState", "JobRecord",
+__all__ = ["JobStore", "StoreState", "JobRecord", "CompactionPolicy",
            "RecoveryConformanceError"]
 
 _JOURNAL = "journal.jsonl"
 _SNAPSHOT = "snapshot.json"
 _FORMAT_VERSION = 1
+
+
+@dataclass(frozen=True)
+class CompactionPolicy:
+    """Opportunistic journal-compaction triggers: after any append, the
+    journal is folded into the snapshot when it exceeds ``max_bytes``,
+    ``max_records`` appended since the last compaction, or ``max_age_s``
+    since the first post-compaction append.  ``None`` disables a
+    trigger; a policy with every trigger ``None`` never auto-compacts
+    (equivalent to not attaching one)."""
+    max_bytes: Optional[int] = 1 << 20       # 1 MiB
+    max_records: Optional[int] = None
+    max_age_s: Optional[float] = None
+
+    def due(self, size: int, records: int, age_s: float) -> bool:
+        return ((self.max_bytes is not None and size >= self.max_bytes)
+                or (self.max_records is not None
+                    and records >= self.max_records)
+                or (self.max_age_s is not None and records > 0
+                    and age_s >= self.max_age_s))
 
 
 @dataclass
@@ -82,9 +103,22 @@ class StoreState:
     config: Optional[dict] = None        # AdmissionController.export_config
     cluster: Optional[dict] = None       # ClusterExecutor shape (n_devices…)
     jobs: Dict[str, JobRecord] = field(default_factory=dict)  # insertion-
-    # ordered = admission-ordered (dicts preserve insertion order)
+    # ordered = admission-ordered (dicts preserve insertion order; a
+    # re-admission after fail-over re-inserts at the end, so the order
+    # stays the order decisions were actually taken in)
     refusals: List[dict] = field(default_factory=list)
     resumes: List[dict] = field(default_factory=list)
+    # fault-containment state (DESIGN.md §10)
+    epoch: int = 0                       # current binding epoch
+    failed_devices: Set[int] = field(default_factory=set)
+    shed: Dict[str, JobRecord] = field(default_factory=dict)  # evicted
+    # best-effort jobs awaiting resumption (carry/done_iterations kept)
+    # jobs displaced by a device failure whose re-admission outcome has
+    # not been journaled yet — empty in any quiescent journal (the
+    # no-silent-job-loss audit the chaos suite replays)
+    displaced: Dict[str, JobRecord] = field(default_factory=dict)
+    requests: Dict[str, dict] = field(default_factory=dict)  # request_id
+    # -> journaled decision (the idempotent-submission dedup table)
 
     def admission_entries(self) -> List[dict]:
         """``AdmissionController.rebuild`` input: the live jobs, in
@@ -92,18 +126,40 @@ class StoreState:
         return [{"profile": r.profile, "decision": r.decision}
                 for r in self.jobs.values()]
 
+    def unaccounted(self) -> List[str]:
+        """Names whose journaled lifecycle is dangling: displaced by a
+        fail-over with no re-admission/refusal journaled.  Non-empty
+        means a job was silently lost — the invariant the chaos suite
+        asserts is empty after every failure scenario."""
+        return sorted(self.displaced)
+
 
 class JobStore:
     """Append-only journal + atomic snapshot of the scheduling state."""
 
-    def __init__(self, root: str, *, sync: bool = True):
+    def __init__(self, root: str, *, sync: bool = True,
+                 auto_compact: Optional[CompactionPolicy] = None):
         self.root = root
         self.sync = sync
+        self.auto_compact = auto_compact
+        self.compactions = 0              # auto+manual, for tests/stats
         os.makedirs(root, exist_ok=True)
         os.makedirs(self.carries_root, exist_ok=True)
         self._lock = threading.Lock()
+        self._compact_lock = threading.Lock()  # serializes compactions
         self._journal_path = os.path.join(root, _JOURNAL)
         self._fh = open(self._journal_path, "a", encoding="utf-8")
+        # pre-existing journal lines count toward the records trigger
+        self._records = self._count_journal_lines()
+        self._first_append_t = (time.monotonic()
+                                if self._records else None)
+
+    def _count_journal_lines(self) -> int:
+        try:
+            with open(self._journal_path, encoding="utf-8") as f:
+                return sum(1 for line in f if line.strip())
+        except OSError:
+            return 0
 
     # ------------------------------------------------------------------
     # paths
@@ -127,6 +183,31 @@ class JobStore:
             self._fh.flush()
             if self.sync:
                 os.fsync(self._fh.fileno())
+            self._records += 1
+            if self._first_append_t is None:
+                self._first_append_t = time.monotonic()
+        self._maybe_compact()
+
+    def _maybe_compact(self) -> None:
+        """Opportunistic compaction: run the existing ``compact`` op
+        when the attached :class:`CompactionPolicy` says the journal is
+        due.  Called outside the append lock (``compact`` takes it);
+        racing appenders may both see the trigger — ``compact`` itself
+        is concurrency-safe and the second run folds a near-empty
+        journal, which is harmless."""
+        pol = self.auto_compact
+        if pol is None:
+            return
+        with self._lock:
+            try:
+                size = os.path.getsize(self._journal_path)
+            except OSError:
+                return
+            records = self._records
+            age = (time.monotonic() - self._first_append_t
+                   if self._first_append_t is not None else 0.0)
+        if pol.due(size, records, age):
+            self.compact()
 
     def record_config(self, admission_config: Mapping,
                       cluster: Optional[Mapping] = None) -> None:
@@ -139,21 +220,51 @@ class JobStore:
     def record_decision(self, prof: JobProfile, decision: Mapping, *,
                         device: Optional[int] = None,
                         workload: Optional[Mapping] = None,
-                        n_iterations: int = 1) -> None:
+                        n_iterations: int = 1,
+                        done_iterations: int = 0,
+                        epoch: Optional[int] = None,
+                        request_id: Optional[str] = None) -> None:
         """One admission decision, verbatim (accepted or refused).
         Accepted decisions fold into live-job state on replay; refusals
-        are kept as an audit trail only."""
+        are kept as an audit trail only.  ``epoch`` tags a decision
+        taken inside a fail-over binding epoch; ``request_id`` is the
+        client's idempotency token (the daemon dedups resubmissions by
+        it); ``done_iterations`` carries a resumed/re-admitted job's
+        progress across the decision."""
         dec = (decision.journal_form()
                if isinstance(decision, AdmissionDecision)
                else {k: v for k, v in dict(decision).items()
                      if k != "job"})
-        self._append({"rec": "decision", "profile": prof.to_dict(),
-                      "decision": dec, "device": device,
-                      "workload": dict(workload) if workload else None,
-                      "n_iterations": n_iterations})
+        rec = {"rec": "decision", "profile": prof.to_dict(),
+               "decision": dec, "device": device,
+               "workload": dict(workload) if workload else None,
+               "n_iterations": n_iterations}
+        if done_iterations:
+            rec["done_iterations"] = done_iterations
+        if epoch is not None:
+            rec["epoch"] = epoch
+        if request_id is not None:
+            rec["request_id"] = request_id
+        self._append(rec)
 
     def record_release(self, name: str) -> None:
         self._append({"rec": "release", "job": name})
+
+    def record_failover(self, device: int, epoch: int,
+                        reason: str = "") -> None:
+        """A device was declared failed and binding epoch ``epoch``
+        opened: on replay, every live job bound to that device becomes
+        *displaced* until a follow-up decision record (re-admission or
+        refusal) settles it — the no-silent-job-loss ledger."""
+        self._append({"rec": "failover", "device": device,
+                      "epoch": epoch, "reason": reason})
+
+    def record_shed(self, name: str, reason: str = "") -> None:
+        """A best-effort job was evicted by the overload degradation
+        ladder; its folded record (carry pointer, done iterations)
+        moves to the shed set, from which a later re-admission decision
+        resumes it."""
+        self._append({"rec": "shed", "job": name, "reason": reason})
 
     def record_carry(self, name: str, iteration: int,
                      slice_idx: int) -> None:
@@ -186,20 +297,50 @@ class JobStore:
             state.config = rec["admission"]
             state.cluster = rec.get("cluster") or None
         elif kind == "decision":
+            name = rec["profile"]["name"]
+            rid = rec.get("request_id")
+            if rid is not None:
+                state.requests[rid] = {
+                    "job": name,
+                    "admitted": bool(rec["decision"].get("admitted")),
+                    "decision": rec["decision"]}
             if rec["decision"].get("admitted"):
-                name = rec["profile"]["name"]
                 # idempotent fold: compaction may crash between the
                 # snapshot replace and the journal replace, re-applying
-                # the same record — last write wins, state identical
+                # the same record — last write wins, state identical.
+                # pop-then-insert so dict insertion order stays the
+                # order decisions were actually taken in (a fail-over
+                # re-admission moves the job to the end, matching the
+                # fresh decision record rebuild() will replay)
+                state.jobs.pop(name, None)
                 state.jobs[name] = JobRecord(
                     profile=rec["profile"], decision=rec["decision"],
                     device=rec.get("device"),
                     workload=rec.get("workload"),
-                    n_iterations=rec.get("n_iterations", 1))
+                    n_iterations=rec.get("n_iterations", 1),
+                    done_iterations=rec.get("done_iterations", 0))
+                # a decision settles any dangling displaced/shed entry
+                state.displaced.pop(name, None)
+                state.shed.pop(name, None)
             else:
                 state.refusals.append(rec)
+                # an explicit refusal also settles a displaced job: it
+                # was not silently lost, the platform refused it on the
+                # record (the job is gone, but accounted for)
+                state.displaced.pop(name, None)
         elif kind == "release":
             state.jobs.pop(rec["job"], None)
+            state.shed.pop(rec["job"], None)
+        elif kind == "failover":
+            state.epoch = rec["epoch"]
+            state.failed_devices.add(rec["device"])
+            for name in [n for n, r in state.jobs.items()
+                         if r.device == rec["device"]]:
+                state.displaced[name] = state.jobs.pop(name)
+        elif kind == "shed":
+            job = state.jobs.pop(rec["job"], None)
+            if job is not None:
+                state.shed[rec["job"]] = job
         elif kind == "carry":
             job = state.jobs.get(rec["job"])
             if job is not None:
@@ -219,11 +360,28 @@ class JobStore:
             state.cluster = rec.get("cluster")
             state.jobs = {name: JobRecord.from_json(j)
                           for name, j in rec.get("jobs", {}).items()}
+            state.epoch = rec.get("epoch", 0)
+            state.failed_devices = set(rec.get("failed_devices", []))
+            state.shed = {name: JobRecord.from_json(j)
+                          for name, j in rec.get("shed", {}).items()}
+            state.displaced = {
+                name: JobRecord.from_json(j)
+                for name, j in rec.get("displaced", {}).items()}
+            state.requests = dict(rec.get("requests", {}))
         # unknown record kinds are skipped: an old daemon must be able
         # to read a journal a newer one appended audit records to
 
     def load(self) -> StoreState:
-        """Fold snapshot + journal into the current state."""
+        """Fold snapshot + journal into the current state.
+
+        Taken under the store lock so a concurrent ``compact`` cannot
+        slide the journal out from under the fold between the snapshot
+        read and the journal read (old snapshot + truncated journal
+        would silently drop the compacted records)."""
+        with self._lock:
+            return self._load_unlocked()
+
+    def _load_unlocked(self) -> StoreState:
         state = StoreState()
         snap_path = os.path.join(self.root, _SNAPSHOT)
         if os.path.exists(snap_path):
@@ -253,23 +411,38 @@ class JobStore:
 
         Both steps are atomic replaces; the crash window between them
         (snapshot new, journal old) double-applies records on the next
-        load, which the idempotent fold absorbs."""
-        with self._lock:
+        load, which the idempotent fold absorbs.
+
+        The whole fold+swap runs under the store lock: an earlier
+        version folded the journal *outside* the lock, so a record
+        appended between the fold and the journal truncation was
+        silently dropped (caught by
+        tests/test_store.py::test_compact_concurrent_appends_lose_nothing).
+        Appends now block for the duration of a compaction — bounded by
+        snapshot size, and the auto-compaction policy keeps journals
+        small — in exchange for never losing a journaled record."""
+        with self._compact_lock, self._lock:
             self._fh.flush()
             os.fsync(self._fh.fileno())
-        state = self.load()
-        snap = {"v": _FORMAT_VERSION, "config": state.config,
-                "cluster": state.cluster,
-                "jobs": {name: r.to_json()
-                         for name, r in state.jobs.items()}}
-        snap_path = os.path.join(self.root, _SNAPSHOT)
-        tmp = snap_path + ".tmp"
-        with open(tmp, "w", encoding="utf-8") as f:
-            json.dump(snap, f, sort_keys=True)
-            f.flush()
-            os.fsync(f.fileno())
-        os.replace(tmp, snap_path)
-        with self._lock:
+            state = self._load_unlocked()
+            snap = {"v": _FORMAT_VERSION, "config": state.config,
+                    "cluster": state.cluster,
+                    "jobs": {name: r.to_json()
+                             for name, r in state.jobs.items()},
+                    "epoch": state.epoch,
+                    "failed_devices": sorted(state.failed_devices),
+                    "shed": {name: r.to_json()
+                             for name, r in state.shed.items()},
+                    "displaced": {name: r.to_json()
+                                  for name, r in state.displaced.items()},
+                    "requests": state.requests}
+            snap_path = os.path.join(self.root, _SNAPSHOT)
+            tmp = snap_path + ".tmp"
+            with open(tmp, "w", encoding="utf-8") as f:
+                json.dump(snap, f, sort_keys=True)
+                f.flush()
+                os.fsync(f.fileno())
+            os.replace(tmp, snap_path)
             self._fh.close()
             tmp_j = self._journal_path + ".tmp"
             with open(tmp_j, "w", encoding="utf-8") as f:
@@ -277,6 +450,9 @@ class JobStore:
                 os.fsync(f.fileno())
             os.replace(tmp_j, self._journal_path)
             self._fh = open(self._journal_path, "a", encoding="utf-8")
+            self._records = 0
+            self._first_append_t = None
+            self.compactions += 1
         return state
 
     def close(self) -> None:

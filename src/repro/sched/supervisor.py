@@ -1,0 +1,278 @@
+"""Daemon supervisor: watchdog + restart-through-recovery (DESIGN.md §10).
+
+The scheduling daemon's durability story (journal → rebuild → rebind →
+resume) only pays off if *something* restarts the daemon after a crash.
+This supervisor is that something: it spawns ``repro.sched.daemon`` as a
+child process and watches two signals —
+
+  * **exit** (``waitpid``): the child died (crash, SIGKILL, OOM) —
+    restart it with jittered exponential backoff; the restart goes
+    through the full recovery path, so the admitted jobs come back with
+    their journaled guarantees re-proven;
+  * **heartbeat staleness**: the daemon touches its ``--heartbeat-file``
+    every loop turn; a live pid with a stale beacon is a *hung* daemon
+    (deadlock, stuck runtime) that ``waitpid`` alone cannot see — the
+    supervisor SIGKILLs it and lets the exit path restart it.
+
+Crucially, the supervisor must not *mask* a daemon that cannot come up —
+above all :class:`~repro.sched.admission.RecoveryConformanceError`, the
+recovery path's refusal to serve guarantees it can no longer prove.  A
+child that keeps dying within ``min_uptime_s`` is counted as a *fast
+failure*; after ``max_restarts`` consecutive fast failures the
+supervisor gives up and surfaces the tail of the daemon's log (where the
+conformance traceback lives) instead of thrashing forever.
+
+Run it::
+
+    PYTHONPATH=src python -m repro.sched.supervisor \\
+        --store /var/lib/schedd --socket /run/schedd.sock \\
+        -- --n-devices 2 --health
+"""
+from __future__ import annotations
+
+import json
+import os
+import random
+import signal
+import subprocess
+import sys
+import threading
+import time
+from typing import IO, List, Optional, Sequence, Tuple
+
+__all__ = ["Supervisor"]
+
+
+class Supervisor:
+    """Spawn + watch one daemon process; restart through recovery.
+
+    ``cmd`` is the full child argv (tests point it at a script of their
+    own; the CLI builds the ``repro.sched.daemon`` invocation).  All
+    thresholds are seconds.  ``run()`` blocks until ``stop()`` or
+    give-up; ``start()`` runs it on a thread."""
+
+    def __init__(self, cmd: Sequence[str], *,
+                 heartbeat_file: Optional[str] = None,
+                 heartbeat_timeout_s: float = 10.0,
+                 poll_s: float = 0.2,
+                 restart_backoff_s: float = 0.5,
+                 max_backoff_s: float = 10.0,
+                 min_uptime_s: float = 3.0,
+                 max_restarts: int = 5,
+                 log_path: Optional[str] = None,
+                 rng: Optional[random.Random] = None):
+        self.cmd = list(cmd)
+        self.heartbeat_file = heartbeat_file
+        self.heartbeat_timeout_s = heartbeat_timeout_s
+        self.poll_s = poll_s
+        self.restart_backoff_s = restart_backoff_s
+        self.max_backoff_s = max_backoff_s
+        self.min_uptime_s = min_uptime_s
+        self.max_restarts = max_restarts
+        self.log_path = log_path
+        self.restarts = 0
+        self.gave_up = False
+        self.give_up_reason = ""
+        # (monotonic time, event, detail) audit trail the tests assert on
+        self.events: List[Tuple[float, str, str]] = []
+        self._rng = rng or random.Random()
+        self._fast_failures = 0
+        self._proc: Optional[subprocess.Popen] = None
+        self._started_at = 0.0
+        self._stop = threading.Event()
+        self._thread: Optional[threading.Thread] = None
+
+    # ------------------------------------------------------------------
+    def pid(self) -> Optional[int]:
+        p = self._proc
+        return p.pid if p is not None and p.poll() is None else None
+
+    def _event(self, event: str, detail: str = "") -> None:
+        self.events.append((time.monotonic(), event, detail))
+
+    def _open_log(self) -> Optional[IO]:
+        if self.log_path is None:
+            return None
+        return open(self.log_path, "ab")
+
+    def _spawn(self) -> None:
+        log = self._open_log()
+        try:
+            self._proc = subprocess.Popen(
+                self.cmd,
+                stdout=log if log is not None else subprocess.DEVNULL,
+                stderr=subprocess.STDOUT if log is not None
+                else subprocess.DEVNULL)
+        finally:
+            if log is not None:
+                log.close()   # the child holds its own descriptor
+        self._started_at = time.monotonic()
+        self._event("spawn", f"pid={self._proc.pid}")
+
+    def _log_tail(self, n: int = 40) -> str:
+        if self.log_path is None or not os.path.exists(self.log_path):
+            return "(no daemon log captured — pass log_path)"
+        try:
+            with open(self.log_path, "rb") as f:
+                lines = f.read().decode(errors="replace").splitlines()
+            return "\n".join(lines[-n:])
+        except OSError as e:
+            return f"(daemon log unreadable: {e})"
+
+    def _heartbeat_stale(self) -> Optional[float]:
+        """Age (s) of a stale heartbeat, or ``None`` when fresh/absent.
+        Before the first beacon appears, the child's own uptime stands
+        in — a daemon that never beats at all is just as hung."""
+        if self.heartbeat_file is None:
+            return None
+        try:
+            with open(self.heartbeat_file, encoding="utf-8") as f:
+                age = time.time() - float(json.load(f)["t"])
+        except (OSError, ValueError, KeyError):
+            age = time.monotonic() - self._started_at
+        return age if age > self.heartbeat_timeout_s else None
+
+    # ------------------------------------------------------------------
+    def run(self) -> None:
+        if self._proc is None:
+            self._spawn()
+        while not self._stop.is_set():
+            rc = self._proc.poll()
+            if rc is not None:
+                uptime = time.monotonic() - self._started_at
+                self._event("exit", f"rc={rc} uptime={uptime:.2f}s")
+                if uptime < self.min_uptime_s:
+                    self._fast_failures += 1
+                else:
+                    self._fast_failures = 0
+                if self._fast_failures > self.max_restarts:
+                    # the daemon cannot come up — a RecoveryConformance
+                    # failure, a bad config, a corrupt journal.  Give
+                    # up LOUDLY: the log tail carries the traceback the
+                    # operator (and the chaos suite) must see
+                    self.gave_up = True
+                    self.give_up_reason = (
+                        f"{self._fast_failures} consecutive exits within "
+                        f"min_uptime_s={self.min_uptime_s:g} — refusing "
+                        f"to keep restarting a daemon that cannot come "
+                        f"up.  Last daemon output:\n{self._log_tail()}")
+                    self._event("give_up", self.give_up_reason)
+                    return
+                delay = min(self.restart_backoff_s
+                            * (2 ** max(self._fast_failures - 1, 0)),
+                            self.max_backoff_s)
+                if self._stop.wait(delay * self._rng.uniform(0.5, 1.5)):
+                    return
+                self.restarts += 1
+                self._event("restart", f"#{self.restarts}")
+                self._spawn()
+                continue
+            stale = self._heartbeat_stale()
+            if stale is not None:
+                # alive pid, dead heartbeat: a hung daemon.  SIGKILL —
+                # SIGTERM would be absorbed by the hang — and let the
+                # exit branch restart it through recovery
+                self._event("hang_kill",
+                            f"heartbeat stale {stale:.2f}s "
+                            f"(timeout {self.heartbeat_timeout_s:g}s)")
+                try:
+                    self._proc.kill()
+                except OSError:
+                    pass
+            self._stop.wait(self.poll_s)
+        self._terminate_child()
+
+    def start(self) -> "Supervisor":
+        self._spawn()
+        self._thread = threading.Thread(target=self.run, daemon=True,
+                                        name="sched-supervisor")
+        self._thread.start()
+        return self
+
+    def _terminate_child(self) -> None:
+        p = self._proc
+        if p is None or p.poll() is not None:
+            return
+        try:
+            p.terminate()
+            try:
+                p.wait(timeout=5.0)
+            except subprocess.TimeoutExpired:
+                p.kill()
+                p.wait(timeout=5.0)
+        except OSError:
+            pass
+
+    def stop(self) -> None:
+        self._stop.set()
+        if self._thread is not None:
+            self._thread.join(timeout=10.0)
+        self._terminate_child()
+
+    def __enter__(self) -> "Supervisor":
+        return self if self._thread is not None else self.start()
+
+    def __exit__(self, *exc) -> None:
+        self.stop()
+
+
+# --------------------------------------------------------------------------
+# CLI
+# --------------------------------------------------------------------------
+
+def main(argv=None) -> int:
+    import argparse
+
+    ap = argparse.ArgumentParser(
+        prog="repro.sched.supervisor",
+        description="watchdog + auto-restart for the scheduling daemon "
+                    "(restarts go through the journal recovery path); "
+                    "daemon flags go after '--'")
+    ap.add_argument("--store", required=True)
+    ap.add_argument("--socket", default=None)
+    ap.add_argument("--heartbeat-file", default=None,
+                    help="default: <store>/heartbeat.json")
+    ap.add_argument("--heartbeat-timeout-s", type=float, default=10.0)
+    ap.add_argument("--min-uptime-s", type=float, default=3.0)
+    ap.add_argument("--max-restarts", type=int, default=5)
+    ap.add_argument("--restart-backoff-s", type=float, default=0.5)
+    ap.add_argument("--log", default=None,
+                    help="daemon stdout/stderr log "
+                         "(default: <store>/daemon.log)")
+    ap.add_argument("daemon_args", nargs="*",
+                    help="extra repro.sched.daemon flags (after '--')")
+    args = ap.parse_args(argv)
+
+    hb = args.heartbeat_file or os.path.join(args.store, "heartbeat.json")
+    log = args.log or os.path.join(args.store, "daemon.log")
+    os.makedirs(args.store, exist_ok=True)
+    cmd = [sys.executable, "-m", "repro.sched.daemon",
+           "--store", args.store, "--heartbeat-file", hb]
+    if args.socket:
+        cmd += ["--socket", args.socket]
+    cmd += list(args.daemon_args)
+
+    sup = Supervisor(cmd, heartbeat_file=hb,
+                     heartbeat_timeout_s=args.heartbeat_timeout_s,
+                     min_uptime_s=args.min_uptime_s,
+                     max_restarts=args.max_restarts,
+                     restart_backoff_s=args.restart_backoff_s,
+                     log_path=log)
+
+    def _term(signum, frame):
+        sup._stop.set()
+
+    signal.signal(signal.SIGTERM, _term)
+    signal.signal(signal.SIGINT, _term)
+    print(f"supervisor ready pid={os.getpid()} cmd={' '.join(cmd)} "
+          f"heartbeat={hb} log={log}", flush=True)
+    sup.run()
+    if sup.gave_up:
+        print(f"supervisor gave up: {sup.give_up_reason}",
+              file=sys.stderr, flush=True)
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,636 @@
+"""Chaos suite: the fault-containment layer under deterministic
+injected faults (DESIGN.md §10).
+
+Matrix: {slice exception, device hang, daemon SIGKILL, overload burst}
+× device counts, asserting the two §10 invariants throughout:
+
+  * surviving RT jobs' MORT stays within their admitted WCRT — the
+    guarantee holds *through* the fault, not just before it;
+  * no silent job loss — every job that ever held an admission is,
+    after the dust settles, either live (possibly re-bound in a new
+    epoch, with fresh journaled evidence) or explicitly refused on the
+    record; ``StoreState.unaccounted()`` must drain to ``[]``.
+
+In-process legs drive a ``ClusterExecutor`` directly (injector installed
+on the executor); subprocess legs drive a real ``repro.sched.daemon``
+whose faults come from ``$REPRO_FAULT_PLAN`` — the daemon SIGKILLs
+*itself* mid-slice, exactly like a machine check, and must recover.  The
+supervisor legs close the loop: kill → auto-restart → recovery, and the
+give-up path that surfaces ``RecoveryConformanceError`` instead of
+masking it behind restarts.
+"""
+import json
+import os
+import signal
+import subprocess
+import sys
+import threading
+import time
+
+import pytest
+
+from repro.sched import (ClusterExecutor, FaultContained, FaultInjector,
+                         FaultSpec, HealthConfig, JobEvicted, JobProfile,
+                         JobStore, ShedPolicy, Supervisor, connect)
+from repro.sched.daemon import SchedDaemon
+from repro.sched.fault import FAILED, SUSPECT
+
+SRC = os.path.abspath(os.path.join(os.path.dirname(__file__),
+                                   os.pardir, "src"))
+ENV = dict(os.environ, REPRO_PALLAS="interpret",
+           PYTHONPATH=SRC + os.pathsep + os.environ.get("PYTHONPATH", ""))
+ENV.pop("REPRO_FAULT_PLAN", None)
+
+# in-process subject: 10 sleep-slices of 30 ms (~0.3 s per release),
+# priced at 1 s of a 5 s period — generous WCRT slack so observed
+# response times stay inside the evidence even on a loaded CI host
+SLICES, SLICE_MS = 10, 30.0
+EXEC_MS, PERIOD_MS = 1000.0, 5000.0
+SPIN = {"name": "demo.spin",
+        "kwargs": {"slices": SLICES, "slice_ms": SLICE_MS}}
+
+
+def prof(name, prio=10, device=0, exec_ms=EXEC_MS, period_ms=PERIOD_MS,
+         cpu=0, best_effort=False):
+    return JobProfile(name, host_segments_ms=[1.0],
+                      device_segments_ms=[(0.5, exec_ms)],
+                      period_ms=period_ms, priority=prio, cpu=cpu,
+                      best_effort=best_effort, device=device)
+
+
+def wait_for(pred, timeout, what):
+    deadline = time.monotonic() + timeout
+    while time.monotonic() < deadline:
+        got = pred()
+        if got:
+            return got
+        time.sleep(0.05)
+    raise AssertionError(f"timed out waiting for {what}")
+
+
+def make_cluster(tmp_path, n_devices, **kw):
+    return ClusterExecutor(
+        n_devices=n_devices, policy="ioctl", n_cpus=4, trace=True,
+        store=JobStore(str(tmp_path / "store"), sync=False), **kw)
+
+
+def journal_records(store_dir, kind, job=None):
+    path = os.path.join(str(store_dir), "journal.jsonl")
+    out = []
+    if not os.path.exists(path):
+        return out
+    with open(path) as f:
+        for line in f:
+            try:
+                rec = json.loads(line)
+            except json.JSONDecodeError:
+                continue
+            if rec.get("rec") == kind and (job is None
+                                           or rec.get("job") == job):
+                out.append(rec)
+    return out
+
+
+def assert_no_silent_loss(cluster):
+    """The §10 audit: the journal's displaced ledger is drained and the
+    live/binding views are internally consistent."""
+    state = cluster.store.load()
+    assert state.unaccounted() == [], \
+        f"jobs neither re-bound nor refused: {state.unaccounted()}"
+    cluster.assert_migration_free()
+    return state
+
+
+# ---------------------------------------------------------------------------
+# slice exception → health verdict → fail-over (in-process)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n_devices", [2, 4])
+def test_slice_exception_failover_rebinds_to_survivor(tmp_path, n_devices):
+    """An injected slice exception trips the device's error threshold;
+    the health monitor declares the device failed and the fail-over
+    epoch re-binds the victim to a survivor with fresh WCRT evidence.
+    A witness job on another device must never notice."""
+    cl = make_cluster(tmp_path, n_devices,
+                      health=HealthConfig(stall_timeout_s=60.0,
+                                          fail_timeout_s=60.0,
+                                          error_threshold=1,
+                                          poll_interval_s=0.02))
+    client = connect(cl)
+    try:
+        witness_dev = n_devices - 1
+        wd = client.submit(prof("witness", 20, device=witness_dev),
+                           workload_spec=SPIN, n_iterations=1, start=True)
+        assert wd.accepted
+        cl.executors[0].fault_injector = FaultInjector(
+            [FaultSpec(kind="raise", device=0, slice_idx=2)])
+        vd = client.submit(prof("victim", 10, device=0),
+                           workload_spec=SPIN, n_iterations=1, start=True)
+        assert vd.accepted and vd["device"] == 0
+
+        wait_for(lambda: cl.failed_devices == [0], 30,
+                 "device 0 declared failed")
+        assert cl.epoch == 1
+        assert cl.device_health(0).state == FAILED
+        assert [e["kind"] for e in cl.executors[0].fault_injector.log] \
+            == ["raise"]
+
+        job = wait_for(lambda: (lambda j: j if j is not None
+                                and j.device != 0 else None)(
+                                    cl.find_job("victim")),
+                       30, "victim re-bound to a survivor")
+        wait_for(lambda: job.state == "done", 60, "re-bound victim done")
+        assert job.error is None and job.stats.completions == 1
+
+        state = assert_no_silent_loss(cl)
+        assert state.epoch == 1 and state.failed_devices == {0}
+        rec = state.jobs["victim"]
+        assert rec.device == job.device != 0
+        # MORT <= WCRT: the witness against its original evidence, the
+        # re-bound victim against the new epoch's fresh evidence
+        witness = cl.find_job("witness")
+        wait_for(lambda: witness.state == "done", 60, "witness done")
+        assert witness.stats.mort * 1e3 <= wd.wcrt["witness"] + 1e-6
+        assert job.stats.mort * 1e3 \
+            <= rec.decision["wcrt"]["victim"] + 1e-6
+    finally:
+        client.close()
+        cl.shutdown()
+        cl.store.close()
+
+
+# ---------------------------------------------------------------------------
+# device hang → stall → suspect → failed ladder (in-process)
+# ---------------------------------------------------------------------------
+
+def test_device_hang_escalates_stall_suspect_failed(tmp_path):
+    """A hung slice (injected sleep inside the device lock) never
+    raises, so only the slice-level heartbeat can see it: the monitor
+    must walk the full healthy→suspect→failed ladder and fail the
+    device over while the kernel is still stuck."""
+    cl = make_cluster(tmp_path, 2,
+                      health=HealthConfig(stall_timeout_s=0.15,
+                                          fail_timeout_s=0.2,
+                                          error_threshold=100,
+                                          poll_interval_s=0.03))
+    client = connect(cl)
+    try:
+        cl.executors[0].fault_injector = FaultInjector(
+            [FaultSpec(kind="hang", device=0, slice_idx=1, hang_s=2.0)])
+        dec = client.submit(prof("victim", 10, device=0),
+                            workload_spec=SPIN, n_iterations=1,
+                            start=True)
+        assert dec.accepted
+        wait_for(lambda: cl.failed_devices == [0], 30,
+                 "hung device declared failed")
+        h = cl.device_health(0)
+        hops = [(frm, to) for _, frm, to, _ in h.transitions]
+        assert ("healthy", SUSPECT) in hops and (SUSPECT, FAILED) in hops
+        assert "stalled" in h.reason
+
+        job = wait_for(lambda: (lambda j: j if j is not None
+                                and j.device == 1 else None)(
+                                    cl.find_job("victim")),
+                       30, "victim re-bound to device 1")
+        wait_for(lambda: job.state == "done", 60, "re-bound victim done")
+        state = assert_no_silent_loss(cl)
+        assert state.jobs["victim"].device == 1
+        assert job.stats.mort * 1e3 \
+            <= state.jobs["victim"].decision["wcrt"]["victim"] + 1e-6
+    finally:
+        client.close()
+        cl.shutdown()
+        cl.store.close()
+
+
+# ---------------------------------------------------------------------------
+# single device: fail-over has no survivors — explicit refusal, no loss
+# ---------------------------------------------------------------------------
+
+def test_single_device_failover_refuses_on_the_record(tmp_path):
+    cl = make_cluster(tmp_path, 1)
+    client = connect(cl)
+    try:
+        dec = client.submit(
+            prof("solo", 10, device=0), n_iterations=1, start=True,
+            workload_spec={"name": "demo.spin",
+                           "kwargs": {"slices": 60, "slice_ms": 25.0}})
+        assert dec.accepted
+        job = cl.find_job("solo")
+        out = cl.fail_device(0, reason="pulled for test")
+        assert out["epoch"] == 1
+        assert out["rebound"] == [] and out["refused"] == ["solo"]
+        # the victim's thread ends orderly with the platform's verdict
+        wait_for(lambda: job.state == "done", 30, "victim orderly stop")
+        assert isinstance(job.error, FaultContained)
+        state = assert_no_silent_loss(cl)
+        assert "solo" not in state.jobs
+        assert any(r["profile"]["name"] == "solo"
+                   for r in state.refusals)
+        # and a fresh submission is refused explicitly, not rta-rejected
+        d2 = client.submit(prof("late", 10, device=0),
+                           workload_spec=SPIN, n_iterations=1)
+        assert not d2.accepted and "no live device" in (d2.error or "")
+        # idempotent: failing a failed device is a no-op
+        again = cl.fail_device(0)
+        assert again.get("already_failed") and cl.epoch == 1
+    finally:
+        client.close()
+        cl.shutdown()
+        cl.store.close()
+
+
+# ---------------------------------------------------------------------------
+# overload burst → degradation ladder → hysteretic resume (in-process)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n_devices", [1, 2])
+def test_overload_burst_sheds_best_effort_then_resumes(tmp_path,
+                                                       n_devices):
+    """An RT arrival that pushes total device utilization past
+    ``shed_at`` evicts the best-effort job (journaled ``shed`` record,
+    orderly ``JobEvicted`` stop); releasing the RT job frees capacity
+    below ``resume_at`` and the victim climbs back up the ladder."""
+    cl = make_cluster(tmp_path, n_devices,
+                      shed_policy=ShedPolicy(shed_at=0.5, resume_at=0.45))
+    client = connect(cl)
+    try:
+        # BE utilization 1500/5000 = 0.3 — fits alone
+        bd = client.submit(
+            prof("bg", 0, device=0, exec_ms=1500.0, best_effort=True),
+            workload_spec={"name": "demo.spin",
+                           "kwargs": {"slices": 40, "slice_ms": 20.0}},
+            n_iterations=1, start=True)
+        assert bd.accepted
+        bg = cl.find_job("bg")
+        # RT burst: +0.3 utilization → 0.6 > shed_at → bg is the rung
+        rd = client.submit(prof("burst", 10, device=0, exec_ms=1500.0),
+                           workload_spec=SPIN, n_iterations=1,
+                           start=True)
+        assert rd.accepted
+        assert cl.shed_jobs == ["bg"]
+        sheds = journal_records(tmp_path / "store", "shed", "bg")
+        assert len(sheds) == 1 and "overload" in sheds[0]["reason"]
+        state = cl.store.load()
+        assert "bg" in state.shed and "bg" not in state.jobs
+        wait_for(lambda: bg.error is not None, 30, "bg evicted")
+        assert isinstance(bg.error, JobEvicted)
+
+        # the RT job runs clean to completion inside its evidence
+        burst = cl.find_job("burst")
+        wait_for(lambda: burst.state == "done", 60, "burst done")
+        assert burst.stats.deadline_misses == 0
+        assert burst.stats.mort * 1e3 <= rd.wcrt["burst"] + 1e-6
+
+        # hysteretic resume: only after the release frees capacity
+        assert client.release("burst")
+        assert cl.shed_jobs == []
+        resumed = wait_for(lambda: cl.find_job("bg"), 30, "bg resumed")
+        wait_for(lambda: resumed.state == "done", 60, "resumed bg done")
+        assert resumed.error is None
+        end = cl.store.load()
+        assert "bg" in end.jobs and not end.shed
+        assert end.unaccounted() == []
+    finally:
+        client.close()
+        cl.shutdown()
+        cl.store.close()
+
+
+# ---------------------------------------------------------------------------
+# daemon SIGKILL mid-slice via $REPRO_FAULT_PLAN (subprocess)
+# ---------------------------------------------------------------------------
+
+def start_daemon(store, sock, n_devices=1, env=None, extra=()):
+    proc = subprocess.Popen(
+        [sys.executable, "-m", "repro.sched.daemon",
+         "--store", store, "--socket", sock,
+         "--n-devices", str(n_devices), *extra],
+        env=env or ENV, stdout=subprocess.PIPE,
+        stderr=subprocess.STDOUT, text=True)
+    deadline = time.monotonic() + 120
+    client = connect(sock)
+    while time.monotonic() < deadline:
+        if proc.poll() is not None:
+            raise AssertionError(
+                f"daemon died during startup (rc={proc.returncode}):\n"
+                f"{proc.stdout.read()}")
+        try:
+            client.ping()
+            return proc, client
+        except (OSError, RuntimeError):
+            time.sleep(0.2)
+    proc.kill()
+    raise AssertionError("daemon never became ready")
+
+
+@pytest.mark.parametrize("n_devices", [1, 2])
+def test_daemon_self_sigkill_via_fault_plan_recovers(tmp_path, n_devices):
+    """The ``kill`` fault kind SIGKILLs the daemon from *inside* a slice
+    dispatch (no test-side kill, no cleanup — a machine check).  The
+    restarted daemon must resume the job from its checkpointed carry
+    and finish inside the admitted WCRT, with the audit ledger clean."""
+    store = str(tmp_path / "store")
+    sock = str(tmp_path / "sock")
+    plan = json.dumps([{"kind": "kill", "job": "spin", "slice_idx": 5}])
+    env = dict(ENV, REPRO_FAULT_PLAN=plan)
+    proc, client = start_daemon(store, sock, n_devices, env=env)
+    try:
+        dec = client.submit(
+            prof("spin", 10, device=0, exec_ms=3000.0, period_ms=6000.0),
+            workload_spec={"name": "demo.spin",
+                           "kwargs": {"slices": 25, "slice_ms": 80.0}},
+            n_iterations=1, start=True)
+        assert dec.accepted
+        wcrt_ms = dec.wcrt["spin"]
+        proc.wait(90)       # the plan kills the daemon at slice 5
+        assert proc.returncode == -signal.SIGKILL
+    finally:
+        if proc.poll() is None:
+            proc.kill()
+    carries = journal_records(store, "carry", "spin")
+    assert carries and max(r["slice"] for r in carries) == 5
+
+    # restart WITHOUT the fault plan: recovery must resume slice 5
+    proc, client = start_daemon(store, sock, n_devices, env=ENV)
+    try:
+        st = client.status()
+        assert st["recovery"]["conformance"] == "checked"
+        assert st["recovery"]["resumed"]["spin"]["slice"] == 5
+        jobs = wait_for(
+            lambda: (lambda j: j if j["spin"]["done_iterations"] == 1
+                     and j["spin"]["mort_s"] is not None else None)(
+                         client.jobs()),
+            120, "resumed job to finish")
+        assert jobs["spin"]["mort_s"] * 1e3 <= wcrt_ms + 1e-6
+        audit = client._backend.request("audit")
+        assert audit["unaccounted"] == [] and audit["live"] == ["spin"]
+        assert audit["epoch"] == 0 and audit["failed_devices"] == []
+        client.close(shutdown=True)
+        proc.wait(30)
+    finally:
+        if proc.poll() is None:
+            proc.kill()
+
+
+# ---------------------------------------------------------------------------
+# supervisor: kill → auto-restart → recovery round trip (subprocess)
+# ---------------------------------------------------------------------------
+
+def test_supervisor_kill_autorestart_recovery_roundtrip(tmp_path,
+                                                        monkeypatch):
+    monkeypatch.setenv("PYTHONPATH", ENV["PYTHONPATH"])
+    monkeypatch.setenv("REPRO_PALLAS", "interpret")
+    monkeypatch.delenv("REPRO_FAULT_PLAN", raising=False)
+    store = str(tmp_path / "store")
+    sock = str(tmp_path / "sock")
+    hb = str(tmp_path / "hb.json")
+    os.makedirs(store, exist_ok=True)
+    cmd = [sys.executable, "-m", "repro.sched.daemon",
+           "--store", store, "--socket", sock, "--n-devices", "1",
+           "--heartbeat-file", hb]
+    sup = Supervisor(cmd, heartbeat_file=hb, heartbeat_timeout_s=60.0,
+                     min_uptime_s=0.5, max_restarts=3,
+                     restart_backoff_s=0.1, poll_s=0.05,
+                     log_path=str(tmp_path / "daemon.log"))
+    sup.start()
+    client = connect(sock)
+    client._backend.retries = 8
+    try:
+        wait_for(lambda: _ping_ok(client), 120, "daemon under supervisor")
+        dec = client.submit(
+            prof("spin", 10, device=0, exec_ms=3000.0, period_ms=6000.0),
+            workload_spec={"name": "demo.spin",
+                           "kwargs": {"slices": 25, "slice_ms": 80.0}},
+            n_iterations=1, start=True)
+        assert dec.accepted
+        wait_for(lambda: journal_records(store, "carry", "spin"), 90,
+                 "first checkpointed carry")
+        pid1 = sup.pid()
+        os.kill(pid1, signal.SIGKILL)
+        wait_for(lambda: sup.pid() not in (None, pid1), 60,
+                 "supervisor to respawn the daemon")
+        wait_for(lambda: _ping_ok(client), 120, "respawned daemon ready")
+        assert sup.restarts >= 1 and not sup.gave_up
+        st = client.status()
+        assert st["recovery"]["conformance"] == "checked"
+        assert st["recovery"]["recovered"] == ["spin"]
+        jobs = wait_for(
+            lambda: (lambda j: j if j["spin"]["done_iterations"] == 1
+                     and j["spin"]["mort_s"] is not None else None)(
+                         client.jobs()),
+            120, "recovered job to finish")
+        assert jobs["spin"]["mort_s"] * 1e3 <= dec.wcrt["spin"] + 1e-6
+    finally:
+        sup.stop()
+    events = [e for _, e, _ in sup.events]
+    assert "spawn" in events and "restart" in events
+
+
+def _ping_ok(client):
+    try:
+        return bool(client.ping().get("ok"))
+    except (OSError, RuntimeError):
+        return False
+
+
+def test_supervisor_gives_up_on_unrecoverable_store(tmp_path):
+    """A daemon that cannot come up (tampered journal →
+    RecoveryConformanceError) must NOT be restarted forever: the
+    supervisor gives up after ``max_restarts`` fast failures and
+    surfaces the conformance traceback in its give-up reason."""
+    store = str(tmp_path / "store")
+    d = SchedDaemon(store, socket_path=str(tmp_path / "s1"), n_devices=1)
+    out = d.handle({"op": "submit", "profile": prof("spin").to_dict(),
+                    "workload": {"name": "demo.spin",
+                                 "kwargs": {"slices": 2,
+                                            "slice_ms": 5.0}},
+                    "n_iterations": 1})
+    assert out["admitted"]
+    d.stop()
+    path = os.path.join(store, "journal.jsonl")
+    with open(path) as f:
+        lines = f.readlines()
+    for i, line in enumerate(lines):
+        rec = json.loads(line)
+        if rec.get("rec") == "decision":
+            rec["decision"]["wcrt"]["spin"] = 1.0    # forged evidence
+            lines[i] = json.dumps(rec, sort_keys=True) + "\n"
+    with open(path, "w") as f:
+        f.writelines(lines)
+
+    cmd = [sys.executable, "-m", "repro.sched.daemon",
+           "--store", store, "--socket", str(tmp_path / "s2")]
+    sup = Supervisor(cmd, min_uptime_s=30.0, max_restarts=1,
+                     restart_backoff_s=0.05, poll_s=0.05,
+                     log_path=str(tmp_path / "daemon.log"))
+    env = dict(os.environ)
+    os.environ.update(PYTHONPATH=ENV["PYTHONPATH"],
+                      REPRO_PALLAS="interpret")
+    try:
+        sup.run()       # blocks until give-up
+    finally:
+        os.environ.clear()
+        os.environ.update(env)
+    assert sup.gave_up
+    assert "RecoveryConformanceError" in sup.give_up_reason
+    assert [e for _, e, _ in sup.events].count("spawn") == 2
+
+
+def test_supervisor_sigkills_hung_child(tmp_path):
+    """A live pid with a stale heartbeat is a *hung* daemon: the
+    supervisor must SIGKILL it (SIGTERM would be absorbed) and restart
+    through the exit path."""
+    hb = str(tmp_path / "hb.json")
+    script = ("import json,sys,time\n"
+              "open(sys.argv[1],'w').write(json.dumps({'t': time.time()}"
+              "))\n"
+              "time.sleep(600)\n")
+    sup = Supervisor([sys.executable, "-c", script, hb],
+                     heartbeat_file=hb, heartbeat_timeout_s=0.5,
+                     poll_s=0.05, min_uptime_s=0.1, max_restarts=100,
+                     restart_backoff_s=0.05)
+    sup.start()
+    try:
+        wait_for(lambda: any(e == "hang_kill"
+                             for _, e, _ in sup.events), 30,
+                 "stale heartbeat detected")
+        wait_for(lambda: sup.restarts >= 1, 30, "restart after kill")
+        assert not sup.gave_up
+    finally:
+        sup.stop()
+
+
+# ---------------------------------------------------------------------------
+# idempotent submissions + transport retry (satellites)
+# ---------------------------------------------------------------------------
+
+def test_request_id_dedup_never_double_admits(tmp_path):
+    """One logical submission = one admission, no matter how many times
+    the request lands — including across a daemon restart, where the
+    dedup table is rebuilt from the journal."""
+    store = str(tmp_path / "store")
+    req = {"op": "submit", "profile": prof("spin").to_dict(),
+           "workload": {"name": "demo.spin",
+                        "kwargs": {"slices": 2, "slice_ms": 5.0}},
+           "n_iterations": 1, "request_id": "rid-0001"}
+    d = SchedDaemon(store, socket_path=str(tmp_path / "s1"), n_devices=1)
+    try:
+        first = d.handle(dict(req))
+        assert first["admitted"] and "deduped" not in first
+        second = d.handle(dict(req))
+        assert second["admitted"] and second["deduped"]
+        assert [p.name for p in d.cluster.admission.admitted] == ["spin"]
+    finally:
+        d.stop()
+    d2 = SchedDaemon(store, socket_path=str(tmp_path / "s2"),
+                     n_devices=1, resume_jobs=False)
+    try:
+        third = d2.handle(dict(req))
+        assert third["admitted"] and third["deduped"]
+        assert third["wcrt"] == first["wcrt"]
+        assert [p.name for p in d2.cluster.admission.admitted] \
+            == ["spin"]
+    finally:
+        d2.stop()
+
+
+def test_client_retries_through_daemon_outage(tmp_path):
+    """Transport failures (daemon restarting under its supervisor) are
+    retried with backoff; an application-level refusal from a live
+    daemon is NOT (it would just refuse again)."""
+    store = str(tmp_path / "store")
+    sock = str(tmp_path / "sock")
+    d = SchedDaemon(store, socket_path=sock, n_devices=1)
+    t = threading.Timer(0.5, d.start)
+    t.start()
+    client = connect(sock)
+    client._backend.retries = 8
+    try:
+        assert client.ping()["ok"]     # socket appears mid-retry-loop
+        with pytest.raises(RuntimeError, match="daemon refused"):
+            client._backend.request("no-such-op")
+    finally:
+        t.cancel()
+        client.close()
+        d.stop()
+
+
+def test_client_reports_unreachable_after_retries(tmp_path):
+    client = connect(str(tmp_path / "never-bound.sock"))
+    client._backend.retries = 1
+    client._backend.backoff_s = 0.01
+    with pytest.raises(RuntimeError, match="unreachable .* 2 attempts"):
+        client.ping()
+
+
+# ---------------------------------------------------------------------------
+# fault primitives (units for the satellite fixes)
+# ---------------------------------------------------------------------------
+
+def test_with_retry_enforces_per_attempt_timeout():
+    from repro.sched import StallError, with_retry
+    calls = []
+
+    def slow():
+        calls.append(1)
+        time.sleep(5.0)
+
+    wrapped = with_retry(slow, n_retries=1, timeout_s=0.1,
+                         backoff_s=0.01)
+    t0 = time.monotonic()
+    with pytest.raises(StallError, match="timeout_s"):
+        wrapped()
+    # both attempts were cut off at the deadline, not run to completion
+    assert len(calls) == 2
+    assert time.monotonic() - t0 < 2.0
+
+
+def test_with_retry_does_not_retry_orderly_stops():
+    from repro.sched import with_retry
+    calls = []
+
+    def evicted():
+        calls.append(1)
+        raise JobEvicted("shed")
+
+    with pytest.raises(JobEvicted):
+        with_retry(evicted, n_retries=3, backoff_s=0.01)()
+    assert len(calls) == 1      # a platform verdict is not a straggler
+
+
+def test_heartbeat_beat_clears_stale_flag():
+    from repro.sched import Heartbeat, StallError
+    hb = Heartbeat(timeout_s=0.1)
+    try:
+        wait_for(lambda: hb._stalled, 10, "watchdog to flag the stall")
+        with pytest.raises(StallError):
+            hb.check()
+        hb.beat()               # a recovered worker is not poisoned
+        hb.check()
+    finally:
+        hb.stop()
+
+
+def test_fault_spec_filters_after_matches_and_once():
+    inj = FaultInjector([FaultSpec(kind="raise", job="a",
+                                   after_matches=2)])
+    for _ in range(2):          # first two matching dispatches skipped
+        inj.fire(device=0, job="a", slice_idx=0)
+    inj.fire(device=0, job="b", slice_idx=0)     # filtered out entirely
+    with pytest.raises(Exception, match="injected slice exception"):
+        inj.fire(device=0, job="a", slice_idx=0)
+    inj.fire(device=0, job="a", slice_idx=0)     # once=True: spent
+    assert len(inj.fired("raise")) == 1
+
+
+def test_fault_plan_from_env_inline_and_file(tmp_path):
+    from repro.sched import faultinject
+    inline = faultinject.from_env(
+        {"REPRO_FAULT_PLAN": '[{"kind": "hang", "hang_s": 0.5}]'})
+    assert inline.specs[0].kind == "hang"
+    path = tmp_path / "plan.json"
+    path.write_text('{"kind": "kill", "job": "spin"}')
+    from_file = faultinject.from_env({"REPRO_FAULT_PLAN": str(path)})
+    assert [s.kind for s in from_file.specs] == ["kill"]
+    assert faultinject.from_env({}) is None      # production fast path

@@ -14,8 +14,8 @@ import threading
 import pytest
 
 from repro.sched import (AdmissionController, AdmissionDecision,
-                         JobProfile, JobStore, RecoveryConformanceError,
-                         decisions_match)
+                         CompactionPolicy, JobProfile, JobStore,
+                         RecoveryConformanceError, decisions_match)
 
 
 def prof(name, prio, device=0, exec_ms=4.0, period_ms=50.0, cpu=0,
@@ -180,6 +180,123 @@ def test_compaction_crash_window_double_apply_is_idempotent(tmp_path):
         json.dump(snap, f)
     after = JobStore(str(tmp_path)).load()
     assert after.jobs["a"].to_json() == before.jobs["a"].to_json()
+    st.close()
+
+
+def test_compact_concurrent_appends_lose_nothing(tmp_path):
+    """Compaction racing a writer must not drop records: an earlier
+    ``compact()`` folded the journal *outside* the store lock, so a
+    decision appended between the fold and the journal truncation
+    silently vanished.  Hammer that window: a thread appends admitted
+    decisions while the main thread compacts in a tight loop — every
+    appended job must survive into the folded state."""
+    st = JobStore(str(tmp_path), sync=False)
+    n = 300
+    dec = {"admitted": True, "reason": "accepted", "via": "default",
+           "wcrt": {}}
+
+    def spam():
+        for i in range(n):
+            st.record_decision(prof(f"j{i}", 1), dec, device=0)
+
+    t = threading.Thread(target=spam)
+    t.start()
+    while t.is_alive():
+        st.compact()
+    t.join()
+    st.compact()
+    state = st.load()
+    assert sorted(state.jobs) == sorted(f"j{i}" for i in range(n)), \
+        f"lost {n - len(state.jobs)} records to the compaction race"
+    st.close()
+
+
+def test_auto_compaction_policy_triggers(tmp_path):
+    pol = CompactionPolicy(max_bytes=None, max_records=10)
+    assert pol.due(0, 10, 0.0) and not pol.due(10**9, 9, 10**9)
+    st = JobStore(str(tmp_path), sync=False, auto_compact=pol)
+    dec = {"admitted": True, "reason": "accepted", "via": "default",
+           "wcrt": {}}
+    for i in range(25):
+        st.record_decision(prof(f"j{i}", 1), dec, device=0)
+    assert st.compactions >= 2
+    with open(os.path.join(str(tmp_path), "journal.jsonl")) as f:
+        assert sum(1 for ln in f if ln.strip()) < 10
+    assert sorted(st.load().jobs) == sorted(f"j{i}" for i in range(25))
+    st.close()
+
+
+def test_failover_fold_displaced_until_settled(tmp_path):
+    """A ``failover`` record moves the failed device's jobs onto the
+    displaced ledger; they stay *unaccounted* until a follow-up
+    decision (re-admission or refusal) settles them — the no-silent-
+    job-loss audit the chaos suite replays."""
+    st = JobStore(str(tmp_path), sync=False)
+    ctl = AdmissionController(mode="ioctl", n_devices=2)
+    for p in (prof("a", 1, device=0), prof("b", 2, device=1)):
+        st.record_decision(p, ctl.try_admit(p), device=p.device)
+    st.record_failover(0, epoch=1, reason="hw")
+    mid = st.load()
+    assert mid.epoch == 1 and mid.failed_devices == {0}
+    assert mid.unaccounted() == ["a"] and sorted(mid.jobs) == ["b"]
+    # settle "a": re-admitted on device 1 in the new epoch (the live
+    # fail-over path re-derives the whole admission state, so the
+    # displaced profile no longer charges the controller)
+    ctl.release("a")
+    a1 = prof("a", 1, device=1)
+    st.record_decision(a1, ctl.try_admit(a1), device=1, epoch=1)
+    state = st.load()
+    assert state.unaccounted() == []
+    assert list(state.jobs) == ["b", "a"]    # decision order preserved
+    assert state.jobs["a"].device == 1
+    # an explicit refusal also settles (accounted, not silently lost)
+    st.record_failover(1, epoch=2, reason="hw")
+    st.record_decision(prof("b", 2, device=1),
+                       AdmissionDecision.refuse(
+                           "validation-refused",
+                           error="no surviving device"), epoch=2)
+    end = st.load()
+    # "a" lived on device 1 too — it stays *unaccounted* until settled,
+    # which is exactly what the audit must flag
+    assert end.unaccounted() == ["a"] and "b" not in end.jobs
+    st.record_decision(prof("a", 1, device=0),
+                       AdmissionDecision.refuse(
+                           "validation-refused",
+                           error="no surviving device"), epoch=2)
+    assert st.load().unaccounted() == []
+    # compaction round-trips the fault-containment state
+    st.compact()
+    snap = st.load()
+    assert snap.epoch == 2 and snap.failed_devices == {0, 1}
+    st.close()
+
+
+def test_shed_fold_and_resume_decision(tmp_path):
+    st = JobStore(str(tmp_path), sync=False)
+    ctl = AdmissionController(mode="ioctl", n_devices=1)
+    be = prof("be", 0, best_effort=True)
+    st.record_decision(be, ctl.try_admit(be), device=0)
+    st.record_carry("be", 0, 4)
+    st.record_shed("be", "overload")
+    mid = st.load()
+    assert "be" not in mid.jobs and "be" in mid.shed
+    assert mid.shed["be"].carry == {"iteration": 0, "slice": 4}
+    ctl.release("be")
+    st.record_decision(be, ctl.try_admit(be), device=0)   # resume
+    state = st.load()
+    assert "be" in state.jobs and state.shed == {}
+    st.close()
+
+
+def test_request_id_dedup_table_folds(tmp_path):
+    st = JobStore(str(tmp_path), sync=False)
+    ctl = AdmissionController(mode="ioctl", n_devices=1)
+    p = prof("a", 1)
+    st.record_decision(p, ctl.try_admit(p), device=0, request_id="r-1")
+    st.compact()                     # the table survives compaction
+    state = st.load()
+    assert state.requests["r-1"]["job"] == "a"
+    assert state.requests["r-1"]["admitted"] is True
     st.close()
 
 
