@@ -1,7 +1,8 @@
-"""CI gate: compare schedulability-sweep result JSONs against the
-committed baseline (benchmarks/results/ci_baseline.json).
+"""CI gate: compare schedulability-sweep and admission-throughput
+result JSONs against the committed baseline
+(benchmarks/results/ci_baseline.json).
 
-Two gates (exit 1 on either), applied per result file:
+Three gates (exit 1 on any), applied per result file:
 
   * **wall-clock** — fails when a sweep regresses more than
     --max-regression (default 25%) over the baseline entry *of the same
@@ -14,9 +15,18 @@ Two gates (exit 1 on either), applied per result file:
     the analysis itself changes — a silent result change from a backend
     or analysis edit must show up as a named CI failure, not as a perf
     footnote.  Intentional analysis changes regenerate the baseline
-    (and justify it in the PR).
+    (and justify it in the PR);
+  * **admission throughput** — a BENCH_admission.json result (marker
+    ``admission-bench-v1`` from ``admission_bench.py --quick --json``)
+    is gated per backend against ``baseline["admission"]``: sustained
+    growth-phase admissions/sec must not drop more than
+    --max-regression below baseline, and warm p50/p99 decision latency
+    must not rise more than --max-regression above it.  The warm/cold
+    speedup ratio is reported (and carried in the trajectory artifact)
+    but not gated on its own — it divides two wall-clocks, so host
+    noise moves it twice.
 
-The baseline is keyed per backend: ``{"backends": {tag: result}}``,
+The sweep baseline is keyed per backend: ``{"backends": {tag: result}}``,
 where each entry records its own sweep configuration (n, workers) so
 the CI job can pin the matching flags.  The legacy flat single-result
 format still loads (its ``backend`` field names its only entry).
@@ -35,8 +45,9 @@ Usage:
     python benchmarks/schedulability.py --quick --json numpy.json
     python benchmarks/schedulability.py --quick --backend jax --json jax.json
     python benchmarks/schedulability.py --scale-demo --json demo.json
+    python benchmarks/admission_bench.py --quick --json admission.json
     python benchmarks/check_regression.py numpy.json jax.json demo.json \
-        --emit-trajectory BENCH_sweep.json
+        admission.json --emit-trajectory BENCH_sweep.json
 """
 
 from __future__ import annotations
@@ -155,6 +166,74 @@ def check_one(current: dict, bases: dict, max_regression: float) -> bool:
     return failed
 
 
+def admission_trajectory(current: dict) -> dict:
+    """Per-backend admission-throughput trajectory datapoint."""
+    out = {}
+    for tag, row in current.get("backends", {}).items():
+        crit = row.get("criterion", {})
+        lat = row.get("warm", {}).get("latency_ms", {})
+        out[tag] = {
+            "warm_admissions_per_s": crit.get("warm_admissions_per_s"),
+            "cold_admissions_per_s": crit.get("cold_admissions_per_s"),
+            "ratio": crit.get("ratio"),
+            "warm_p50_ms": lat.get("p50_ms"),
+            "warm_p99_ms": lat.get("p99_ms"),
+        }
+    return out
+
+
+def check_admission(current: dict, base: dict | None,
+                    max_regression: float) -> bool:
+    """Gate an admission-bench result against ``baseline["admission"]``.
+    Returns True on failure."""
+    if base is None:
+        print(
+            "note: no admission baseline section — admission gates "
+            "skipped (commit one to enable them)",
+            file=sys.stderr,
+        )
+        return False
+    failed = False
+    base_backends = base.get("backends", {})
+    for tag, row in current.get("backends", {}).items():
+        b = base_backends.get(tag)
+        cur = admission_trajectory({"backends": {tag: row}})[tag]
+        ratio = cur["ratio"]
+        print(
+            f"admission [{tag}]: warm {cur['warm_admissions_per_s']}/s "
+            f"(warm/cold {ratio}x), p50 {cur['warm_p50_ms']}ms "
+            f"p99 {cur['warm_p99_ms']}ms"
+        )
+        if b is None:
+            print(
+                f"note: no {tag!r} admission baseline entry — gates "
+                "skipped for this backend",
+                file=sys.stderr,
+            )
+            continue
+        floor = b["warm_admissions_per_s"] * (1.0 - max_regression)
+        if cur["warm_admissions_per_s"] < floor:
+            print(
+                f"FAIL [{tag}]: warm admissions/sec "
+                f"{cur['warm_admissions_per_s']:.1f} below "
+                f"{floor:.1f} (baseline {b['warm_admissions_per_s']:.1f} "
+                f"- {max_regression:.0%})",
+                file=sys.stderr,
+            )
+            failed = True
+        for key in ("warm_p50_ms", "warm_p99_ms"):
+            limit = b[key] * (1.0 + max_regression)
+            if cur[key] > limit:
+                print(
+                    f"FAIL [{tag}]: {key} {cur[key]:.3f}ms above "
+                    f"{limit:.3f}ms (baseline {b[key]:.3f}ms "
+                    f"+ {max_regression:.0%})",
+                    file=sys.stderr,
+                )
+                failed = True
+    return failed
+
+
 def main() -> int:
     ap = argparse.ArgumentParser(description=__doc__.split("\n")[0])
     ap.add_argument(
@@ -181,11 +260,17 @@ def main() -> int:
     )
     args = ap.parse_args()
 
-    bases = baseline_entries(load(args.baseline))
+    baseline = load(args.baseline)
+    bases = baseline_entries(baseline)
     results = [load(p) for p in args.current]
     traj: dict = {"backends": {}}
     failed = False
     for current in results:
+        if current.get("marker") == "admission-bench-v1":
+            traj["admission"] = admission_trajectory(current)
+            failed |= check_admission(
+                current, baseline.get("admission"), args.max_regression)
+            continue
         if "scale_demo" in current:
             traj["scale_demo"] = current["scale_demo"]
         if "rows" not in current:

@@ -244,6 +244,15 @@ def per_device(rta: Callable) -> Callable:
     def wrapper(ts: Taskset, *args, **kw):
         if ts.n_devices <= 1:
             return rta(ts, *args, **kw)
+        # Warm-start seeds are defined against one recurrence; the
+        # *merged* multi-device bound (max over projections for a
+        # device-agnostic task) is not a lower bound of every single
+        # projection's fixed point, so a seed proved on the merged
+        # result could start a projection's ascent above its least
+        # fixed point.  Drop seeds on the multi-device path (they only
+        # accelerate — correctness is unaffected), mirroring
+        # ``cross_device`` below.
+        kw.pop("seeds", None)
         own_device = {t.name: t.device for t in ts.tasks if t.uses_gpu}
         out: Dict[str, Optional[float]] = {}
         for d in range(ts.n_devices):

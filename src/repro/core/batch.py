@@ -610,11 +610,28 @@ def get_solver(backend: str = "numpy"):
 
 def _solve_problems(problems: Sequence[Taskset], kind: str,
                     use_gpu_prio: bool, corrected: bool,
-                    solver=_NUMPY_SOLVER
-                    ) -> List[Dict[str, Optional[float]]]:
-    """Batched full-vector solve of single-device problems."""
+                    solver=_NUMPY_SOLVER,
+                    seed_dicts: Optional[Sequence[Optional[Dict[str, float]]]]
+                    = None) -> List[Dict[str, Optional[float]]]:
+    """Batched full-vector solve of single-device problems.
+
+    ``seed_dicts`` (one optional name → value map per problem) warm-start
+    the lockstep ascent.  Every value must be a lower bound of that
+    task's fixed point in *its* problem (see `analysis._iterate` for the
+    soundness argument); absent tasks seed from zero."""
     p = _pack(problems)
-    R = solver.solve2d(p, kind, use_gpu_prio, corrected, analyzed=p.valid)
+    seeds = None
+    if seed_dicts is not None and any(seed_dicts):
+        seeds = np.zeros((p.S, p.N))
+        for s, d in enumerate(seed_dicts):
+            if not d:
+                continue
+            for j, name in enumerate(p.names[s]):
+                v = d.get(name)
+                if v is not None:
+                    seeds[s, j] = v
+    R = solver.solve2d(p, kind, use_gpu_prio, corrected, analyzed=p.valid,
+                       seeds=seeds)
     return _unpack_dicts(p, R)
 
 
@@ -624,11 +641,23 @@ def _solve_problems(problems: Sequence[Taskset], kind: str,
 
 def batch_rta(kind: str, tasksets: Sequence[Taskset],
               use_gpu_prio: bool = False, corrected: bool = True,
-              method: str = "fixed_point", backend: str = "numpy"
+              method: str = "fixed_point", backend: str = "numpy",
+              seeds: Optional[Sequence[Optional[Dict[str, float]]]] = None
               ) -> List[Dict[str, Optional[float]]]:
     """Vectorized WCRT vectors for a batch of tasksets (any device
     counts), value-equivalent to the scalar RTA of the same kind with
-    ``early_exit=False``."""
+    ``early_exit=False``.
+
+    ``seeds`` warm-starts the ascent: one optional name → lower-bound
+    map per taskset (the streaming-admission controller passes the
+    previously admitted set's converged bounds — sound because its
+    prefix tasksets only *add* interference).  Seeds apply to
+    single-device tasksets only; multi-device entries solve cold — a
+    bound merged across per-device projections is not a lower bound of
+    each projection's fixed point, and the cross-device occupancy
+    charges shift with the iterate (exactly why `analysis.cross_device`
+    drops scalar seeds too).  Seeding never changes results, only the
+    number of ascent rounds."""
     if kind not in KINDS:
         raise ValueError(f"unknown batch RTA kind {kind!r}")
     if method not in ("fixed_point", "heuristic"):
@@ -637,6 +666,10 @@ def batch_rta(kind: str, tasksets: Sequence[Taskset],
     if method == "heuristic" and kind in SUSPEND_KINDS:
         raise ValueError("method='heuristic' applies to busy-mode kinds")
     tasksets = list(tasksets)
+    if seeds is not None and len(seeds) != len(tasksets):
+        raise ValueError(
+            f"seeds must align 1:1 with tasksets "
+            f"({len(seeds)} != {len(tasksets)})")
     out: List[Optional[Dict[str, Optional[float]]]] = [None] * len(tasksets)
     simple: List[Tuple[int, Taskset]] = []
     folded: List[Tuple[int, int, Taskset]] = []
@@ -658,8 +691,13 @@ def batch_rta(kind: str, tasksets: Sequence[Taskset],
             SoundnessWarning, stacklevel=2)
     probs = [ts for _, ts in simple] + [f for _, _, f in folded]
     if probs:
+        seed_dicts = None
+        if seeds is not None and simple:
+            # folded (multi-device) problems always solve cold
+            seed_dicts = ([seeds[i] for i, _ in simple]
+                          + [None] * len(folded))
         dicts = _solve_problems(probs, kind, use_gpu_prio, corrected,
-                                solver=solver)
+                                solver=solver, seed_dicts=seed_dicts)
         for (i, _), d in zip(simple, dicts[:len(simple)]):
             out[i] = d
         for (i, dev, _), Rd in zip(folded, dicts[len(simple):]):
@@ -674,6 +712,81 @@ def batch_rta(kind: str, tasksets: Sequence[Taskset],
                 corrected, solver=solver)):
             out[i] = d
     return out  # type: ignore[return-value]
+
+
+def batch_rta_prefixes(kind: str, ts: Taskset, n_candidates: int,
+                       backend: str = "numpy", corrected: bool = True,
+                       seeds: Optional[Dict[str, float]] = None
+                       ) -> List[Dict[str, Optional[float]]]:
+    """WCRT dicts for the growing *prefix family* of one single-device
+    taskset: result k analyzes base + candidates[:k+1], where the
+    candidates are ``ts``'s last ``n_candidates`` RT tasks (in task
+    order) and the base is everything before them.
+
+    Value-identical to ``batch_rta(kind, [prefix_0, …])`` — `_pack`
+    lays tasks out in taskset order, so the prefix problems share one
+    column layout and differ only in a triangular ``valid`` mask.
+    Packing therefore touches each task *once* (O(base + burst) Python
+    work) and expands by numpy tiling, instead of re-walking the shared
+    base for every prefix (O(burst × base)).  This is the
+    streaming-admission fast path: `sched/admission.py` batches every
+    arrival burst as a prefix family over its admitted set
+    (DESIGN.md §11).
+
+    ``seeds`` is a single name → lower-bound map applied to every
+    prefix (the admitted set's converged bounds are lower bounds for
+    all of them — each prefix only adds interference on top of the
+    same base)."""
+    if kind not in KINDS:
+        raise ValueError(f"unknown batch RTA kind {kind!r}")
+    rt = ts.rt_tasks
+    S = int(n_candidates)
+    if not 0 < S <= len(rt):
+        raise ValueError(
+            f"n_candidates must be in 1..{len(rt)} (got {n_candidates})")
+    n_base = len(rt) - S
+    p1 = _pack([ts])
+    N = p1.N
+
+    def tile(a: np.ndarray) -> np.ndarray:
+        return np.repeat(a, S, axis=0)
+
+    # triangular mask: row k keeps the base plus candidates[:k+1]; the
+    # masked-out columns are reset to _pack's padding values so the
+    # expanded pack is field-for-field the pack of the prefix tasksets
+    valid = (np.arange(N)[None, :]
+             < (n_base + 1 + np.arange(S))[:, None]) & tile(p1.valid)
+    pads = {"C": 0.0, "G": 0.0, "Gm": 0.0, "Ge": 0.0, "C_best": 0.0,
+            "Ge_best": 0.0, "eta_g": 0.0, "T": 1.0, "D": np.inf,
+            "prio": -np.inf, "gpu_prio": -np.inf}
+    kw = {f: np.where(valid, tile(getattr(p1, f)), pad)
+          for f, pad in pads.items()}
+    m3 = valid[:, :, None]
+    names = p1.names[0]
+    p = _Pack(
+        S=S, N=N, valid=valid,
+        uses_gpu=tile(p1.uses_gpu) & valid,
+        cpu=np.where(valid, tile(p1.cpu), -1),
+        eps=np.repeat(p1.eps, S), kcpu=np.repeat(p1.kcpu, S),
+        cseg=np.where(m3, tile(p1.cseg), 0.0),
+        cseg_m=tile(p1.cseg_m) & m3,
+        gseg=np.where(m3, tile(p1.gseg), 0.0),
+        gseg_m=tile(p1.gseg_m) & m3,
+        names=[names[: n_base + 1 + k] for k in range(S)],
+        be_names=[list(p1.be_names[0]) for _ in range(S)],
+        **kw)
+    seeds_arr = None
+    if seeds:
+        row = np.zeros(N)
+        for j, nm in enumerate(names):
+            v = seeds.get(nm)
+            if v is not None:
+                row[j] = v
+        seeds_arr = np.where(valid, row[None, :], 0.0)
+    solver = get_solver(backend)
+    R = solver.solve2d(p, kind, False, corrected, analyzed=p.valid,
+                       seeds=seeds_arr)
+    return _unpack_dicts(p, R)
 
 
 def _crossfix_lockstep(kind: str, tasksets: List[Taskset],

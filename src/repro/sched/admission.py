@@ -18,11 +18,13 @@ from __future__ import annotations
 
 import dataclasses
 import math
+import time
+from collections import deque
 from dataclasses import dataclass
-from typing import Callable, Iterable, List, Mapping, Optional
+from typing import Callable, Dict, Iterable, List, Mapping, Optional
 
-from ..core import GpuSegment, Task, Taskset, schedulable
-from ..core.analysis import _EPS
+from ..core import GpuSegment, Task, Taskset
+from ..core.analysis import _EPS, supports_kwarg
 from ..core.audsley import assign_gpu_priorities
 from ..core.policy import policy_spec
 from ..core.segments import WorkloadProfile
@@ -59,8 +61,10 @@ class AdmissionDecision(dict):
     (``"default"``/``"audsley"``/``"best_effort"``/None), ``wcrt``
     (task name → WCRT ms; empty when no fixed point ran).  Optional:
     ``error`` (human-readable refusal), ``gpu_priorities`` (Audsley
-    assignment), ``device`` (binding), ``job`` (the live RTJob —
-    stripped before journaling)."""
+    assignment), ``latency_ms`` (decision-processing latency measured
+    by the controller — presentation, never compared by
+    :func:`decisions_match`), ``device`` (binding), ``job`` (the live
+    RTJob — stripped before journaling)."""
 
     def __init__(self, *args, **kw):
         super().__init__(*args, **kw)
@@ -273,10 +277,54 @@ def headroom_violation(ts: Taskset, headroom: float = 1.0
 
 
 class AdmissionController:
+    """RTA gatekeeper with *incremental* decision state (DESIGN.md §11).
+
+    Every decision used to rebuild the full :class:`Taskset` from
+    scratch and run its fixed point cold from zero.  The controller now
+    keeps three kinds of persistent state so a streaming decision costs
+    O(new work):
+
+      * **built tasks** — each admitted profile's :class:`Task` is
+        converted once and reused by every later ``_taskset()`` build;
+      * **running utilization totals** — per-core and per-device RT
+        demand (the exact sums ``headroom_violation`` re-derives) plus
+        per-device profile load, maintained add-on-admit and recounted
+        on release, so the headroom gate and placement load queries
+        stop re-summing the admitted set;
+      * **warm-start seeds** — the admitted set's *converged* WCRT dict
+        under the default (RM-priority) recurrence.  Admitting a task
+        only **adds** interference, so the previous fixed point sits at
+        or below the new one component-wise and is a sound Kleene seed
+        (`analysis._iterate`); the candidate itself seeds from zero.
+        Any **removal** (``release`` of an RT profile, shedding,
+        ``fail_device`` epoch reset via the ``admitted`` setter) shrinks
+        interference, leaving cached bounds *above* the new fixed point
+        — the unsound direction (see `core/audsley.py`) — so the cache
+        is invalidated and the next decision re-solves cold.  An
+        Audsley accept also invalidates: its bounds hold under the
+        reassigned GPU priorities, not the default recurrence the next
+        RM test runs.  Seeds are used on single-device platforms only
+        (multi-device merged bounds are not per-projection lower
+        bounds; `analysis.per_device` / `analysis.cross_device` drop
+        them defensively).
+
+    ``warm_start=False`` reverts the *decision path* to the
+    from-scratch baseline this PR replaced — every decision re-converts
+    every admitted profile, re-sums the headroom utilizations from the
+    built taskset, and runs its fixed point cold from zero — so warm vs
+    cold decision identity is directly testable
+    (tests/test_admission_warm.py) and the incremental state's payoff
+    is directly benchmarkable (benchmarks/admission_bench.py).  The
+    bookkeeping itself stays maintained either way: ``release``,
+    ``device_utilization`` and the latency window serve both modes."""
+
+    #: sliding window of per-decision latencies kept for the summary
+    LATENCY_WINDOW = 4096
+
     def __init__(self, mode: str = "notify", wait_mode: str = "suspend",
                  n_cpus: int = 4, epsilon_ms: float = 1.0,
                  try_gpu_priorities: bool = True, n_devices: int = 1,
-                 headroom: float = 1.0):
+                 headroom: float = 1.0, warm_start: bool = True):
         self.mode, self.wait_mode = mode, wait_mode
         self.rta = rta_for(mode, wait_mode)
         self.n_cpus = n_cpus
@@ -284,15 +332,160 @@ class AdmissionController:
         self.try_gpu_priorities = try_gpu_priorities
         self.n_devices = n_devices
         self.headroom = headroom
-        self.admitted: List[JobProfile] = []
+        self.warm_start = warm_start
+        self._admitted: List[JobProfile] = []
+        self._names: set = set()
+        self._tasks: Dict[str, Task] = {}
+        self._cpu_util: Dict[int, float] = {}   # RT (C+Gm)/T per core
+        self._dev_util: Dict[int, float] = {}   # RT Ge/T per device
+        self._load_all: Dict[int, float] = {}   # profile load per device
+        self._load_rt: Dict[int, float] = {}    # ... RT profiles only
+        self._warm: Optional[Dict[str, Optional[float]]] = None
+        self._latencies: deque = deque(maxlen=self.LATENCY_WINDOW)
+        self._n_decisions = 0
 
-    def _taskset(self, *extra: JobProfile) -> Taskset:
-        profs = self.admitted + list(extra)
-        return Taskset([p.to_task() for p in profs], n_cpus=self.n_cpus,
+    # ------------------------------------------------------------------
+    # incremental bookkeeping
+    # ------------------------------------------------------------------
+    @property
+    def admitted(self) -> List[JobProfile]:
+        """Admitted profiles in admission order.  Assigning to this
+        property replaces the set wholesale (the fail-over epoch reset
+        in `sched/cluster.py` does), rebuilding the bookkeeping and
+        invalidating the warm-start cache — cached bounds from the old
+        set are not lower bounds for an arbitrary new one."""
+        return self._admitted
+
+    @admitted.setter
+    def admitted(self, profs: Iterable[JobProfile]) -> None:
+        self._admitted = list(profs)
+        self._tasks = {p.name: p.to_task() for p in self._admitted}
+        self._names = set(self._tasks)
+        self._warm = None
+        self._recount()
+
+    def _charge(self, prof: JobProfile, task: Task) -> None:
+        """Add one admitted profile to the running totals (the same
+        accumulation order a cold re-sum over the admitted list would
+        use, so incremental and from-scratch floats are bit-equal)."""
+        from .elastic import profile_utilization
+        u = profile_utilization(prof)
+        self._load_all[prof.device] = \
+            self._load_all.get(prof.device, 0.0) + u
+        if task.is_rt:
+            self._load_rt[prof.device] = \
+                self._load_rt.get(prof.device, 0.0) + u
+            self._cpu_util[task.cpu] = (self._cpu_util.get(task.cpu, 0.0)
+                                        + (task.C + task.Gm) / task.period)
+            if task.uses_gpu:
+                self._dev_util[task.device] = \
+                    (self._dev_util.get(task.device, 0.0)
+                     + task.Ge / task.period)
+
+    def _recount(self) -> None:
+        """Rebuild the running totals from the admitted list.  Used on
+        removal instead of subtracting: re-accumulating in admission
+        order reproduces exactly the floats a freshly built controller
+        would hold, so warm/cold decision identity survives float
+        non-associativity at the headroom boundary."""
+        self._cpu_util, self._dev_util = {}, {}
+        self._load_all, self._load_rt = {}, {}
+        for p in self._admitted:
+            self._charge(p, self._tasks[p.name])
+
+    def _register(self, prof: JobProfile, task: Task) -> None:
+        self._admitted.append(prof)
+        self._names.add(prof.name)
+        self._tasks[prof.name] = task
+        self._charge(prof, task)
+
+    def _build_taskset(self, extra_tasks: List[Task]) -> Taskset:
+        if self.warm_start:
+            tasks = [self._tasks[p.name] for p in self._admitted]
+        else:
+            # faithful from-scratch baseline: re-convert every admitted
+            # profile per decision, exactly what every decision paid
+            # before the incremental state existed (to_task is pure, so
+            # the Tasksets — and decisions — are identical either way)
+            tasks = [p.to_task() for p in self._admitted]
+        tasks.extend(extra_tasks)
+        return Taskset(tasks, n_cpus=self.n_cpus,
                        epsilon=self.epsilon_ms,
                        kthread_cpu=self.n_cpus,  # dedicated scheduler core
                        n_devices=self.n_devices)
 
+    def _taskset(self, *extra: JobProfile) -> Taskset:
+        return self._build_taskset([p.to_task() for p in extra])
+
+    def _headroom_reason(self, task: Optional[Task],
+                         cpu_util: Optional[Dict[int, float]] = None,
+                         dev_util: Optional[Dict[int, float]] = None
+                         ) -> Optional[str]:
+        """`headroom_violation` on the running totals plus one candidate
+        — O(cores + devices) instead of O(admitted tasks), same refusal
+        text, same first-violation order (cores then devices, sorted)."""
+        cpu_u = dict(cpu_util if cpu_util is not None else self._cpu_util)
+        dev_u = dict(dev_util if dev_util is not None else self._dev_util)
+        if task is not None and task.is_rt:
+            cpu_u[task.cpu] = (cpu_u.get(task.cpu, 0.0)
+                               + (task.C + task.Gm) / task.period)
+            if task.uses_gpu:
+                dev_u[task.device] = (dev_u.get(task.device, 0.0)
+                                      + task.Ge / task.period)
+        for core, u in sorted(cpu_u.items()):
+            if u > self.headroom + _EPS:
+                return (f"RT utilization {u:.3f} on core {core} exceeds "
+                        f"headroom {self.headroom:g}")
+        for dev, u in sorted(dev_u.items()):
+            if u > self.headroom + _EPS:
+                return (f"RT utilization {u:.3f} on device {dev} exceeds "
+                        f"headroom {self.headroom:g}")
+        return None
+
+    def _seed_dict(self) -> Optional[Dict[str, float]]:
+        """Warm-start seeds for the next decision, or None when cold.
+        Existing tasks seed from their cached converged WCRT (a lower
+        bound of the grown fixed point — admission only adds
+        interference); the candidate is absent and seeds from its zero
+        floor inside the solver.  Single-device only: a merged
+        multi-device bound is not a lower bound of each projection."""
+        if (not self.warm_start or self._warm is None
+                or self.n_devices != 1):
+            return None
+        seeds = {k: v for k, v in self._warm.items()
+                 if v is not None and math.isfinite(v)}
+        return seeds or None
+
+    def _stamp(self, dec: AdmissionDecision,
+               t0: float) -> AdmissionDecision:
+        lat = (time.perf_counter() - t0) * 1e3
+        dec["latency_ms"] = lat
+        self._latencies.append(lat)
+        self._n_decisions += 1
+        return dec
+
+    def latency_summary(self) -> dict:
+        """Decision-latency percentiles over the sliding window — the
+        live counterpart of benchmarks/admission_bench.py's metric,
+        surfaced through ``ClusterExecutor.stats()`` / the daemon's
+        status reply / ``SchedClient.admission_latency()``."""
+        lat = sorted(self._latencies)
+        if not lat:
+            return {"decisions": self._n_decisions, "window": 0}
+
+        def pct(q: float) -> float:
+            return lat[min(len(lat) - 1, int(q * len(lat)))]
+
+        return {"decisions": self._n_decisions,
+                "window": len(lat),
+                "mean_ms": sum(lat) / len(lat),
+                "p50_ms": pct(0.50),
+                "p99_ms": pct(0.99),
+                "max_ms": lat[-1]}
+
+    # ------------------------------------------------------------------
+    # decisions
+    # ------------------------------------------------------------------
     def try_admit(self, prof: JobProfile) -> AdmissionDecision:
         """Returns an :class:`AdmissionDecision` (a dict with keys
         ``admitted``/``reason``/``via``/``wcrt``/…, so historical
@@ -300,6 +493,10 @@ class AdmissionController:
         Best-effort jobs are always admitted (they have no guarantee) —
         but still validated, or an unbuildable profile would poison every
         later ``_taskset()`` build."""
+        t0 = time.perf_counter()
+        return self._stamp(self._try_admit(prof), t0)
+
+    def _try_admit(self, prof: JobProfile) -> AdmissionDecision:
         if not (0 <= prof.device < self.n_devices):
             # refuse, don't crash: a bad profile must not take down the
             # admission path (Taskset validation would raise), nor may it
@@ -308,7 +505,7 @@ class AdmissionController:
                 "validation-refused",
                 error=f"device {prof.device} out of range for "
                       f"{self.n_devices}-device platform")
-        if any(p.name == prof.name for p in self.admitted):
+        if prof.name in self._names:
             # a duplicate name would silently merge WCRT dict entries
             return AdmissionDecision.refuse(
                 "validation-refused",
@@ -317,32 +514,62 @@ class AdmissionController:
             # same refuse-don't-crash rule for every other profile defect
             # Taskset validation catches (colliding priorities, bad cpu):
             # a live gatekeeper must return a refusal, not raise
-            ts = self._taskset(prof)
+            task = prof.to_task()
+            ts = self._build_taskset([task])
         except ValueError as e:
             return AdmissionDecision.refuse("validation-refused",
                                             error=str(e))
         if prof.best_effort:
-            self.admitted.append(prof)
+            # BE tasks never interfere analytically, so the RT fixed
+            # point — and the warm cache — are untouched by this accept
+            self._register(prof, task)
             return AdmissionDecision.accept("best_effort")
-        reason = headroom_violation(ts, self.headroom)
+        if self.warm_start:
+            reason = self._headroom_reason(task)
+        else:
+            # from-scratch baseline: re-sum the built taskset.  Both
+            # accumulate in admission order, so the sums — and the
+            # boundary-case decisions — are bit-equal.
+            reason = headroom_violation(ts, self.headroom)
         if reason is not None:
             # the fast-reject: a hopeless taskset never reaches a fixed
             # point (wcrt stays empty — nothing was computed)
             return AdmissionDecision.refuse("headroom-fast-reject",
                                             error=reason)
         rta = self.rta
-        if schedulable(ts, rta):
-            self.admitted.append(prof)
-            return AdmissionDecision.accept("default", rta(ts))
+        seeds = self._seed_dict()
+        if seeds is not None and supports_kwarg(rta, "seeds"):
+            R = rta(ts, seeds=seeds)
+        else:
+            R = rta(ts)
+        if self._accepts(ts, R):
+            self._register(prof, task)
+            # commit the freshly converged bounds: they are the admitted
+            # set's fixed point and seed the next grown decision
+            self._warm = dict(R)
+            return AdmissionDecision.accept("default", R)
+        return self._reject_or_retry(prof, task, ts, R)
+
+    def _reject_or_retry(self, prof: JobProfile, task: Task,
+                         ts: Taskset, R: dict) -> AdmissionDecision:
+        """RM-test failure tail shared by the scalar and batched paths:
+        the Audsley retry, else the refusal carrying the failed bounds.
+        ``R`` is the already-converged default-recurrence WCRT dict for
+        ``ts`` — the batched path hands over its solver's vector so the
+        refusal never re-runs the fixed point it just watched fail."""
         if self.try_gpu_priorities:
-            assigned = assign_gpu_priorities(ts, rta)
+            assigned = assign_gpu_priorities(ts, self.rta)
             if assigned is not None:
-                self.admitted.append(prof)
+                self._register(prof, task)
+                # Audsley bounds hold under the *reassigned* GPU
+                # priorities — not lower bounds of the default
+                # recurrence the next RM test runs — so go cold
+                self._warm = None
                 return AdmissionDecision.accept(
-                    "audsley", rta(assigned, use_gpu_prio=True),
+                    "audsley", self.rta(assigned, use_gpu_prio=True),
                     gpu_priorities={t.name: t.gpu_priority
                                     for t in assigned.tasks})
-        return AdmissionDecision.refuse("rta-reject", wcrt=rta(ts))
+        return AdmissionDecision.refuse("rta-reject", wcrt=R)
 
     def try_admit_many(self, profs: Iterable[JobProfile], *,
                        backend: str = "numpy") -> List[AdmissionDecision]:
@@ -355,39 +582,66 @@ class AdmissionController:
         burst is analyzed under *optimistic prefix* tasksets — profile
         k is tested against admitted + burst[:k+1] — which is exactly
         the sequential state while every earlier profile is being
-        admitted.  At the first profile the batch cannot clear (an RTA
-        refusal, a best-effort job, a validation defect, or a headroom
-        refusal) that one profile goes through the sequential path —
-        including the Audsley retry and the exact refusal dict — and
-        the remainder re-batches against the updated state.  WCRTs in
+        admitted.  A best-effort job, validation defect, or headroom
+        refusal at the burst head goes through the sequential path for
+        the exact decision dict.  An *RTA* refusal reuses the bounds
+        the batch just converged for that very taskset — the shared
+        tail runs the Audsley retry (or builds the refusal) without
+        re-running the fixed point it watched fail.  Either way the
+        remainder re-batches against the updated state.  WCRTs in
         batched results are the batch solver's vectors (value-equal to
-        the scalar ones to float tolerance, inf-for-inf)."""
+        the scalar ones to float tolerance, inf-for-inf).
+
+        The prefix batches share the controller's warm-start seeds
+        (every prefix grows the same admitted set, so the cached bounds
+        are lower bounds for all of them); the accepted prefix's last
+        WCRT vector — the new admitted set's fixed point — is committed
+        back into the cache.  Batched decisions carry ``latency_ms``
+        measured from the start of their batch round."""
         profs = list(profs)
         kind = getattr(self.rta, "batch_kind", None)
         if kind is None or len(profs) <= 1:
             return [self.try_admit(p) for p in profs]
-        from ..core.batch import batch_rta
+        from ..core.batch import batch_rta, batch_rta_prefixes
         results: List[AdmissionDecision] = []
         i = 0
         while i < len(profs):
+            t0 = time.perf_counter()
             run: List[JobProfile] = []
+            run_tasks: List[Task] = []
+            run_names: set = set()
             tss: List[Taskset] = []
+            cpu_u = dict(self._cpu_util)
+            dev_u = dict(self._dev_util)
             j = i
             while j < len(profs):
                 p = profs[j]
                 if (p.best_effort
                         or not (0 <= p.device < self.n_devices)
-                        or any(q.name == p.name
-                               for q in self.admitted + run)):
+                        or p.name in self._names
+                        or p.name in run_names):
                     break
                 try:
-                    ts = self._taskset(*run, p)
+                    task = p.to_task()
+                    ts = self._build_taskset(run_tasks + [task])
                 except ValueError:
                     break
-                if headroom_violation(ts, self.headroom) is not None:
+                if self.warm_start:
+                    reason = self._headroom_reason(task, cpu_u, dev_u)
+                else:
+                    reason = headroom_violation(ts, self.headroom)
+                if reason is not None:
                     break
                 run.append(p)
+                run_tasks.append(task)
+                run_names.add(p.name)
                 tss.append(ts)
+                if task.is_rt:
+                    cpu_u[task.cpu] = (cpu_u.get(task.cpu, 0.0)
+                                       + (task.C + task.Gm) / task.period)
+                    if task.uses_gpu:
+                        dev_u[task.device] = (dev_u.get(task.device, 0.0)
+                                              + task.Ge / task.period)
                 j += 1
             if not run:
                 # burst head needs non-RTA handling (best-effort,
@@ -395,18 +649,35 @@ class AdmissionController:
                 results.append(self.try_admit(profs[i]))
                 i += 1
                 continue
-            wcrts = batch_rta(kind, tss, backend=backend)
+            seed = self._seed_dict()
+            if self.warm_start and self.n_devices == 1:
+                # the run's prefix problems share the admitted set as a
+                # common base: pack it once and expand by valid-mask
+                # (bit-identical to batch_rta over the prefix tasksets)
+                wcrts = batch_rta_prefixes(kind, tss[-1], len(run),
+                                           backend=backend, seeds=seed)
+            else:
+                wcrts = batch_rta(
+                    kind, tss, backend=backend,
+                    seeds=None if seed is None else [seed] * len(tss))
             k = 0
             while k < len(run) and self._accepts(tss[k], wcrts[k]):
                 k += 1
-            for p, w in zip(run[:k], wcrts[:k]):
-                self.admitted.append(p)
-                results.append(AdmissionDecision.accept("default", w))
+            for p, task, w in zip(run[:k], run_tasks[:k], wcrts[:k]):
+                self._register(p, task)
+                results.append(self._stamp(
+                    AdmissionDecision.accept("default", w), t0))
+            if k:
+                self._warm = dict(wcrts[k - 1])
             i += k
             if k < len(run):
-                # first refusal: sequential fallback runs the Audsley
-                # retry; everything after it re-batches next round
-                results.append(self.try_admit(profs[i]))
+                # first refusal: its taskset is tss[k] exactly (the
+                # accepted prefix was just registered), so hand the
+                # batch's already-converged bounds to the shared tail —
+                # Audsley retry or refusal — instead of re-running the
+                # scalar fixed point the batch just watched fail
+                results.append(self._stamp(self._reject_or_retry(
+                    run[k], run_tasks[k], tss[k], wcrts[k]), t0))
                 i += 1
         return results
 
@@ -421,16 +692,28 @@ class AdmissionController:
 
     def release(self, name: str) -> bool:
         """Retire an admitted profile (its job left the platform) so its
-        demand no longer charges future admissions."""
-        for i, p in enumerate(self.admitted):
+        demand no longer charges future admissions.
+
+        Removing an RT profile *shrinks* interference: the cached
+        converged bounds now sit above the new fixed point — the
+        unsound seed direction — so the warm cache is invalidated and
+        the next decision re-solves cold (and repopulates the cache on
+        accept).  A best-effort release keeps the cache: BE tasks never
+        enter the RT recurrences, so the fixed point is unchanged."""
+        for i, p in enumerate(self._admitted):
             if p.name == name:
-                del self.admitted[i]
+                del self._admitted[i]
+                self._names.discard(name)
+                task = self._tasks.pop(name)
+                if task.is_rt:
+                    self._warm = None
+                self._recount()
                 return True
         return False
 
     def on_device(self, device: int) -> List[JobProfile]:
         """Admitted profiles bound to ``device`` (RT and best-effort)."""
-        return [p for p in self.admitted if p.device == device]
+        return [p for p in self._admitted if p.device == device]
 
     def device_utilization(self, device: int, *,
                            include_best_effort: bool = True) -> float:
@@ -438,10 +721,10 @@ class AdmissionController:
         metric of the shedding ladder (`sched.elastic`).  Unlike every
         RTA input, this *includes* best-effort demand by default: BE
         tasks never interfere analytically, but they do occupy the
-        device at runtime."""
-        from .elastic import profile_utilization
-        return sum(profile_utilization(p) for p in self.on_device(device)
-                   if include_best_effort or not p.best_effort)
+        device at runtime.  O(1): served from the running per-device
+        totals the bookkeeping maintains."""
+        loads = self._load_all if include_best_effort else self._load_rt
+        return loads.get(device, 0.0)
 
     # ------------------------------------------------------------------
     # durable state: export / rebuild (sched/store.py, sched/daemon.py)

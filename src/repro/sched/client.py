@@ -262,6 +262,15 @@ class SchedClient:
     def status(self) -> dict:
         return self._backend.status()
 
+    def admission_latency(self) -> dict:
+        """Per-decision admission latency summary (decisions / window /
+        mean / p50 / p99 / max, ms) from the controller's sliding
+        window — the live counterpart of the metric
+        benchmarks/admission_bench.py reports offline.  Served through
+        the stats reply, so it works against both backends."""
+        return (self.status().get("stats") or {}).get(
+            "admission_latency", {})
+
     def per_device_mort(self) -> Dict[int, Optional[float]]:
         return self._backend.per_device_mort()
 

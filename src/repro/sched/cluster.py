@@ -166,13 +166,11 @@ class ClusterExecutor:
     # placement
     # ------------------------------------------------------------------
     def _admitted_load(self, device: int) -> float:
-        """GPU utilization already admitted onto ``device``."""
-        load = 0.0
-        for p in self.admission.admitted:
-            if p.device == device:
-                load += sum(m + e for m, e in
-                            p.device_segments_ms) / p.period_ms
-        return load
+        """GPU utilization already admitted onto ``device`` — O(1),
+        served from the admission controller's running per-device
+        totals (the placement strategies query this per candidate per
+        submission, so it sits on the admission hot path)."""
+        return self.admission.device_utilization(device)
 
     def candidates(self, prof: JobProfile,
                    strategy: Optional[str] = None) -> List[int]:
@@ -400,6 +398,9 @@ class ClusterExecutor:
         unaffected = [p for p in self.admission.admitted
                       if p.device != device]
         # -- step 3: fresh evidence for every survivor ------------------
+        # the epoch reset goes through the ``admitted`` setter, which
+        # invalidates the warm-start cache; the sequential re-admissions
+        # below repopulate it as each survivor is re-proven
         self.admission.admitted = []
         kept: List[str] = []
         for p in unaffected:
@@ -661,6 +662,7 @@ class ClusterExecutor:
             "shed": self.shed_jobs,
             "health": {d: (h.state if h is not None else None)
                        for d, h in enumerate(self._health)},
+            "admission_latency": self.admission.latency_summary(),
         }
 
     def find_job(self, name: str) -> Optional[RTJob]:

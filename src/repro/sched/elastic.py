@@ -17,7 +17,11 @@ degrades gracefully instead of falling over:
     does not oscillate at the boundary.  Best-effort tasks never appear
     in any RTA (they are provably non-interfering at analysis level) —
     shedding is a *runtime* capacity decision layered under the
-    analytical admission gate, never a substitute for it.
+    analytical admission gate, never a substitute for it.  For the
+    same reason, shedding a best-effort job leaves the admission
+    controller's warm-start cache intact (DESIGN.md §11): BE tasks
+    never enter the RT recurrences, so evicting one changes no fixed
+    point — only an *RT* removal invalidates the cached bounds.
 
   * **training**: when nodes join or leave, the framework rebuilds the
     mesh and re-places the (checkpointed) state under the new sharding

@@ -158,7 +158,11 @@ class HealthConfig:
     slice exceptions (cumulative) also declare the device failed.
     ``poll_interval_s`` is the cluster health monitor's cadence;
     ``auto_failover`` lets the monitor call
-    ``ClusterExecutor.fail_device`` itself on a failed verdict."""
+    ``ClusterExecutor.fail_device`` itself on a failed verdict.  A
+    fail-over bumps the binding epoch and reassigns the controller's
+    admitted set wholesale, which drops its warm-start WCRT cache
+    (removal is the unsound seed direction, DESIGN.md §11); the
+    re-admission sweep that rebinds survivors repopulates it."""
     stall_timeout_s: float = 5.0
     fail_timeout_s: float = 5.0
     error_threshold: int = 3

@@ -1,0 +1,260 @@
+"""Warm-started incremental admission (DESIGN.md §11).
+
+The controller's persistent state — cached built Tasks, running
+utilization totals, warm-start WCRT seeds — must be *invisible* in the
+decisions: ``warm_start=True`` and the faithful from-scratch baseline
+(``warm_start=False``) must produce identical decisions and
+WCRTs-to-tolerance over any admit/release/shed/fail-over sequence, for
+every RTA kind and every solver backend.  These tests drive randomized
+sequences through paired controllers (hypothesis when installed, a
+seeded sweep always), pin the cache-invalidation rules the soundness
+argument rests on (admitting only ADDS interference; any removal is
+the unsound seed direction), and check the batch-layer seed plumbing
+(`batch_rta(seeds=...)`, `batch_rta_prefixes`) against the unseeded
+ground truth.
+"""
+import math
+import random
+
+import pytest
+
+from repro.core import Taskset
+from repro.core.analysis import (ioctl_busy_rta, ioctl_suspend_rta,
+                                 kthread_busy_rta)
+from repro.core.batch import batch_rta, batch_rta_prefixes
+from repro.core.batch_jax import HAVE_JAX
+from repro.core.improved import (ioctl_busy_improved_rta,
+                                 ioctl_suspend_improved_rta)
+from repro.sched.admission import AdmissionController, JobProfile
+
+from _optional import HAVE_HYPOTHESIS, given, settings, st
+
+RTAS = {
+    "kthread_busy": kthread_busy_rta,
+    "ioctl_busy": ioctl_busy_rta,
+    "ioctl_suspend": ioctl_suspend_rta,
+    "ioctl_busy_improved": ioctl_busy_improved_rta,
+    "ioctl_suspend_improved": ioctl_suspend_improved_rta,
+}
+
+BACKENDS = [
+    "scalar",
+    "numpy",
+    pytest.param("jax", marks=pytest.mark.skipif(
+        not HAVE_JAX, reason="jax not importable")),
+]
+
+
+def _prof(i, rng, **kw):
+    d = dict(name=f"job{i}",
+             host_segments_ms=[round(rng.uniform(0.5, 2.0), 3)],
+             device_segments_ms=[(0.2, round(rng.uniform(1.0, 5.0), 3))],
+             period_ms=rng.choice([40.0, 60.0, 80.0, 120.0]),
+             priority=10_000 - i, cpu=i % 4)
+    d.update(kw)
+    return JobProfile(**d)
+
+
+def _pair(rta):
+    """A (warm, cold) controller pair under the same platform config."""
+    ctls = []
+    for warm in (True, False):
+        c = AdmissionController(mode="ioctl", wait_mode="suspend",
+                                n_cpus=4, warm_start=warm)
+        c.rta = rta  # exercise all five kinds through one config
+        ctls.append(c)
+    return ctls
+
+
+def _assert_wcrt_close(a, b):
+    assert set(a) == set(b)
+    for name, ra in a.items():
+        rb = b[name]
+        if ra is None or rb is None:
+            assert ra is None and rb is None, name
+        elif math.isinf(ra) or math.isinf(rb):
+            assert math.isinf(ra) and math.isinf(rb), name
+        else:
+            assert abs(ra - rb) <= 1e-6 * max(1.0, abs(ra)), name
+
+
+def _assert_same_decision(dw, dc):
+    for key in ("admitted", "reason", "via", "error", "gpu_priorities"):
+        assert dw.get(key) == dc.get(key), key
+    _assert_wcrt_close(dw["wcrt"], dc["wcrt"])
+    # satellite contract: every decision carries its processing latency
+    assert dw["latency_ms"] >= 0.0 and dc["latency_ms"] >= 0.0
+
+
+def _run_sequence(seed, rta, backend, n_ops=10):
+    """Drive one randomized admit/release/shed/fail-over sequence
+    through a warm and a cold controller in lockstep, asserting
+    decision identity at every step and the §11 invalidation rules on
+    the warm side."""
+    warm, cold = _pair(rta)
+    rng = random.Random(seed)
+    i = 0
+    for _ in range(n_ops):
+        op = rng.choice(["admit", "admit", "admit",
+                         "release", "shed", "failover"])
+        if op == "admit" or not warm.admitted:
+            burst = [_prof(i + k, rng) for k in range(rng.randint(1, 5))]
+            if burst and rng.random() < 0.2:
+                burst[0] = _prof(i, rng, best_effort=True)
+            i += len(burst)
+            if backend == "scalar":
+                dws = [warm.try_admit(p) for p in burst]
+                dcs = [cold.try_admit(p) for p in burst]
+            else:
+                dws = warm.try_admit_many(burst, backend=backend)
+                dcs = cold.try_admit_many(burst, backend=backend)
+            for dw, dc in zip(dws, dcs):
+                _assert_same_decision(dw, dc)
+                if dw["admitted"] and dw["via"] == "audsley":
+                    # Audsley bounds hold under reassigned GPU
+                    # priorities, not the default recurrence — the
+                    # cache must not carry them
+                    assert warm._warm is None
+        elif op == "release":
+            name = rng.choice([p.name for p in warm.admitted])
+            was_rt = warm._tasks[name].is_rt
+            assert warm.release(name) and cold.release(name)
+            if was_rt:  # RT removal shrinks interference: unsound seeds
+                assert warm._warm is None
+        elif op == "shed":
+            # shedding evicts the lowest-priority admitted profile
+            # (sched/elastic.py) — another removal path
+            victim = min((p for p in warm.admitted),
+                         key=lambda p: p.priority)
+            assert warm.release(victim.name) and cold.release(victim.name)
+        else:  # fail-over epoch reset: wholesale reassignment
+            keep = [p for p in warm.admitted if rng.random() < 0.7]
+            warm.admitted = keep
+            cold.admitted = list(keep)
+            assert warm._warm is None
+        assert ([p.name for p in warm.admitted]
+                == [p.name for p in cold.admitted])
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+@pytest.mark.parametrize("kind", sorted(RTAS))
+def test_warm_cold_identity_seeded(kind, backend):
+    """Seeded fallback sweep: always runs, hypothesis or not."""
+    for seed in (0, 1):
+        _run_sequence(seed * 997 + hash(kind) % 1000, RTAS[kind], backend)
+
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=15, deadline=None)
+    @given(st.integers(min_value=0, max_value=2**31 - 1))
+    def test_warm_cold_identity_property(seed):
+        _run_sequence(seed, ioctl_suspend_rta, "numpy")
+
+
+# --------------------------------------------------------------------------
+# pinned invalidation regressions
+# --------------------------------------------------------------------------
+
+def test_release_never_leaves_stale_seeds():
+    """Post-release decisions must match a freshly built controller:
+    cached bounds from the pre-release set sit ABOVE the shrunk fixed
+    point (the unsound direction), so reusing them could under-admit or
+    (worse) hand out wrong WCRT evidence."""
+    rng = random.Random(7)
+    ctl = AdmissionController(mode="ioctl", wait_mode="suspend",
+                              n_cpus=4, warm_start=True)
+    profs = [_prof(i, rng) for i in range(8)]
+    for p in profs:
+        ctl.try_admit(p)
+    assert ctl._warm is not None
+    released = ctl.admitted[2].name
+    assert ctl.release(released)
+    assert ctl._warm is None  # the pinned invalidation
+
+    fresh = AdmissionController(mode="ioctl", wait_mode="suspend",
+                                n_cpus=4, warm_start=True)
+    for p in ctl.admitted:
+        assert fresh.try_admit(p)["admitted"]
+    probe = _prof(99, rng)
+    _assert_same_decision(ctl.try_admit(probe), fresh.try_admit(probe))
+
+
+def test_best_effort_paths_keep_warm_cache():
+    """BE tasks never enter the RT recurrences: admitting or releasing
+    one must not throw away converged RT bounds."""
+    rng = random.Random(11)
+    ctl = AdmissionController(mode="ioctl", wait_mode="suspend",
+                              n_cpus=4, warm_start=True)
+    for i in range(4):
+        assert ctl.try_admit(_prof(i, rng))["admitted"]
+    cached = ctl._warm
+    assert cached is not None
+    assert ctl.try_admit(_prof(50, rng, best_effort=True))["admitted"]
+    assert ctl._warm is cached
+    assert ctl.release("job50")
+    assert ctl._warm is cached
+
+
+def test_latency_summary_tracks_decisions():
+    rng = random.Random(13)
+    ctl = AdmissionController(mode="ioctl", wait_mode="suspend", n_cpus=4)
+    assert ctl.latency_summary()["decisions"] == 0
+    ctl.try_admit_many([_prof(i, rng) for i in range(5)])
+    s = ctl.latency_summary()
+    assert s["decisions"] == 5
+    for key in ("mean_ms", "p50_ms", "p99_ms", "max_ms"):
+        assert s[key] >= 0.0
+
+
+# --------------------------------------------------------------------------
+# batch-layer seed plumbing
+# --------------------------------------------------------------------------
+
+def _taskset(n, rng, n_be=0):
+    profs = [_prof(i, rng) for i in range(n)]
+    for k in range(n_be):
+        profs[k] = _prof(k, rng, best_effort=True)
+    tasks = [p.to_task() for p in profs]
+    return Taskset(tasks, n_cpus=4, epsilon=1.0, kthread_cpu=4,
+                   n_devices=1)
+
+
+@pytest.mark.parametrize("kind", sorted(RTAS))
+def test_batch_rta_seeds_do_not_change_results(kind):
+    """Any sound seed (≤ the fixed point) must converge to the same
+    bounds as the unseeded ascent — here: the converged bounds halved."""
+    rng = random.Random(23)
+    tss = [_taskset(n, rng) for n in (4, 7, 10)]
+    cold = batch_rta(kind, tss)
+    seeds = [{k: v / 2.0 for k, v in r.items()
+              if v is not None and math.isfinite(v)} for r in cold]
+    warm = batch_rta(kind, tss, seeds=seeds)
+    for a, b in zip(cold, warm):
+        _assert_wcrt_close(a, b)
+    with pytest.raises(ValueError):
+        batch_rta(kind, tss, seeds=seeds[:1])  # length mismatch
+
+
+@pytest.mark.parametrize("kind", sorted(RTAS))
+@pytest.mark.parametrize("n_base,n_cand,n_be", [(0, 3, 0), (5, 4, 0),
+                                                (6, 3, 2)])
+def test_batch_rta_prefixes_matches_batch(kind, n_base, n_cand, n_be):
+    """The triangular-mask packing must be value-identical to solving
+    each prefix taskset independently — with and without seeds."""
+    rng = random.Random(31)
+    full = _taskset(n_base + n_cand, rng, n_be=n_be)
+    prefixes = [Taskset(list(full.tasks[:n_base + 1 + k]), n_cpus=4,
+                        epsilon=1.0, kthread_cpu=4, n_devices=1)
+                for k in range(n_cand)]
+    expected = batch_rta(kind, prefixes)
+    got = batch_rta_prefixes(kind, full, n_cand)
+    assert len(got) == n_cand
+    for a, b in zip(expected, got):
+        _assert_wcrt_close(a, b)
+    if n_base:
+        base_bounds = batch_rta(kind, [prefixes[0]])[0]
+        seed = {k: v / 2.0 for k, v in base_bounds.items()
+                if v is not None and math.isfinite(v)}
+        seeded = batch_rta_prefixes(kind, full, n_cand, seeds=seed)
+        for a, b in zip(expected, seeded):
+            _assert_wcrt_close(a, b)
