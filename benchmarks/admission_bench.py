@@ -49,7 +49,8 @@ import random
 import time
 from typing import Dict, List, Optional, Tuple
 
-from repro.sched.admission import AdmissionController, JobProfile
+from repro.sched.admission import (AdmissionController, JobProfile,
+                                   nearest_rank)
 
 MARKER = "admission-bench-v1"
 
@@ -120,7 +121,7 @@ def _percentiles(lat: List[float]) -> Dict[str, float]:
     s = sorted(lat)
 
     def pct(q: float) -> float:
-        return s[min(len(s) - 1, int(q * len(s)))]
+        return nearest_rank(s, q)
 
     return {"decisions": len(s),
             "mean_ms": round(sum(s) / len(s), 4),
@@ -139,7 +140,7 @@ def run_stream(schedule: List[Tuple[str, int]], *, warm: bool,
     per-phase metrics, raw per-decision latencies (``_lat``), and the
     decision trace (admitted/reason/via)."""
     rng = random.Random(seed + 1)
-    ctl = AdmissionController(mode="ioctl", wait_mode="suspend",
+    ctl = AdmissionController(policy="ioctl", wait_mode="suspend",
                               n_cpus=N_CPUS, n_devices=1,
                               warm_start=warm)
     phases: Dict[str, dict] = {}

@@ -185,7 +185,7 @@ def run_case_study(duration_s: float = 8.0, modes=None) -> List[dict]:
                  "kthread": "kthread_busy"}.get(mode, f"ioctl_{wait}")
         wcrt = {}
         if mode != "unmanaged":
-            ac = AdmissionController(mode=mode, wait_mode=wait, n_cpus=1,
+            ac = AdmissionController(policy=mode, wait_mode=wait, n_cpus=1,
                                      epsilon_ms=eps_ms)
             for p in profiles:
                 res = ac.try_admit(p)

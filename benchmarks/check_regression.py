@@ -54,12 +54,36 @@ from __future__ import annotations
 
 import argparse
 import json
+import shutil
 import sys
+from pathlib import Path
+
+#: repo root — BENCH_*.json artifacts are mirrored here so the
+#: cross-PR perf trajectory is discoverable in the tree itself, not
+#: only in CI artifact zips
+REPO_ROOT = Path(__file__).resolve().parent.parent
 
 
 def load(path: str) -> dict:
     with open(path) as f:
         return json.load(f)
+
+
+def mirror_bench_artifacts(paths: list[str]) -> None:
+    """Copy every ``BENCH_*.json`` the gate touched to the repo root
+    (skipping ones already there), so each push leaves the trajectory
+    next to the code."""
+    for p in paths:
+        src = Path(p)
+        if not (src.name.startswith("BENCH_") and src.suffix == ".json"):
+            continue
+        if not src.exists():
+            continue
+        dst = REPO_ROOT / src.name
+        if src.resolve() == dst.resolve():
+            continue
+        shutil.copyfile(src, dst)
+        print(f"mirrored {src} -> {dst}")
 
 
 def baseline_entries(baseline: dict) -> dict:
@@ -234,6 +258,77 @@ def check_admission(current: dict, base: dict | None,
     return failed
 
 
+def fleet_trajectory(current: dict) -> dict:
+    """Per-tier fleet trajectory datapoint (counts + tails)."""
+    out = {
+        "n_devices": current.get("n_devices"),
+        "n_models": len(current.get("per_model", {})),
+        "admission": current.get("admission", {}),
+        "per_tier": {},
+    }
+    for tier, row in current.get("per_tier", {}).items():
+        out["per_tier"][str(tier)] = {
+            "completions": row.get("completions"),
+            "deadline_misses": row.get("deadline_misses"),
+            "p50_ms": row.get("p50_ms"),
+            "p99_ms": row.get("p99_ms"),
+            "mort_ms": row.get("mort_ms"),
+        }
+    return out
+
+
+def check_fleet(current: dict) -> bool:
+    """Gate a BENCH_fleet.json result (marker ``fleet-bench-v1``).
+    Structural gates only — the fleet bench runs wall-clock workloads
+    on shared runners, so latency values are recorded in the trajectory
+    but never compared against a hardware-dependent ceiling.  Returns
+    True on failure."""
+    failed = False
+    per_model = current.get("per_model", {})
+    rt = {n: m for n, m in per_model.items() if not m.get("best_effort")}
+    be = {n: m for n, m in per_model.items() if m.get("best_effort")}
+    adm = current.get("admission", {})
+    print(
+        f"fleet: {len(rt)} RT + {len(be)} best-effort models, "
+        f"admitted {adm.get('admitted')}/{adm.get('submitted')}"
+    )
+    if not rt or not be:
+        print(
+            "FAIL [fleet]: a mixed-criticality fleet needs at least one "
+            f"RT and one best-effort model (got {len(rt)} RT, "
+            f"{len(be)} BE)",
+            file=sys.stderr,
+        )
+        failed = True
+    if not adm.get("admitted"):
+        print("FAIL [fleet]: no model was admitted", file=sys.stderr)
+        failed = True
+    for name, row in rt.items():
+        if not row.get("completions"):
+            print(
+                f"FAIL [fleet]: RT model {name!r} completed no "
+                "iterations — the fleet never actually ran",
+                file=sys.stderr,
+            )
+            failed = True
+        elif row.get("mort_ms") is None:
+            print(
+                f"FAIL [fleet]: RT model {name!r} reports no MORT",
+                file=sys.stderr,
+            )
+            failed = True
+    tiers = {m.get("tier") for m in per_model.values()}
+    missing = tiers - {int(t) for t in current.get("per_tier", {})}
+    if missing:
+        print(
+            f"FAIL [fleet]: tiers {sorted(missing)} present on models "
+            "but absent from the per-tier rollup",
+            file=sys.stderr,
+        )
+        failed = True
+    return failed
+
+
 def main() -> int:
     ap = argparse.ArgumentParser(description=__doc__.split("\n")[0])
     ap.add_argument(
@@ -271,6 +366,10 @@ def main() -> int:
             failed |= check_admission(
                 current, baseline.get("admission"), args.max_regression)
             continue
+        if current.get("marker") == "fleet-bench-v1":
+            traj["fleet"] = fleet_trajectory(current)
+            failed |= check_fleet(current)
+            continue
         if "scale_demo" in current:
             traj["scale_demo"] = current["scale_demo"]
         if "rows" not in current:
@@ -284,6 +383,14 @@ def main() -> int:
         with open(args.emit_trajectory, "w") as f:
             json.dump(traj, f, indent=2)
         print(f"wrote trajectory {args.emit_trajectory}")
+
+    # every BENCH_*.json this gate read or wrote is mirrored to the
+    # repo root — the cross-PR perf trajectory must be discoverable in
+    # the tree, not only inside CI artifact zips
+    mirror_bench_artifacts(
+        list(args.current)
+        + ([args.emit_trajectory] if args.emit_trajectory else [])
+    )
 
     if failed:
         return 1

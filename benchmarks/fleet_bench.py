@@ -1,0 +1,206 @@
+"""Fleet-serving benchmark: bursty open-arrival traffic over a
+mixed-criticality resident fleet (DESIGN.md §12).
+
+Per device the bench installs a resident fleet — one RT "assist" model
+plus tier-1 "train" and tier-0 "batch" best-effort background — and
+then drives open Poisson-burst arrivals of short interactive "chat"
+sessions (tier 2, highest criticality) at it: every session is a
+distinct RT job priced by the admission RTA from the *measured*
+per-slice profile of the synthetic workload, so arrivals past platform
+capacity are refused, not over-promised.  Best-effort work rides under
+a ``ShedPolicy`` with a tier-0 budget, so the bench also exercises the
+multi-tier shedding ladder as the platform fills.
+
+The workloads are synthetic (sleep-based slices) so the bench measures
+the scheduling platform — admission, placement, per-tier stats,
+shedding — not XLA.  Emits ``BENCH_fleet.json`` (marker
+``fleet-bench-v1``) for the CI gate (benchmarks/check_regression.py):
+the gate is structural (mixed fleet present, RT sessions admitted and
+completing) because latency values on shared runners are trajectory
+data, not comparable ceilings.
+
+    PYTHONPATH=src python benchmarks/fleet_bench.py --quick
+    PYTHONPATH=src python benchmarks/fleet_bench.py --quick --json \
+        BENCH_fleet.json
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import math
+import random
+import time
+from typing import List
+
+from repro.core.segments import SegmentedWorkload, SlicedOp
+from repro.sched import JobProfile, connect
+from repro.sched.elastic import ShedPolicy
+
+MARKER = "fleet-bench-v1"
+
+
+def _poisson(rng: random.Random, lam: float) -> int:
+    limit = math.exp(-lam)
+    k, p = 0, 1.0
+    while True:
+        p *= rng.random()
+        if p <= limit:
+            return k
+        k += 1
+
+
+def _sleep_workload(name: str, slices: int, slice_ms: float
+                    ) -> SegmentedWorkload:
+    """A synthetic model: one device segment of ``slices`` sleep-based
+    slices — the platform sees real (wall-clock) slice durations without
+    paying for XLA programs."""
+    def op() -> SlicedOp:
+        def step(carry, i):
+            time.sleep(slice_ms / 1e3)
+            return carry + 1
+
+        return SlicedOp(slices, lambda: 0, step, lambda c: c, label=name)
+
+    return SegmentedWorkload(name).device(op, label=name)
+
+
+def run_fleet_bench(*, n_devices: int = 2, duration_s: float = 3.0,
+                    lam: float = 2.0, burst_interval_s: float = 0.25,
+                    seed: int = 7, session_iters: int = 3,
+                    verbose: bool = True) -> dict:
+    log = print if verbose else (lambda *a, **k: None)
+    rng = random.Random(seed)
+    t_start = time.perf_counter()
+
+    # measured profiles for the synthetic fleet (one template per role)
+    templates = {
+        "assist": _sleep_workload("assist", slices=2, slice_ms=3.0),
+        "train": _sleep_workload("train", slices=4, slice_ms=5.0),
+        "batch": _sleep_workload("batch", slices=3, slice_ms=6.0),
+        "chat": _sleep_workload("chat", slices=2, slice_ms=2.0),
+    }
+    profiles = {k: wl.profile(reps=2) for k, wl in templates.items()}
+    max_slice = max(p.max_slice_ms for p in profiles.values())
+    eps_ms = 1.0 + max_slice * 1.2
+
+    shed = ShedPolicy(shed_at=0.9, resume_at=0.7, tier_budgets={0: 0.35})
+    client = connect(n_devices=n_devices, policy="ioctl",
+                     wait_mode="suspend", n_cpus=2, epsilon_ms=eps_ms,
+                     shed_policy=shed)
+    cluster = client.cluster
+    submitted = admitted = 0
+    session_jobs: List = []
+    try:
+        # resident fleet: best-effort background + one RT assist model
+        # per device, running for the whole bench
+        for d in range(n_devices):
+            for role, tier, prio, period, be in (
+                    ("batch", 0, 1, 800.0, True),
+                    ("train", 1, 5, 600.0, True),
+                    ("assist", 1, 40, 500.0, False)):
+                jp = dataclasses.replace(
+                    JobProfile.from_workload(
+                        profiles[role], period_ms=period,
+                        priority=prio + d,
+                        best_effort=be, margin=1.5, device=d, tier=tier),
+                    name=f"{role}{d}")
+                res = client.submit(jp, workload=templates[role],
+                                    n_iterations=10_000, start=True,
+                                    stop_after_s=duration_s + 0.5)
+                submitted += 1
+                admitted += bool(res.accepted)
+                if not res.accepted and not be:
+                    raise SystemExit(f"resident RT model {jp.name} "
+                                     f"refused: {res.reason}")
+
+        # open Poisson-burst arrivals of interactive chat sessions:
+        # each is its own RT job (admission may refuse past capacity —
+        # that is the point), round-robin across devices
+        k = 0
+        t_end = time.perf_counter() + duration_s
+        while time.perf_counter() < t_end:
+            burst = _poisson(rng, lam)
+            for _ in range(burst):
+                d = k % n_devices
+                jp = dataclasses.replace(
+                    JobProfile.from_workload(
+                        profiles["chat"], period_ms=250.0,
+                        priority=60 + k, margin=1.5, device=d, tier=2),
+                    name=f"chat{k}")
+                res = client.submit(jp, workload=templates["chat"],
+                                    n_iterations=session_iters,
+                                    start=True)
+                submitted += 1
+                if res.accepted:
+                    admitted += 1
+                    session_jobs.append(res.job)
+                k += 1
+            time.sleep(burst_interval_s)
+        log(f"arrivals done: {submitted} submitted, {admitted} admitted "
+            f"({submitted - admitted} refused at capacity)")
+
+        for job in session_jobs:
+            job.join(30)
+        client.join(duration_s + 60)
+
+        stats = cluster.stats()
+        report = {
+            "marker": MARKER,
+            "n_devices": n_devices,
+            "duration_s": duration_s,
+            "lam": lam,
+            "seed": seed,
+            "epsilon_ms": eps_ms,
+            "admission": {"submitted": submitted, "admitted": admitted,
+                          "rejected": submitted - admitted},
+            "per_model": stats["per_model"],
+            "per_tier": {str(t): row
+                         for t, row in stats["per_tier"].items()},
+            "shed": stats.get("shed"),
+            "admission_latency": stats.get("admission_latency"),
+            "wall_clock_s": round(time.perf_counter() - t_start, 2),
+        }
+    finally:
+        client.close(shutdown=True)
+    cluster.assert_migration_free()
+    return report
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(
+        description="mixed-criticality fleet bench (bursty arrivals)")
+    ap.add_argument("--quick", action="store_true",
+                    help="CI profile: ~3s of traffic")
+    ap.add_argument("--n-devices", type=int, default=2)
+    ap.add_argument("--duration", type=float, default=None)
+    ap.add_argument("--lam", type=float, default=2.0,
+                    help="mean Poisson burst size")
+    ap.add_argument("--seed", type=int, default=7)
+    ap.add_argument("--json", default=None, metavar="PATH")
+    args = ap.parse_args()
+
+    duration = args.duration if args.duration is not None else \
+        (3.0 if args.quick else 10.0)
+    report = run_fleet_bench(n_devices=args.n_devices,
+                             duration_s=duration, lam=args.lam,
+                             seed=args.seed)
+    for tier in sorted(report["per_tier"], reverse=True):
+        row = report["per_tier"][tier]
+        p99 = (f"{row['p99_ms']:.1f}ms"
+               if row.get("p99_ms") is not None else "-")
+        print(f"tier {tier}: {len(row['jobs'])} models, completions "
+              f"{row['completions']}, misses {row['deadline_misses']}, "
+              f"p99 {p99}, util {row['utilization']:.3f} "
+              f"(budget {row['budget']})")
+    adm = report["admission"]
+    print(f"admission: {adm['admitted']}/{adm['submitted']} admitted, "
+          f"{adm['rejected']} refused; shed events: {report['shed']}")
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(report, f, indent=2, default=str)
+        print(f"wrote {args.json}")
+
+
+if __name__ == "__main__":
+    main()

@@ -34,7 +34,7 @@ from repro.sched import ClusterExecutor, DeviceExecutor, RTJob
 
 
 def measure_ioctl_updates(n: int = 20_000) -> np.ndarray:
-    ex = DeviceExecutor(mode="notify")
+    ex = DeviceExecutor(policy="ioctl")
     jobs = [RTJob(f"j{i}", lambda job, it: None, period_s=1.0,
                   priority=10 + i) for i in range(8)]
     ts = []
@@ -51,7 +51,7 @@ def measure_ioctl_updates(n: int = 20_000) -> np.ndarray:
 
 
 def measure_poll_rewrites(n: int = 5_000) -> np.ndarray:
-    ex = DeviceExecutor(mode="poll", poll_interval=0.0005)
+    ex = DeviceExecutor(policy="kthread", poll_interval=0.0005)
     jobs = [RTJob(f"p{i}", lambda job, it: None, period_s=1.0,
                   priority=10 + i) for i in range(4)]
     for _ in range(n // len(jobs)):

@@ -19,9 +19,11 @@ from __future__ import annotations
 import dataclasses
 import math
 import time
+import warnings
 from collections import deque
 from dataclasses import dataclass
-from typing import Callable, Dict, Iterable, List, Mapping, Optional
+from typing import (Callable, Dict, Iterable, List, Mapping, Optional,
+                    Sequence)
 
 from ..core import GpuSegment, Task, Taskset
 from ..core.analysis import _EPS, supports_kwarg
@@ -169,6 +171,16 @@ def decisions_match(a: Mapping, b: Mapping, tol: float = 1e-6) -> bool:
     return True
 
 
+def nearest_rank(sorted_vals: Sequence[float], q: float) -> float:
+    """Nearest-rank percentile over an ascending-sorted sample: the
+    smallest element with at least ``q`` of the sample at or below it
+    (index ``ceil(q*n) - 1``).  The naive ``int(q*n)`` index is biased
+    one rank high — at n <= 100 its p99 is the window *maximum*."""
+    if not sorted_vals:
+        raise ValueError("percentile of an empty sample")
+    return sorted_vals[max(0, math.ceil(q * len(sorted_vals)) - 1)]
+
+
 def rta_for(policy: str, wait_mode: str) -> Callable:
     """Resolve the RTA guaranteeing (approach, wait mode); accepts registry
     names and the executor's legacy mode names ("notify"/"poll")."""
@@ -194,6 +206,10 @@ class JobProfile:
     deadline_ms: Optional[float] = None
     best_effort: bool = False
     device: int = 0  # accelerator the device segments execute on
+    #: criticality tier (observability grouping + the shedding ladder's
+    #: primary victim key; per-tier budgets in `sched.elastic` key on
+    #: it).  Higher = more valuable; never consulted by any RTA.
+    tier: int = 0
 
     def to_task(self) -> Task:
         return Task(
@@ -211,6 +227,7 @@ class JobProfile:
                       priority: int, *, cpu: int = 0,
                       deadline_ms: Optional[float] = None,
                       best_effort: bool = False, device: int = 0,
+                      tier: int = 0,
                       margin: float = 1.2) -> "JobProfile":
         """Build the admission profile from a *measured*
         ``core.segments.WorkloadProfile`` (host segment times + per-slice
@@ -223,7 +240,7 @@ class JobProfile:
                    device_segments_ms=dev,
                    period_ms=period_ms, priority=priority, cpu=cpu,
                    deadline_ms=deadline_ms, best_effort=best_effort,
-                   device=device)
+                   device=device, tier=tier)
 
     def to_dict(self) -> dict:
         """JSON-serializable form (the job store journals profiles)."""
@@ -321,12 +338,26 @@ class AdmissionController:
     #: sliding window of per-decision latencies kept for the summary
     LATENCY_WINDOW = 4096
 
-    def __init__(self, mode: str = "notify", wait_mode: str = "suspend",
+    def __init__(self, policy: Optional[str] = None,
+                 wait_mode: str = "suspend",
                  n_cpus: int = 4, epsilon_ms: float = 1.0,
                  try_gpu_priorities: bool = True, n_devices: int = 1,
-                 headroom: float = 1.0, warm_start: bool = True):
-        self.mode, self.wait_mode = mode, wait_mode
-        self.rta = rta_for(mode, wait_mode)
+                 headroom: float = 1.0, warm_start: bool = True,
+                 mode: Optional[str] = None):
+        if mode is not None:
+            if policy is not None:
+                raise ValueError("pass policy= alone, not with the "
+                                 "deprecated mode= alias")
+            warnings.warn(
+                "AdmissionController(mode=...) is deprecated; pass a "
+                "registry policy name (policy=...)",
+                DeprecationWarning, stacklevel=2)
+            policy = mode
+        # canonical registry name (legacy executor labels map through
+        # the registry), so export_config round-trips one spelling
+        self.policy = policy_spec(policy or "ioctl").name
+        self.wait_mode = wait_mode
+        self.rta = rta_for(self.policy, wait_mode)
         self.n_cpus = n_cpus
         self.epsilon_ms = epsilon_ms
         self.try_gpu_priorities = try_gpu_priorities
@@ -343,6 +374,12 @@ class AdmissionController:
         self._warm: Optional[Dict[str, Optional[float]]] = None
         self._latencies: deque = deque(maxlen=self.LATENCY_WINDOW)
         self._n_decisions = 0
+
+    @property
+    def mode(self) -> str:
+        """Backward-compatible read alias of :attr:`policy` (the
+        constructor's ``mode=`` spelling is deprecated)."""
+        return self.policy
 
     # ------------------------------------------------------------------
     # incremental bookkeeping
@@ -474,7 +511,7 @@ class AdmissionController:
             return {"decisions": self._n_decisions, "window": 0}
 
         def pct(q: float) -> float:
-            return lat[min(len(lat) - 1, int(q * len(lat)))]
+            return nearest_rank(lat, q)
 
         return {"decisions": self._n_decisions,
                 "window": len(lat),
@@ -733,7 +770,7 @@ class AdmissionController:
         """The constructor arguments that reproduce this controller's
         platform model — journaled by the job store so recovery builds
         an identically configured gatekeeper."""
-        return {"mode": self.mode, "wait_mode": self.wait_mode,
+        return {"policy": self.policy, "wait_mode": self.wait_mode,
                 "n_cpus": self.n_cpus, "epsilon_ms": self.epsilon_ms,
                 "try_gpu_priorities": self.try_gpu_priorities,
                 "n_devices": self.n_devices, "headroom": self.headroom}
@@ -758,7 +795,13 @@ class AdmissionController:
         :class:`RecoveryConformanceError` is raised: an admitted RT
         job's guarantee survives a crash only if the analysis still
         proves it."""
-        ctl = cls(**dict(config))
+        config = dict(config)
+        if "mode" in config:
+            # journals from before the policy= rename carry "mode";
+            # normalize silently — a compatibility read, not a new use
+            # of the deprecated alias
+            config.setdefault("policy", config.pop("mode"))
+        ctl = cls(**config)
         for n, entry in enumerate(entries):
             prof = JobProfile.from_dict(entry["profile"])
             recorded = entry.get("decision")

@@ -194,7 +194,8 @@ class _SocketBackend:
     def status(self) -> dict:
         st = self.request("status")
         stats = st.get("stats") or {}
-        for key in ("per_device_mort", "dispatches", "updates", "jobs"):
+        for key in ("per_device_mort", "dispatches", "updates", "jobs",
+                    "per_tier"):
             if key in stats:
                 stats[key] = _int_keys(stats[key])
         return st
@@ -273,6 +274,17 @@ class SchedClient:
 
     def per_device_mort(self) -> Dict[int, Optional[float]]:
         return self._backend.per_device_mort()
+
+    def per_model_stats(self) -> dict:
+        """Per-model observability (tier, MORT, deadline misses,
+        nearest-rank p50/p99 ms) — served through the stats reply, so
+        it works against both backends."""
+        return (self.status().get("stats") or {}).get("per_model", {})
+
+    def per_tier_stats(self) -> dict:
+        """Tier-level rollup (pooled tail latency, miss counts, tier
+        utilization vs budget) — both backends."""
+        return (self.status().get("stats") or {}).get("per_tier", {})
 
     def ping(self) -> dict:
         return self._backend.ping()
@@ -376,6 +388,9 @@ def main(argv=None) -> int:
     sb.add_argument("--cpu", type=int, default=0)
     sb.add_argument("--device", type=int, default=0)
     sb.add_argument("--best-effort", action="store_true")
+    sb.add_argument("--tier", type=int, default=0,
+                    help="criticality tier (per-tier stats grouping and "
+                         "the shedding ladder's victim key)")
     sb.add_argument("--n-iterations", type=int, default=1)
     sb.add_argument("--start", action="store_true")
     sb.add_argument("--stop-after-s", type=float, default=None)
@@ -410,7 +425,8 @@ def main(argv=None) -> int:
             device_segments_ms=[(args.misc_ms, args.exec_ms)],
             period_ms=args.period_ms, priority=args.priority,
             cpu=args.cpu, deadline_ms=args.deadline_ms,
-            best_effort=args.best_effort, device=args.device)
+            best_effort=args.best_effort, device=args.device,
+            tier=args.tier)
         dec = client.submit(
             prof,
             workload_spec={"name": args.workload,

@@ -55,11 +55,13 @@ import warnings
 from typing import TYPE_CHECKING, Dict, List, Mapping, Optional, Sequence, Union
 
 from ..core.policy import LEGACY_MODES
-from .admission import AdmissionController, AdmissionDecision, JobProfile
-from .elastic import ShedPolicy, can_resume, plan_shedding
+from .admission import (AdmissionController, AdmissionDecision, JobProfile,
+                        nearest_rank)
+from .elastic import (ShedPolicy, can_resume, plan_shedding,
+                      profile_utilization, tier_of, tier_utilization)
 from .executor import DeviceExecutor, ExecutorTrace
 from .fault import FAILED, DeviceHealth, HealthConfig
-from .job import RTJob
+from .job import BEST_EFFORT, RTJob
 
 if TYPE_CHECKING:  # pragma: no cover
     from .store import JobStore
@@ -122,7 +124,7 @@ class ClusterExecutor:
             # the executors may have coerced wait_mode (kthread forces
             # busy); price admission with the mode actually enforced
             admission = AdmissionController(
-                mode=names[0], wait_mode=self.executors[0].wait_mode,
+                policy=names[0], wait_mode=self.executors[0].wait_mode,
                 n_cpus=n_cpus, epsilon_ms=epsilon_ms,
                 try_gpu_priorities=try_gpu_priorities,
                 n_devices=n_devices)
@@ -499,7 +501,8 @@ class ClusterExecutor:
         if pol is None:
             return []
         victims = [v for v in plan_shedding(
-            self.admission.on_device(device), pol.shed_at)
+            self.admission.on_device(device), pol.shed_at,
+            tier_budgets=pol.tier_budgets)
             if v.name != exclude]
         for v in victims:
             self._shed_job_locked(v, f"overload on device {device}: "
@@ -537,7 +540,8 @@ class ClusterExecutor:
                 cand = (prof if prof.device == dev
                         else dataclasses.replace(prof, device=dev))
                 if not can_resume(cand, self.admission.on_device(dev),
-                                  pol.resume_at):
+                                  pol.resume_at,
+                                  tier_budgets=pol.tier_budgets):
                     continue
                 dec = self.admission.try_admit(cand)
                 if dec["admitted"]:
@@ -647,9 +651,82 @@ class ClusterExecutor:
                 out[d] = m
         return out
 
+    def per_model_stats(self) -> Dict[str, dict]:
+        """Per-job observability, keyed by job name: binding, tier,
+        criticality, release/completion/deadline-miss counts, and the
+        response-time tail (MORT + nearest-rank p50/p99, ms).  ``None``
+        latency fields before the first completion — an idle model must
+        not read as a 0 ms tail (same rule as ``JobStats.mort``)."""
+        profs = {p.name: p for p in self.admission.admitted}
+        out: Dict[str, dict] = {}
+        for job in list(self._jobs):
+            p = profs.get(job.name)
+            st = job.stats
+            rts = sorted(st.response_times)
+            out[job.name] = {
+                "device": self._bindings.get(job.uid, job.device),
+                "tier": tier_of(p) if p is not None else 0,
+                "best_effort": (p.best_effort if p is not None
+                                else job.priority == BEST_EFFORT),
+                "utilization": (profile_utilization(p)
+                                if p is not None else None),
+                "releases": st.releases,
+                "completions": st.completions,
+                "deadline_misses": st.deadline_misses,
+                "mort_ms": rts[-1] * 1e3 if rts else None,
+                "p50_ms": nearest_rank(rts, 0.50) * 1e3 if rts else None,
+                "p99_ms": nearest_rank(rts, 0.99) * 1e3 if rts else None,
+            }
+        return out
+
+    def per_tier_stats(self) -> Dict[int, dict]:
+        """Tier-level rollup of :meth:`per_model_stats`: job names,
+        pooled response-time tail, summed miss/completion counts, the
+        tier's admitted utilization (total and the budgeted best-effort
+        share), and — when a :class:`ShedPolicy` with tier budgets is
+        armed — the tier's per-device budget.  Tiers appear once any
+        admitted profile or live job carries them."""
+        per_model = self.per_model_stats()
+        pooled: Dict[int, List[float]] = {}
+        rows: Dict[int, dict] = {}
+        for job in list(self._jobs):
+            m = per_model.get(job.name)
+            if m is None:
+                continue
+            t = m["tier"]
+            row = rows.setdefault(t, {
+                "jobs": [], "releases": 0, "completions": 0,
+                "deadline_misses": 0})
+            row["jobs"].append(job.name)
+            row["releases"] += m["releases"]
+            row["completions"] += m["completions"]
+            row["deadline_misses"] += m["deadline_misses"]
+            pooled.setdefault(t, []).extend(job.stats.response_times)
+        util_all = tier_utilization(self.admission.admitted,
+                                    best_effort_only=False)
+        util_be = tier_utilization(self.admission.admitted)
+        for t in util_all:
+            rows.setdefault(t, {"jobs": [], "releases": 0,
+                                "completions": 0, "deadline_misses": 0})
+        pol = self.shed_policy
+        for t, row in rows.items():
+            rts = sorted(pooled.get(t, []))
+            row["jobs"] = sorted(row["jobs"])
+            row["utilization"] = util_all.get(t, 0.0)
+            row["be_utilization"] = util_be.get(t, 0.0)
+            row["budget"] = pol.budget_for(t) if pol is not None else None
+            row["mort_ms"] = rts[-1] * 1e3 if rts else None
+            row["p50_ms"] = (nearest_rank(rts, 0.50) * 1e3
+                             if rts else None)
+            row["p99_ms"] = (nearest_rank(rts, 0.99) * 1e3
+                             if rts else None)
+        return rows
+
     def stats(self) -> dict:
         return {
             "per_device_mort": self.per_device_mort(),
+            "per_model": self.per_model_stats(),
+            "per_tier": self.per_tier_stats(),
             "dispatches": {d: ex.dispatches
                            for d, ex in enumerate(self.executors)},
             "updates": {d: len(ex.update_times)

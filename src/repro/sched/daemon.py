@@ -447,6 +447,11 @@ def main(argv=None) -> int:
     ap.add_argument("--resume-at", type=float, default=None,
                     help="utilization under which shed jobs resume "
                          "(default: 0.8 * shed-at)")
+    ap.add_argument("--tier-budget", action="append", default=[],
+                    metavar="TIER=FRAC",
+                    help="per-tier best-effort utilization budget "
+                         "(repeatable, e.g. --tier-budget 0=0.2; "
+                         "needs --shed-at)")
     ap.add_argument("--heartbeat-file", default=None,
                     help="liveness beacon touched every loop turn "
                          "(sched.supervisor watches its mtime)")
@@ -457,10 +462,16 @@ def main(argv=None) -> int:
     health = (HealthConfig(stall_timeout_s=args.health_stall_s,
                            fail_timeout_s=args.health_fail_s)
               if args.health else None)
+    if args.tier_budget and args.shed_at is None:
+        ap.error("--tier-budget needs --shed-at (the budgets refine "
+                 "the overload ladder)")
+    budgets = {int(t): float(b) for t, b in
+               (spec.split("=", 1) for spec in args.tier_budget)} or None
     shed = (ShedPolicy(shed_at=args.shed_at,
                        resume_at=(args.resume_at
                                   if args.resume_at is not None
-                                  else 0.8 * args.shed_at))
+                                  else 0.8 * args.shed_at),
+                       tier_budgets=budgets)
             if args.shed_at is not None else None)
     auto_compact = (CompactionPolicy(max_bytes=args.auto_compact_bytes)
                     if args.auto_compact_bytes is not None else None)

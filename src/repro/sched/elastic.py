@@ -33,7 +33,8 @@ degrades gracefully instead of falling over:
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import TYPE_CHECKING, Any, Iterable, List, Tuple
+from typing import (TYPE_CHECKING, Any, Dict, Iterable, List, Mapping,
+                    Optional, Tuple)
 
 import jax
 
@@ -57,15 +58,42 @@ class ShedPolicy:
     ``shed_at``: shedding starts when total utilization would exceed
     this after the arriving job is admitted.  ``resume_at``: a shed job
     is re-admitted only while total utilization with it included stays
-    at or under this (hysteresis — must be < ``shed_at``)."""
+    at or under this (hysteresis — must be < ``shed_at``).
+
+    ``tier_budgets`` (optional) refines the ladder per criticality
+    tier: ``{tier: budget}`` caps the *best-effort* utilization each
+    tier may hold on one device, enforced before the global threshold
+    — a runaway low tier is trimmed to its budget even while the
+    device as a whole still fits, so a burst of tier-0 batch work
+    cannot crowd out tier-1 background jobs the way a single global
+    threshold allows.  Tiers without an entry are uncapped below the
+    global thresholds.  RT demand is never budgeted here: the
+    analytical admission gate (headroom + RTA) is the authority on RT
+    capacity."""
     shed_at: float = 1.0
     resume_at: float = 0.8
+    tier_budgets: Optional[Mapping[int, float]] = None
 
     def __post_init__(self):
         if not (0.0 < self.resume_at < self.shed_at):
             raise ValueError(
                 f"need 0 < resume_at < shed_at, got resume_at="
                 f"{self.resume_at:g}, shed_at={self.shed_at:g}")
+        if self.tier_budgets is not None:
+            budgets = {int(t): float(b)
+                       for t, b in dict(self.tier_budgets).items()}
+            for t, b in budgets.items():
+                if not (0.0 < b):
+                    raise ValueError(f"tier {t} budget must be > 0, "
+                                     f"got {b:g}")
+            object.__setattr__(self, "tier_budgets", budgets)
+
+    def budget_for(self, tier: int) -> Optional[float]:
+        """The best-effort utilization cap of ``tier`` on one device,
+        or None when the tier is uncapped."""
+        if self.tier_budgets is None:
+            return None
+        return self.tier_budgets.get(int(tier))
 
 
 def profile_utilization(prof: "JobProfile") -> float:
@@ -73,26 +101,67 @@ def profile_utilization(prof: "JobProfile") -> float:
     return sum(m + e for m, e in prof.device_segments_ms) / prof.period_ms
 
 
+def tier_of(prof: "JobProfile") -> int:
+    """A profile's criticality tier (0 for profiles predating the tier
+    field, e.g. journaled before it existed)."""
+    return int(getattr(prof, "tier", 0) or 0)
+
+
+def tier_utilization(profs: Iterable["JobProfile"],
+                     best_effort_only: bool = True
+                     ) -> Dict[int, float]:
+    """Per-tier Σ utilization over ``profs`` — by default best-effort
+    demand only (the quantity the tier budgets cap)."""
+    out: Dict[int, float] = {}
+    for p in profs:
+        if best_effort_only and not p.best_effort:
+            continue
+        t = tier_of(p)
+        out[t] = out.get(t, 0.0) + profile_utilization(p)
+    return out
+
+
 def shed_order(profs: Iterable["JobProfile"]) -> List["JobProfile"]:
     """Victim order of the degradation ladder: best-effort only, lowest
-    tier (priority) first, then largest demand first — each rung frees
-    the most capacity from the least valuable work."""
+    tier first, then largest demand first — each rung frees the most
+    capacity from the least valuable work.  (Priority and name are
+    deterministic later tie-breaks only.)"""
     return sorted((p for p in profs if p.best_effort),
-                  key=lambda p: (p.priority, -profile_utilization(p),
-                                 p.name))
+                  key=lambda p: (tier_of(p), -profile_utilization(p),
+                                 p.priority, p.name))
 
 
-def plan_shedding(profs: Iterable["JobProfile"], shed_at: float
+def plan_shedding(profs: Iterable["JobProfile"], shed_at: float,
+                  tier_budgets: Optional[Mapping[int, float]] = None
                   ) -> List["JobProfile"]:
-    """The victims to evict so Σ utilization over ``profs`` drops to
-    ``shed_at`` or below — fewest rungs first (the ladder stops as soon
-    as the device fits).  Returns [] when the device already fits, and
-    every best-effort profile when even that cannot fit (RT demand
-    alone exceeds the bound — shedding has done all it can; the RT
-    admission gate is the authority on whether that is acceptable)."""
+    """The victims to evict so the device fits again — fewest rungs
+    first (the ladder stops as soon as the device fits).
+
+    Two stacked conditions, both on one device's admitted profiles:
+
+      1. **per-tier budgets** (when given): each budgeted tier's
+         best-effort utilization is trimmed to its budget, largest
+         victim first within the tier;
+      2. **global threshold**: Σ utilization over what remains must
+         drop to ``shed_at`` or below.
+
+    Returns [] when the device already fits, and every best-effort
+    profile when even that cannot fit (RT demand alone exceeds the
+    bound — shedding has done all it can; the RT admission gate is the
+    authority on whether that is acceptable)."""
     profs = list(profs)
-    total = sum(profile_utilization(p) for p in profs)
     victims: List["JobProfile"] = []
+    if tier_budgets:
+        per_tier = tier_utilization(profs)
+        for p in shed_order(profs):
+            t = tier_of(p)
+            budget = dict(tier_budgets).get(t)
+            if budget is None or per_tier.get(t, 0.0) <= budget + 1e-9:
+                continue
+            victims.append(p)
+            per_tier[t] -= profile_utilization(p)
+        profs = [p for p in profs if p not in victims]
+    total = sum(profile_utilization(p) for p in profs)
     for p in shed_order(profs):
         if total <= shed_at + 1e-9:
             break
@@ -102,11 +171,27 @@ def plan_shedding(profs: Iterable["JobProfile"], shed_at: float
 
 
 def can_resume(prof: "JobProfile", live: Iterable["JobProfile"],
-               resume_at: float) -> bool:
+               resume_at: float,
+               tier_budgets: Optional[Mapping[int, float]] = None
+               ) -> bool:
     """Hysteretic re-admission check for one shed job against the
-    currently admitted profiles on its device."""
+    currently admitted profiles on its device: total utilization with
+    the candidate re-included must stay at or under ``resume_at``, and
+    (when the candidate's tier is budgeted) the tier's best-effort
+    utilization with it re-included must stay within its budget — or
+    the resume would immediately re-arm the ladder that shed it."""
+    live = list(live)
+    u = profile_utilization(prof)
     total = sum(profile_utilization(p) for p in live)
-    return total + profile_utilization(prof) <= resume_at + 1e-9
+    if total + u > resume_at + 1e-9:
+        return False
+    if tier_budgets and prof.best_effort:
+        budget = dict(tier_budgets).get(tier_of(prof))
+        if budget is not None:
+            held = tier_utilization(live).get(tier_of(prof), 0.0)
+            if held + u > budget + 1e-9:
+                return False
+    return True
 
 
 def state_shardings(cfg: ModelConfig, mesh, state_specs) -> Any:

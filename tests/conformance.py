@@ -47,7 +47,7 @@ from repro.core import Alg2State, GpuSegment, Task, Taskset, pick_reserved
 from repro.core.ioctl import IoctlPolicy
 from repro.core.kthread import KernelThreadPolicy
 from repro.core.simulator import Simulator
-from repro.sched import ClusterExecutor, JobProfile
+from repro.sched import ClusterExecutor, JobProfile, connect
 
 # one tick = 25 ms of wall time on the executor, 1 ms in the simulator
 TICK_S = 0.025
@@ -70,6 +70,7 @@ class JobSpec:
     device: int = 0
     offset: float = 0.0          # release offset in ticks
     best_effort: bool = False
+    tier: int = 0                # criticality tier (observability)
 
     @property
     def exec_ticks(self) -> float:
@@ -109,6 +110,42 @@ def contention_scenario(n_devices: int) -> List[JobSpec]:
         specs.append(JobSpec(
             f"hi{d}", priority=30 + d, device=d, offset=base + 8,
             segs=(SegSpec(1, (2, 2)),)))
+    return specs
+
+
+def fleet_scenario(n_devices: int = 2) -> List[JobSpec]:
+    """A mixed-criticality model fleet under bursty arrivals: per
+    device, two interactive "decode" RT models (tiers 2 and 1) whose
+    releases land in a burst, over background best-effort "train"
+    (tier 1) and "batch" (tier 0) models — the Sec. VII case study
+    scaled to a zoo.  Decision points stay ≥ 2 ticks apart within each
+    device (the harness's separation rule); devices are staggered."""
+    specs: List[JobSpec] = []
+    for d in range(n_devices):
+        base = 3 * d
+        # one background model per device (two concurrently draining
+        # best-effort segments on one device would race their end
+        # order against the simulator): train on even devices, batch
+        # inference on odd — tiers 1 and 0 both live fleet-wide
+        if d % 2 == 0:
+            specs.append(JobSpec(
+                f"train{d}", priority=5 + d, device=d, offset=base,
+                best_effort=True, tier=1,
+                segs=(SegSpec(1, (2, 2, 2, 2, 2, 2, 2, 2)),)))
+        else:
+            specs.append(JobSpec(
+                f"batch{d}", priority=1 + d, device=d, offset=base,
+                best_effort=True, tier=0,
+                segs=(SegSpec(1, (3, 3, 3, 3, 3)),)))
+        # the burst: both interactive models arrive 4 ticks apart; the
+        # lower-priority one still holds a full program when the high
+        # one drains, so the two RT ends stay well separated
+        specs.append(JobSpec(
+            f"chat{d}", priority=40 + d, device=d, offset=base + 8,
+            tier=2, segs=(SegSpec(1, (2, 2)),)))
+        specs.append(JobSpec(
+            f"assist{d}", priority=20 + d, device=d, offset=base + 4,
+            tier=1, segs=(SegSpec(1, (3, 3, 3)),)))
     return specs
 
 
@@ -160,7 +197,8 @@ def profile_of(spec: JobSpec, margin: float = 3.0,
         device_segments_ms=[(0.0, sum(s.programs) * margin)
                             for s in spec.segs],
         period_ms=period_ticks, priority=spec.priority,
-        cpu=0, best_effort=spec.best_effort, device=spec.device)
+        cpu=0, best_effort=spec.best_effort, device=spec.device,
+        tier=spec.tier)
 
 
 def run_executor(specs: List[JobSpec], policy: str, wait_mode: str,
@@ -174,12 +212,13 @@ def run_executor(specs: List[JobSpec], policy: str, wait_mode: str,
         n_devices=n_devices, policy=policy, wait_mode=wait_mode,
         n_cpus=len(specs) + 1, epsilon_ms=0.5, trace=True,
         poll_interval=0.002)
+    client = connect(cluster)   # the unified facade (DESIGN.md §9)
     jobs: Dict[str, object] = {}
     wcrt: Dict[str, float] = {}
     for i, s in enumerate(specs):
         prof = profile_of(s, margin)
         prof.cpu = i % cluster.admission.n_cpus
-        res = cluster.submit(prof, body=_body(cluster, s))
+        res = client.submit(prof, body=_body(cluster, s))
         assert res["admitted"], (s.name, res)
         jobs[s.name] = res["job"]
         if not s.best_effort:

@@ -55,7 +55,7 @@ def _mixed_burst():
 # --------------------------------------------------------------------------
 
 def test_headroom_refuses_core_overload_without_rta():
-    ctl = AdmissionController(mode="ioctl", wait_mode="suspend")
+    ctl = AdmissionController(policy="ioctl", wait_mode="suspend")
     over = _prof(0, host_segments_ms=[12.0], period_ms=10.0)
     res = ctl.try_admit(over)
     assert not res["admitted"]
@@ -67,7 +67,7 @@ def test_headroom_refuses_core_overload_without_rta():
 
 
 def test_headroom_refuses_device_overload():
-    ctl = AdmissionController(mode="ioctl", wait_mode="suspend")
+    ctl = AdmissionController(policy="ioctl", wait_mode="suspend")
     over = _prof(0, host_segments_ms=[0.5],
                  device_segments_ms=[(0.1, 11.0)], period_ms=10.0)
     res = ctl.try_admit(over)
@@ -77,14 +77,14 @@ def test_headroom_refuses_device_overload():
 
 def test_headroom_exempts_best_effort():
     """BE jobs carry no guarantee, so the gate must not refuse them."""
-    ctl = AdmissionController(mode="ioctl", wait_mode="suspend")
+    ctl = AdmissionController(policy="ioctl", wait_mode="suspend")
     over = _prof(0, host_segments_ms=[12.0], period_ms=10.0,
                  best_effort=True)
     assert ctl.try_admit(over)["via"] == "best_effort"
 
 
 def test_headroom_violation_reports_per_core_and_device():
-    ctl = AdmissionController(mode="ioctl", wait_mode="suspend")
+    ctl = AdmissionController(policy="ioctl", wait_mode="suspend")
     ts = ctl._taskset(_prof(0, host_segments_ms=[11.0], period_ms=10.0))
     assert "core 0" in headroom_violation(ts, 1.0)
     assert headroom_violation(ts, 2.0) is None  # slack widens the gate
@@ -95,8 +95,8 @@ def test_headroom_gate_is_sound(wait_mode):
     """At headroom=1.0 the gate is a pure fast path: a controller with
     the gate and one with it disabled (headroom=inf, so only the RTA
     decides) admit exactly the same stream."""
-    gated = AdmissionController(mode="ioctl", wait_mode=wait_mode)
-    ungated = AdmissionController(mode="ioctl", wait_mode=wait_mode,
+    gated = AdmissionController(policy="ioctl", wait_mode=wait_mode)
+    ungated = AdmissionController(policy="ioctl", wait_mode=wait_mode,
                                   headroom=math.inf)
     saw_gate_refusal = False
     for i in range(18):
@@ -117,8 +117,8 @@ def test_headroom_gate_is_sound(wait_mode):
 @pytest.mark.parametrize("backend", BACKENDS)
 @pytest.mark.parametrize("wait_mode", ["busy", "suspend"])
 def test_burst_matches_sequential(wait_mode, backend):
-    seq = AdmissionController(mode="ioctl", wait_mode=wait_mode)
-    bat = AdmissionController(mode="ioctl", wait_mode=wait_mode)
+    seq = AdmissionController(policy="ioctl", wait_mode=wait_mode)
+    bat = AdmissionController(policy="ioctl", wait_mode=wait_mode)
     profs = _mixed_burst()
     rs = [seq.try_admit(p) for p in profs]
     rb = bat.try_admit_many(profs, backend=backend)
@@ -142,8 +142,8 @@ def test_burst_audsley_retry_matches_sequential():
     """A burst whose tail only clears via GPU-priority reassignment
     still matches: the first RM refusal drops to the sequential path
     (Audsley retry included) and the remainder re-batches."""
-    seq = AdmissionController(mode="ioctl", wait_mode="suspend")
-    bat = AdmissionController(mode="ioctl", wait_mode="suspend")
+    seq = AdmissionController(policy="ioctl", wait_mode="suspend")
+    bat = AdmissionController(policy="ioctl", wait_mode="suspend")
     profs = [_prof(i, period_ms=30.0, host_segments_ms=[2.0],
                    device_segments_ms=[(0.3, 5.0)], cpu=i % 2)
              for i in range(8)]
@@ -157,7 +157,7 @@ def test_burst_audsley_retry_matches_sequential():
 def test_burst_non_batch_rta_falls_back():
     """Approaches without a vectorized kind take the sequential path
     transparently (same results, no error)."""
-    ctl = AdmissionController(mode="ioctl", wait_mode="suspend")
+    ctl = AdmissionController(policy="ioctl", wait_mode="suspend")
     ctl.rta = lambda ts, **kw: {t.name: 1.0 for t in ts.tasks}  # untagged
     profs = [_prof(i) for i in range(3)]
     res = ctl.try_admit_many(profs)

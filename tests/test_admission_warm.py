@@ -59,7 +59,7 @@ def _pair(rta):
     """A (warm, cold) controller pair under the same platform config."""
     ctls = []
     for warm in (True, False):
-        c = AdmissionController(mode="ioctl", wait_mode="suspend",
+        c = AdmissionController(policy="ioctl", wait_mode="suspend",
                                 n_cpus=4, warm_start=warm)
         c.rta = rta  # exercise all five kinds through one config
         ctls.append(c)
@@ -161,7 +161,7 @@ def test_release_never_leaves_stale_seeds():
     point (the unsound direction), so reusing them could under-admit or
     (worse) hand out wrong WCRT evidence."""
     rng = random.Random(7)
-    ctl = AdmissionController(mode="ioctl", wait_mode="suspend",
+    ctl = AdmissionController(policy="ioctl", wait_mode="suspend",
                               n_cpus=4, warm_start=True)
     profs = [_prof(i, rng) for i in range(8)]
     for p in profs:
@@ -171,7 +171,7 @@ def test_release_never_leaves_stale_seeds():
     assert ctl.release(released)
     assert ctl._warm is None  # the pinned invalidation
 
-    fresh = AdmissionController(mode="ioctl", wait_mode="suspend",
+    fresh = AdmissionController(policy="ioctl", wait_mode="suspend",
                                 n_cpus=4, warm_start=True)
     for p in ctl.admitted:
         assert fresh.try_admit(p)["admitted"]
@@ -183,7 +183,7 @@ def test_best_effort_paths_keep_warm_cache():
     """BE tasks never enter the RT recurrences: admitting or releasing
     one must not throw away converged RT bounds."""
     rng = random.Random(11)
-    ctl = AdmissionController(mode="ioctl", wait_mode="suspend",
+    ctl = AdmissionController(policy="ioctl", wait_mode="suspend",
                               n_cpus=4, warm_start=True)
     for i in range(4):
         assert ctl.try_admit(_prof(i, rng))["admitted"]
@@ -197,13 +197,38 @@ def test_best_effort_paths_keep_warm_cache():
 
 def test_latency_summary_tracks_decisions():
     rng = random.Random(13)
-    ctl = AdmissionController(mode="ioctl", wait_mode="suspend", n_cpus=4)
+    ctl = AdmissionController(policy="ioctl", wait_mode="suspend", n_cpus=4)
     assert ctl.latency_summary()["decisions"] == 0
     ctl.try_admit_many([_prof(i, rng) for i in range(5)])
     s = ctl.latency_summary()
     assert s["decisions"] == 5
     for key in ("mean_ms", "p50_ms", "p99_ms", "max_ms"):
         assert s[key] >= 0.0
+
+
+def test_latency_summary_p99_is_nearest_rank_not_max():
+    """The pinned percentile bug: on a 100-sample window the naive
+    ``int(q*n)`` index returned the window *maximum* for p99.  With
+    nearest-rank (``ceil(q*n) - 1``) the p99 of 1..100 ms is the 99th
+    element, strictly below the max."""
+    from repro.sched.admission import nearest_rank
+
+    ctl = AdmissionController(policy="ioctl", wait_mode="suspend", n_cpus=4)
+    window = [float(i) for i in range(1, 101)]
+    shuffled = list(window)
+    random.Random(7).shuffle(shuffled)
+    ctl._latencies.clear()
+    ctl._latencies.extend(shuffled)
+    s = ctl.latency_summary()
+    assert s["window"] == 100
+    assert s["max_ms"] == 100.0
+    assert s["p99_ms"] == 99.0          # not the max
+    assert s["p50_ms"] == 50.0
+    # the helper itself, on edge cases
+    assert nearest_rank([5.0], 0.99) == 5.0
+    assert nearest_rank([1.0, 2.0], 0.5) == 1.0
+    with pytest.raises(ValueError):
+        nearest_rank([], 0.5)
 
 
 # --------------------------------------------------------------------------

@@ -98,6 +98,16 @@ def test_device_executor_mode_kwarg_warns_but_works():
     ex.shutdown()
 
 
+def test_admission_controller_mode_kwarg_warns_but_works():
+    from repro.sched.admission import AdmissionController
+    with pytest.warns(DeprecationWarning, match="policy"):
+        ac = AdmissionController(mode="poll", wait_mode="busy")
+    assert ac.policy == "kthread"       # legacy name still resolves
+    assert ac.mode == "kthread"         # read-only alias survives
+    with pytest.raises(ValueError, match="alone"):
+        AdmissionController(policy="ioctl", mode="ioctl")
+
+
 def test_facade_submit_does_not_warn():
     with connect(n_devices=1) as client:
         with warnings.catch_warnings():

@@ -46,7 +46,7 @@ def test_kthread_cluster_coerces_admission_wait_mode():
 def test_heterogeneous_policies_need_explicit_admission():
     with pytest.raises(ValueError, match="heterogeneous"):
         ClusterExecutor(n_devices=2, policy=["ioctl", "kthread"])
-    ac = AdmissionController(mode="ioctl", wait_mode="busy", n_devices=2)
+    ac = AdmissionController(policy="ioctl", wait_mode="busy", n_devices=2)
     cl = ClusterExecutor(n_devices=2, policy=["ioctl", "kthread"],
                          wait_mode="busy", admission=ac)
     assert cl.executors[1].policy.name == "kthread"
@@ -54,7 +54,7 @@ def test_heterogeneous_policies_need_explicit_admission():
 
 
 def test_admission_device_count_must_match():
-    ac = AdmissionController(mode="ioctl", n_devices=3)
+    ac = AdmissionController(policy="ioctl", n_devices=3)
     with pytest.raises(ValueError, match="models 3 devices"):
         ClusterExecutor(n_devices=2, policy="ioctl", admission=ac)
 
@@ -65,7 +65,7 @@ def test_admission_device_count_must_match():
 
 def test_pinned_placement_honors_profile_device():
     cl = ClusterExecutor(n_devices=2, policy="ioctl", n_cpus=2)
-    r = cl.submit(prof("a", 20, device=1), body=lambda j, i: None)
+    r = cl._submit(prof("a", 20, device=1), body=lambda j, i: None)
     assert r["admitted"] and r["device"] == 1
     assert r["job"].device == 1
     cl.shutdown()
@@ -74,7 +74,7 @@ def test_pinned_placement_honors_profile_device():
 def test_round_robin_spreads_and_wraps():
     cl = ClusterExecutor(n_devices=2, policy="ioctl", n_cpus=4,
                          placement="round_robin")
-    devs = [cl.submit(prof(f"j{i}", 20 - i, cpu=i % 4),
+    devs = [cl._submit(prof(f"j{i}", 20 - i, cpu=i % 4),
                       body=lambda j, i: None)["device"]
             for i in range(4)]
     assert devs == [0, 1, 0, 1]
@@ -84,8 +84,8 @@ def test_round_robin_spreads_and_wraps():
 def test_least_loaded_prefers_empty_device():
     cl = ClusterExecutor(n_devices=2, policy="ioctl", n_cpus=2,
                          placement="least_loaded")
-    a = cl.submit(prof("a", 20, exec_ms=20.0), body=lambda j, i: None)
-    b = cl.submit(prof("b", 19, exec_ms=4.0, cpu=1),
+    a = cl._submit(prof("a", 20, exec_ms=20.0), body=lambda j, i: None)
+    b = cl._submit(prof("b", 19, exec_ms=4.0, cpu=1),
                   body=lambda j, i: None)
     assert a["device"] == 0 and b["device"] == 1
     cl.shutdown()
@@ -102,14 +102,14 @@ def test_placement_retries_next_candidate_when_admission_refuses():
     # utilization-wise device 0 still looks *less* loaded than what b
     # brings, so least_loaded tries device 0 first — and must fall
     # through to device 1 on the RTA refusal
-    a = cl.submit(prof("a", 20, device=0, exec_ms=30.0, period_ms=100.0),
+    a = cl._submit(prof("a", 20, device=0, exec_ms=30.0, period_ms=100.0),
                   strategy="pinned", body=lambda j, i: None)
     assert a["admitted"]
-    b = cl.submit(prof("b", 30, exec_ms=80.0, period_ms=100.0, cpu=1),
+    b = cl._submit(prof("b", 30, exec_ms=80.0, period_ms=100.0, cpu=1),
                   body=lambda j, i: None)
     assert b["admitted"] and b["device"] == 1
     # with both devices refusing, the submit reports the last refusal
-    c = cl.submit(prof("c", 10, exec_ms=90.0, period_ms=100.0, cpu=1),
+    c = cl._submit(prof("c", 10, exec_ms=90.0, period_ms=100.0, cpu=1),
                   body=lambda j, i: None)
     assert not c["admitted"] and c["device"] is None and c["job"] is None
     cl.shutdown()
@@ -117,7 +117,7 @@ def test_placement_retries_next_candidate_when_admission_refuses():
 
 def test_rejected_submit_leaves_no_state():
     cl = ClusterExecutor(n_devices=1, policy="ioctl", n_cpus=1)
-    r = cl.submit(prof("x", 10, exec_ms=500.0, period_ms=50.0),
+    r = cl._submit(prof("x", 10, exec_ms=500.0, period_ms=50.0),
                   body=lambda j, i: None)
     assert not r["admitted"]
     assert cl.admission.admitted == []
@@ -128,7 +128,7 @@ def test_rejected_submit_leaves_no_state():
 def test_submit_requires_exactly_one_of_workload_and_body():
     cl = ClusterExecutor(n_devices=1, policy="ioctl")
     with pytest.raises(ValueError, match="exactly one"):
-        cl.submit(prof("x", 10))
+        cl._submit(prof("x", 10))
     cl.shutdown()
 
 
@@ -147,9 +147,9 @@ def test_submitted_jobs_run_where_placed():
                 cl.run(job, lambda: ran.setdefault(tag, job.device))
         return body
 
-    r0 = cl.submit(prof("a", 20, device=0), body=body_for("a"),
+    r0 = cl._submit(prof("a", 20, device=0), body=body_for("a"),
                    start=True)
-    r1 = cl.submit(prof("b", 19, device=1, cpu=1), body=body_for("b"),
+    r1 = cl._submit(prof("b", 19, device=1, cpu=1), body=body_for("b"),
                    start=True)
     cl.join(10)
     cl.shutdown()
@@ -201,13 +201,13 @@ def test_boundary_device_busy_admission_live(policy, n_devices):
         with cl.device_segment(job):
             cl.run(job, lambda: done.append(job.device))
 
-    r = cl.submit(prof("edge", 20, device=boundary), body=body,
+    r = cl._submit(prof("edge", 20, device=boundary), body=body,
                   start=True)
     assert r["admitted"], r
     assert r["device"] == boundary
     assert r["wcrt"].get("edge") is not None
     # a second job on device 0 exercises the cross-device fold
-    r2 = cl.submit(prof("other", 19, device=0, cpu=1),
+    r2 = cl._submit(prof("other", 19, device=0, cpu=1),
                    body=body, start=True)
     assert r2["admitted"], r2
     cl.join(10)
@@ -222,7 +222,7 @@ def test_try_admit_refuses_instead_of_crashing():
     refusals; raising would take down the gatekeeper, and the best-effort
     fast path used to append unvalidated profiles that poisoned every
     later admission check."""
-    ac = AdmissionController(mode="ioctl", wait_mode="busy", n_cpus=2,
+    ac = AdmissionController(policy="ioctl", wait_mode="busy", n_cpus=2,
                              epsilon_ms=0.5, n_devices=2)
     assert ac.try_admit(prof("a", 20, device=1))["admitted"]
     # colliding priority -> refusal, not ValueError
@@ -256,16 +256,16 @@ def test_cluster_release_allows_resubmission():
         with cl.device_segment(job):
             cl.run(job, lambda: None)
 
-    r1 = cl.submit(prof("req", 20, device=0, exec_ms=30.0,
+    r1 = cl._submit(prof("req", 20, device=0, exec_ms=30.0,
                         period_ms=100.0),
                    body=body, start=True)
     assert r1["admitted"]
     r1["job"].join(10)
     # same name refused while still admitted
-    assert not cl.submit(prof("req", 19, device=1),
+    assert not cl._submit(prof("req", 19, device=1),
                          body=body)["admitted"]
     assert cl.release("req")
-    r2 = cl.submit(prof("req", 19, device=1), body=body, start=True)
+    r2 = cl._submit(prof("req", 19, device=1), body=body, start=True)
     assert r2["admitted"] and r2["device"] == 1
     r2["job"].join(10)
     assert r1["job"].stats.completions == 1
@@ -277,7 +277,7 @@ def test_cluster_release_allows_resubmission():
 
 
 def test_admission_release_frees_capacity():
-    ac = AdmissionController(mode="ioctl", wait_mode="suspend", n_cpus=1,
+    ac = AdmissionController(policy="ioctl", wait_mode="suspend", n_cpus=1,
                              epsilon_ms=0.5, n_devices=1)
     assert ac.try_admit(prof("big", 20, exec_ms=30.0))["admitted"]
     refused = ac.try_admit(prof("big2", 10, exec_ms=30.0))

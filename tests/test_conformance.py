@@ -56,6 +56,48 @@ def test_two_device_isolation_pinned(policy, wait_mode):
     assert len(tr1.of("preempt")) >= 1
 
 
+@pytest.mark.parametrize("policy,wait_mode", [("ioctl", "suspend"),
+                                              ("kthread", "busy")],
+                         ids=["ioctl", "kthread"])
+def test_fleet_scenario_mixed_criticality(policy, wait_mode):
+    """The multi-model fleet pin: per device, two interactive RT
+    'models' arriving in a burst over tier-1/tier-0 best-effort
+    background work.  check_all asserts MORT ≤ admitted WCRT for every
+    RT model and priority-inversion-freedom (best-effort never blocks
+    RT) from the traces; on top, the per-model/per-tier stats surface
+    must report every model under its tier with a coherent tail."""
+    n_devices = 2
+    run = C.run_executor(C.fleet_scenario(n_devices), policy,
+                         wait_mode, n_devices)
+    counts = C.check_all(run)
+    assert counts["wcrt_bounds"] == 2 * n_devices   # every RT model
+    per_model = run.cluster.per_model_stats()
+    per_tier = run.cluster.per_tier_stats()
+    assert {0, 1, 2} <= set(per_tier)
+    tick_ms = C.TICK_S * 1e3
+    for s in run.specs:
+        m = per_model[s.name]
+        assert m["tier"] == s.tier
+        assert m["best_effort"] == s.best_effort
+        assert m["completions"] >= 1
+        assert s.name in per_tier[s.tier]["jobs"]
+        # the stats surface re-states invariant 4 per model: observed
+        # tail (ms -> ticks) within the admitted WCRT bound
+        if not s.best_effort:
+            assert m["deadline_misses"] == 0
+            assert m["mort_ms"] is not None
+            assert (m["mort_ms"] / tick_ms
+                    <= run.wcrt_ticks[s.name] + 1e-9)
+            assert m["p50_ms"] <= m["p99_ms"] <= m["mort_ms"]
+    for t, row in per_tier.items():
+        assert row["completions"] >= 1
+        if row["p99_ms"] is not None:
+            assert row["p99_ms"] <= row["mort_ms"] + 1e-9
+    # tier rollup counts match the models under it
+    assert per_tier[2]["jobs"] == sorted(
+        s.name for s in run.specs if s.tier == 2)
+
+
 def test_kthread_stale_reservation_window_regression():
     """After the reserved job completes, nothing may dispatch until the
     scheduler thread's next rewrite (Algorithm 1: runlists are only
@@ -139,7 +181,7 @@ def test_executor_trace_smoke_single_executor():
     from repro.sched import DeviceExecutor, ExecutorTrace
 
     tr = ExecutorTrace()
-    ex = DeviceExecutor(mode="notify", wait_mode="suspend", trace=tr)
+    ex = DeviceExecutor(policy="ioctl", wait_mode="suspend", trace=tr)
     done = []
 
     def body(job, it):

@@ -1,0 +1,231 @@
+"""Properties of the multi-tier degradation ladder (DESIGN.md §10/§12):
+victim ordering, per-tier budget accounting, and the hysteresis
+invariant that resuming a shed job can never re-arm the ladder that
+shed it.  Property tests run under hypothesis when installed
+(``pip install .[test]``); the seeded-random sweeps always run.
+"""
+import random
+
+import pytest
+
+from repro.sched.admission import JobProfile
+from repro.sched.elastic import (ShedPolicy, can_resume, plan_shedding,
+                                 profile_utilization, shed_order,
+                                 tier_of, tier_utilization)
+
+from _optional import HAVE_HYPOTHESIS, given, settings, st
+
+
+def _prof(name: str, util: float, *, tier: int = 0,
+          best_effort: bool = True, priority: int = 0,
+          period_ms: float = 100.0) -> JobProfile:
+    """A profile with exact device utilization ``util``."""
+    return JobProfile(
+        name=name, host_segments_ms=[0.1],
+        device_segments_ms=[(0.0, util * period_ms)],
+        period_ms=period_ms, priority=priority,
+        best_effort=best_effort, tier=tier)
+
+
+def _random_profs(rng: random.Random, n: int):
+    return [
+        _prof(f"p{i}", round(rng.uniform(0.02, 0.4), 3),
+              tier=rng.randrange(3),
+              best_effort=(rng.random() < 0.7),
+              priority=rng.randrange(50))
+        for i in range(n)
+    ]
+
+
+# --------------------------------------------------------------------------
+# victim ordering
+# --------------------------------------------------------------------------
+
+def test_shed_order_pinned_tie_break_direction():
+    """Lowest tier first; within a tier, largest utilization first —
+    the ladder frees the most capacity from the least valuable work."""
+    profs = [
+        _prof("t2-big", 0.5, tier=2),
+        _prof("t0-small", 0.1, tier=0),
+        _prof("t0-big", 0.4, tier=0),
+        _prof("t1-mid", 0.3, tier=1),
+        _prof("rt", 0.9, tier=0, best_effort=False),  # never a victim
+    ]
+    assert [p.name for p in shed_order(profs)] == [
+        "t0-big", "t0-small", "t1-mid", "t2-big"]
+
+
+def test_shed_order_equal_tier_and_util_breaks_on_priority_then_name():
+    profs = [
+        _prof("b", 0.2, tier=1, priority=5),
+        _prof("a", 0.2, tier=1, priority=5),
+        _prof("c", 0.2, tier=1, priority=1),
+    ]
+    assert [p.name for p in shed_order(profs)] == ["c", "a", "b"]
+
+
+def test_shed_order_excludes_rt_seeded():
+    for seed in range(20):
+        rng = random.Random(seed)
+        profs = _random_profs(rng, rng.randrange(1, 12))
+        order = shed_order(profs)
+        assert all(p.best_effort for p in order)
+        keys = [(tier_of(p), -profile_utilization(p), p.priority, p.name)
+                for p in order]
+        assert keys == sorted(keys)
+
+
+# --------------------------------------------------------------------------
+# per-tier budget accounting
+# --------------------------------------------------------------------------
+
+def _check_budget_accounting(profs, shed_at, budgets):
+    victims = plan_shedding(profs, shed_at, tier_budgets=budgets)
+    names = {p.name for p in victims}
+    assert len(names) == len(victims)           # no double eviction
+    assert all(p.best_effort for p in victims)  # RT is never shed
+    survivors = [p for p in profs if p.name not in names]
+    # every budgeted tier's surviving best-effort demand fits its
+    # budget — unless the tier is empty of best-effort work entirely
+    surv_be = tier_utilization(survivors)
+    for t, budget in (budgets or {}).items():
+        assert surv_be.get(t, 0.0) <= budget + 1e-9
+    # the global ladder: survivors fit shed_at, or no best-effort work
+    # is left to shed (RT alone exceeds the bound)
+    total = sum(profile_utilization(p) for p in survivors)
+    if total > shed_at + 1e-9:
+        assert not [p for p in survivors if p.best_effort]
+    return victims, survivors
+
+
+def test_plan_shedding_budget_trims_even_when_device_fits():
+    """The per-tier budget binds before the global threshold: a tier-0
+    burst is trimmed to its budget while total utilization is still
+    comfortably under shed_at."""
+    profs = [
+        _prof("bulk1", 0.2, tier=0),
+        _prof("bulk2", 0.15, tier=0),
+        _prof("bg", 0.1, tier=1),
+    ]
+    victims = plan_shedding(profs, shed_at=1.0,
+                            tier_budgets={0: 0.2})
+    # largest tier-0 victim first brings tier-0 from 0.35 to 0.15
+    assert [p.name for p in victims] == ["bulk1"]
+    # without budgets the device fits and nothing is shed
+    assert plan_shedding(profs, shed_at=1.0) == []
+
+
+def test_plan_shedding_budget_accounting_seeded():
+    for seed in range(40):
+        rng = random.Random(100 + seed)
+        profs = _random_profs(rng, rng.randrange(1, 14))
+        shed_at = rng.uniform(0.3, 1.5)
+        budgets = ({t: rng.uniform(0.05, 0.6)
+                    for t in range(3) if rng.random() < 0.5} or None)
+        _check_budget_accounting(profs, shed_at, budgets)
+
+
+@pytest.mark.skipif(not HAVE_HYPOTHESIS, reason="hypothesis extra")
+@settings(max_examples=80, deadline=None)
+@given(st.data())
+def test_plan_shedding_budget_accounting_property(data):
+    n = data.draw(st.integers(1, 14))
+    profs = [
+        _prof(f"p{i}",
+              data.draw(st.floats(0.02, 0.5)),
+              tier=data.draw(st.integers(0, 2)),
+              best_effort=data.draw(st.booleans()),
+              priority=data.draw(st.integers(0, 40)))
+        for i in range(n)
+    ]
+    shed_at = data.draw(st.floats(0.2, 1.6))
+    budgets = data.draw(st.one_of(
+        st.none(),
+        st.dictionaries(st.integers(0, 2), st.floats(0.05, 0.7),
+                        max_size=3)))
+    _check_budget_accounting(profs, shed_at, budgets or None)
+
+
+# --------------------------------------------------------------------------
+# hysteresis: resume never re-arms the ladder
+# --------------------------------------------------------------------------
+
+def test_shed_policy_validates_hysteresis_ordering():
+    with pytest.raises(ValueError, match="resume_at < shed_at"):
+        ShedPolicy(shed_at=0.8, resume_at=0.8)
+    with pytest.raises(ValueError, match="resume_at < shed_at"):
+        ShedPolicy(shed_at=0.5, resume_at=0.9)
+    with pytest.raises(ValueError, match="budget"):
+        ShedPolicy(shed_at=0.9, resume_at=0.7, tier_budgets={0: 0.0})
+    pol = ShedPolicy(shed_at=0.9, resume_at=0.7,
+                     tier_budgets={"1": "0.5"})
+    assert pol.budget_for(1) == 0.5     # keys/values normalized
+    assert pol.budget_for(0) is None
+
+
+def test_resume_never_retriggers_shed_seeded():
+    """The no-oscillation invariant across shed → resume → shed: any
+    job that passes ``can_resume`` keeps the device at or under
+    ``resume_at < shed_at``, so an immediately following shedding pass
+    has nothing to do."""
+    for seed in range(40):
+        rng = random.Random(200 + seed)
+        profs = _random_profs(rng, rng.randrange(2, 14))
+        shed_at = rng.uniform(0.3, 1.2)
+        resume_at = shed_at * rng.uniform(0.4, 0.95)
+        budgets = ({t: rng.uniform(0.05, 0.6)
+                    for t in range(3) if rng.random() < 0.5} or None)
+        victims = plan_shedding(profs, shed_at, tier_budgets=budgets)
+        names = {p.name for p in victims}
+        live = [p for p in profs if p.name not in names]
+        for cand in victims:
+            if not can_resume(cand, live, resume_at,
+                              tier_budgets=budgets):
+                continue
+            live = live + [cand]
+            # the resumed state must not shed — not this job, not any
+            assert plan_shedding(live, shed_at,
+                                 tier_budgets=budgets) == []
+            total = sum(profile_utilization(p) for p in live)
+            assert total <= resume_at + 1e-9
+
+
+def test_freshly_shed_global_victim_cannot_immediately_resume():
+    """The last rung of the global ladder is always blocked from an
+    immediate resume: its removal is what brought the device under
+    ``shed_at``, so re-adding it lands above ``resume_at``."""
+    for seed in range(30):
+        rng = random.Random(300 + seed)
+        profs = _random_profs(rng, rng.randrange(2, 12))
+        shed_at = rng.uniform(0.3, 1.0)
+        victims = plan_shedding(profs, shed_at)
+        total = sum(profile_utilization(p) for p in profs)
+        if not victims or total <= shed_at:
+            continue
+        names = {p.name for p in victims}
+        live = [p for p in profs if p.name not in names]
+        last = victims[-1]
+        for resume_at in (0.9 * shed_at, 0.99 * shed_at):
+            assert not can_resume(last, live, resume_at)
+
+
+@pytest.mark.skipif(not HAVE_HYPOTHESIS, reason="hypothesis extra")
+@settings(max_examples=80, deadline=None)
+@given(st.data())
+def test_resume_never_retriggers_shed_property(data):
+    n = data.draw(st.integers(2, 12))
+    profs = [
+        _prof(f"p{i}", data.draw(st.floats(0.02, 0.5)),
+              tier=data.draw(st.integers(0, 2)),
+              best_effort=data.draw(st.booleans()))
+        for i in range(n)
+    ]
+    shed_at = data.draw(st.floats(0.2, 1.4))
+    resume_at = shed_at * data.draw(st.floats(0.3, 0.97))
+    victims = plan_shedding(profs, shed_at)
+    names = {p.name for p in victims}
+    live = [p for p in profs if p.name not in names]
+    for cand in victims:
+        if can_resume(cand, live, resume_at):
+            live = live + [cand]
+            assert plan_shedding(live, shed_at) == []

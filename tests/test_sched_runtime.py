@@ -25,7 +25,7 @@ def busy_program(duration_s):
 def test_notify_mode_priority_preemption():
     """A high-priority job's device segment overtakes a best-effort job's
     remaining programs (preemption at program boundaries, Alg. 2)."""
-    ex = DeviceExecutor(mode="notify", wait_mode="suspend")
+    ex = DeviceExecutor(policy="ioctl", wait_mode="suspend")
     order = []
 
     def be_body(job, it):
@@ -58,7 +58,7 @@ def test_notify_mode_priority_preemption():
 
 
 def test_notify_mode_two_rt_jobs_priority_order():
-    ex = DeviceExecutor(mode="notify", wait_mode="suspend")
+    ex = DeviceExecutor(policy="ioctl", wait_mode="suspend")
     done = []
 
     def body(tag, n):
@@ -83,7 +83,7 @@ def test_notify_mode_two_rt_jobs_priority_order():
 def test_poll_mode_job_granular_reservation():
     """Kernel-thread mode: reservation holds for the whole job; the
     lower-priority job makes no device progress while the high job runs."""
-    ex = DeviceExecutor(mode="poll", poll_interval=0.002)
+    ex = DeviceExecutor(policy="kthread", poll_interval=0.002)
     stamps = {"lo": [], "hi": []}
 
     def lo_body(job, it):
@@ -113,7 +113,7 @@ def test_poll_mode_job_granular_reservation():
 
 
 def test_epsilon_measured():
-    ex = DeviceExecutor(mode="notify")
+    ex = DeviceExecutor(policy="ioctl")
     j = RTJob("x", lambda job, it: None, period_s=1.0, priority=5)
     with ex._mutex:
         ex._ioctl_add(j)
@@ -201,7 +201,7 @@ print("ELASTIC_OK")
 # ---------------------------------------------------------------------------
 
 def test_admission_controller_accepts_then_rejects():
-    ac = AdmissionController(mode="notify", wait_mode="suspend",
+    ac = AdmissionController(policy="ioctl", wait_mode="suspend",
                              n_cpus=2, epsilon_ms=0.5)
     light = JobProfile("infer", host_segments_ms=[1, 1],
                        device_segments_ms=[(0.5, 5.0)], period_ms=50,
@@ -221,7 +221,7 @@ def test_admission_controller_accepts_then_rejects():
 
 
 def test_admission_controller_multi_device_busy_and_bad_device():
-    ac = AdmissionController(mode="ioctl", wait_mode="busy",
+    ac = AdmissionController(policy="ioctl", wait_mode="busy",
                              n_cpus=2, epsilon_ms=0.5, n_devices=2)
     a = JobProfile("a", host_segments_ms=[1.0],
                    device_segments_ms=[(0.5, 4.0)], period_ms=50,

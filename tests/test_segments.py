@@ -126,7 +126,7 @@ def test_segmented_workload_profile_and_bind():
     assert prof.max_slice_ms >= 2.0 * 0.9
 
     # bind() dispatches the device segment through the executor
-    ex = DeviceExecutor(mode="notify", wait_mode="suspend")
+    ex = DeviceExecutor(policy="ioctl", wait_mode="suspend")
     calls.clear()
     job = RTJob("w", wl.bind(ex), period_s=10.0, priority=5)
     job.start(ex)
@@ -145,7 +145,7 @@ def test_preemption_latency_bounded_by_one_slice():
     high-priority release mid-op must reach the device within one slice
     + ε + scheduling margin — not after the whole op."""
     slice_s = 0.08
-    ex = DeviceExecutor(mode="notify", wait_mode="suspend")
+    ex = DeviceExecutor(policy="ioctl", wait_mode="suspend")
     t_first = []
 
     def be_body(job, it):
@@ -183,7 +183,7 @@ def test_preemption_latency_bounded_by_one_slice():
 
 
 def test_run_sliced_checkpoint_and_resume():
-    ex = DeviceExecutor(mode="notify", wait_mode="suspend")
+    ex = DeviceExecutor(policy="ioctl", wait_mode="suspend")
     job = RTJob("j", lambda job, it: None, period_s=1.0, priority=5)
     snaps = {}
 
@@ -229,14 +229,14 @@ def test_measured_profile_flows_into_admission():
     assert prof.eta_g == 1 and prof.device[0].n_slices == 2
     assert prof.device[0].exec_ms > 0
 
-    ac = AdmissionController(mode="notify", wait_mode="suspend", n_cpus=1,
+    ac = AdmissionController(policy="ioctl", wait_mode="suspend", n_cpus=1,
                              epsilon_ms=max(prof.epsilon_ms(0.1), 0.1))
     res = ac.try_admit(JobProfile.from_workload(
         prof, period_ms=60_000, priority=10))
     assert res["admitted"], res
     assert res["wcrt"]["attn"] > 0
     # an impossible deadline from the same measured profile is refused
-    ac2 = AdmissionController(mode="notify", wait_mode="suspend", n_cpus=1,
+    ac2 = AdmissionController(policy="ioctl", wait_mode="suspend", n_cpus=1,
                               epsilon_ms=max(prof.epsilon_ms(0.1), 0.1))
     tight = JobProfile.from_workload(prof, period_ms=60_000, priority=10)
     tight.deadline_ms = prof.device[0].exec_ms / 1e3  # way below G^e

@@ -58,7 +58,7 @@ def test_decision_journal_form_strips_live_job():
 
 
 def test_try_admit_reason_codes():
-    ctl = AdmissionController(mode="ioctl", n_devices=1)
+    ctl = AdmissionController(policy="ioctl", n_devices=1)
     assert ctl.try_admit(prof("ok", 1)).reason == "accepted"
     assert (ctl.try_admit(prof("bad-dev", 2, device=5)).reason
             == "validation-refused")
@@ -88,7 +88,7 @@ def test_decisions_match_tolerance_and_inf():
 
 def test_journal_replay_round_trip(tmp_path):
     with JobStore(str(tmp_path)) as st:
-        ctl = AdmissionController(mode="ioctl", n_devices=2)
+        ctl = AdmissionController(policy="ioctl", n_devices=2)
         st.record_config(ctl.export_config(), {"n_devices": 2})
         p = prof("a", 1)
         st.record_decision(p, ctl.try_admit(p), device=0,
@@ -112,7 +112,7 @@ def test_journal_replay_round_trip(tmp_path):
 
 def test_release_removes_job_from_state(tmp_path):
     with JobStore(str(tmp_path)) as st:
-        ctl = AdmissionController(mode="ioctl")
+        ctl = AdmissionController(policy="ioctl")
         p = prof("a", 1)
         st.record_decision(p, ctl.try_admit(p), device=0)
         st.record_release("a")
@@ -121,7 +121,7 @@ def test_release_removes_job_from_state(tmp_path):
 
 def test_torn_final_journal_line_is_skipped(tmp_path):
     st = JobStore(str(tmp_path))
-    ctl = AdmissionController(mode="ioctl")
+    ctl = AdmissionController(policy="ioctl")
     p = prof("a", 1)
     st.record_decision(p, ctl.try_admit(p), device=0)
     st.close()
@@ -143,7 +143,7 @@ def test_unknown_record_kinds_are_skipped(tmp_path):
 
 def test_compaction_preserves_state_and_truncates_journal(tmp_path):
     st = JobStore(str(tmp_path))
-    ctl = AdmissionController(mode="ioctl", n_devices=1)
+    ctl = AdmissionController(policy="ioctl", n_devices=1)
     st.record_config(ctl.export_config(), {"n_devices": 1})
     for name in ("a", "b"):
         p = prof(name, {"a": 1, "b": 2}[name])
@@ -167,7 +167,7 @@ def test_compaction_crash_window_double_apply_is_idempotent(tmp_path):
     between compact()'s two atomic replaces): replay applies every
     journal record on top of a snapshot that already contains it."""
     st = JobStore(str(tmp_path))
-    ctl = AdmissionController(mode="ioctl")
+    ctl = AdmissionController(policy="ioctl")
     p = prof("a", 1)
     st.record_decision(p, ctl.try_admit(p), device=0)
     st.record_carry("a", 0, 2)
@@ -232,7 +232,7 @@ def test_failover_fold_displaced_until_settled(tmp_path):
     decision (re-admission or refusal) settles them — the no-silent-
     job-loss audit the chaos suite replays."""
     st = JobStore(str(tmp_path), sync=False)
-    ctl = AdmissionController(mode="ioctl", n_devices=2)
+    ctl = AdmissionController(policy="ioctl", n_devices=2)
     for p in (prof("a", 1, device=0), prof("b", 2, device=1)):
         st.record_decision(p, ctl.try_admit(p), device=p.device)
     st.record_failover(0, epoch=1, reason="hw")
@@ -273,7 +273,7 @@ def test_failover_fold_displaced_until_settled(tmp_path):
 
 def test_shed_fold_and_resume_decision(tmp_path):
     st = JobStore(str(tmp_path), sync=False)
-    ctl = AdmissionController(mode="ioctl", n_devices=1)
+    ctl = AdmissionController(policy="ioctl", n_devices=1)
     be = prof("be", 0, best_effort=True)
     st.record_decision(be, ctl.try_admit(be), device=0)
     st.record_carry("be", 0, 4)
@@ -290,7 +290,7 @@ def test_shed_fold_and_resume_decision(tmp_path):
 
 def test_request_id_dedup_table_folds(tmp_path):
     st = JobStore(str(tmp_path), sync=False)
-    ctl = AdmissionController(mode="ioctl", n_devices=1)
+    ctl = AdmissionController(policy="ioctl", n_devices=1)
     p = prof("a", 1)
     st.record_decision(p, ctl.try_admit(p), device=0, request_id="r-1")
     st.compact()                     # the table survives compaction
@@ -324,7 +324,7 @@ def test_appends_are_thread_safe(tmp_path):
 
 def _journal_two_jobs(tmp_path):
     st = JobStore(str(tmp_path))
-    ctl = AdmissionController(mode="ioctl", n_devices=2)
+    ctl = AdmissionController(policy="ioctl", n_devices=2)
     st.record_config(ctl.export_config(), {"n_devices": 2})
     for p in (prof("a", 1, device=0), prof("b", 2, device=1),
               prof("be", 0, best_effort=True)):
